@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode on CPU — functional
+validation + relative cost only; real perf is TPU) vs the jnp reference,
+over the model-relevant shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_reference
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_reference
+from repro.kernels.ssm_scan import ssm_scan, ssm_scan_reference
+
+from .common import emit, timed
+
+
+def run() -> dict:
+    out = {}
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    B, S, H, KV, hd = 1, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    ref_fn = jax.jit(lambda q, k, v: flash_attention_reference(q, k, v))
+    o_ref, us_ref = timed(lambda: ref_fn(q, k, v).block_until_ready(), repeats=3)
+    o_pal, us_pal = timed(
+        lambda: flash_attention(q, k, v, interpret=True).block_until_ready(), repeats=1
+    )
+    err = float(jnp.abs(o_pal - ref_fn(q, k, v)).max())
+    emit("flash_attention_512", us_pal, f"ref_us={us_ref:.0f};maxerr={err:.1e}")
+    out["flash"] = (us_pal, us_ref, err)
+
+    B, S, D, N = 2, 256, 128, 16
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, D))) * 0.1
+    x = jax.random.normal(ks[4], (B, S, D))
+    bm = jax.random.normal(ks[5], (B, S, N)) * 0.5
+    cm = jax.random.normal(ks[6], (B, S, N)) * 0.5
+    a = -jnp.exp(jax.random.normal(ks[7], (D, N)) * 0.3)
+    h0 = jnp.zeros((B, D, N))
+    ref_fn = jax.jit(ssm_scan_reference)
+    (y_ref, _), us_ref = timed(lambda: jax.block_until_ready(ref_fn(dt, x, bm, cm, a, h0)),
+                               repeats=3)
+    (y_pal, _), us_pal = timed(
+        lambda: jax.block_until_ready(
+            ssm_scan(dt, x, bm, cm, a, h0, chunk=64, block_d=64, interpret=True)
+        ), repeats=1,
+    )
+    err = float(jnp.abs(y_pal - y_ref).max())
+    emit("ssm_scan_256", us_pal, f"ref_us={us_ref:.0f};maxerr={err:.1e}")
+    out["ssm"] = (us_pal, us_ref, err)
+
+    xr = jax.random.normal(ks[0], (64, 1024), jnp.float32)
+    g = jnp.ones((1024,))
+    ref_fn = jax.jit(rmsnorm_reference)
+    _, us_ref = timed(lambda: ref_fn(xr, g).block_until_ready(), repeats=3)
+    o_pal, us_pal = timed(lambda: rmsnorm(xr, g, interpret=True).block_until_ready(),
+                          repeats=1)
+    err = float(jnp.abs(o_pal - ref_fn(xr, g)).max())
+    emit("rmsnorm_64x1024", us_pal, f"ref_us={us_ref:.0f};maxerr={err:.1e}")
+    out["rmsnorm"] = (us_pal, us_ref, err)
+    return out
+
+
+if __name__ == "__main__":
+    run()

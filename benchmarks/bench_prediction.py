@@ -1,0 +1,99 @@
+"""Paper Fig. 13: prediction accuracy with *learned* models.
+
+(a) WordCount scaling: start at 1 container-pair, scale containers up,
+    compare predicted vs simulated rate (paper: ≤10% error).
+(b) WordCount parallelism variance: shift 8 instances between producers and
+    consumers, predicted curve tracks measured incl. the optimum.
+(c) Mobile-network user-analytics DAG (complex, nonlinear topology).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    Configuration,
+    ContainerDim,
+    fit_workload,
+    round_robin_configuration,
+    solve_flow,
+)
+from repro.streams import (
+    SimParams,
+    measure_capacity,
+    mobile_analytics,
+    training_sweep,
+    wordcount,
+)
+
+from .common import emit, timed
+
+DIM = ContainerDim(cpus=3.0, mem_mb=4096.0)
+
+
+def _learned_models(dag, params, max_rate=260.0):
+    cfg = round_robin_configuration(
+        dag, {n: 1 for n in dag.node_names}, max(2, len(dag.node_names) // 2), DIM
+    )
+    store = training_sweep(cfg, rates_ktps=np.linspace(30, max_rate, 6),
+                           params=params, seconds_per_rate=8.0)
+    return fit_workload(store)
+
+
+def run() -> dict:
+    params = SimParams()
+    results = {}
+
+    # (a) scaling sweep
+    dag = wordcount()
+    models = _learned_models(dag, params)
+    errs = []
+    us_acc = 0.0
+    for k in (1, 2, 3, 4):
+        packing = tuple([("W", "C")] * k)
+        cfg = Configuration(dag, packing=packing, dims=(DIM,) * k)
+        sim = measure_capacity(cfg, params, duration_s=12.0)
+        sol, us = timed(solve_flow, cfg, models, repeats=1, warmup=0)
+        us_acc += us
+        err = abs(sol.rate_ktps - sim) / sim * 100
+        errs.append(err)
+        print(f"# scaling k={k}: sim {sim:7.1f}  pred {sol.rate_ktps:7.1f}  err {err:4.1f}%")
+    emit("fig13a_scaling_err", us_acc / 4, f"max_err={max(errs):.1f}%_(paper:<=10%)")
+    results["scaling_errs"] = errs
+
+    # (b) parallelism variance: 8 instances split W/C over 4 containers
+    errs_b = []
+    curve = []
+    for nw in (1, 2, 3, 4, 5, 6, 7):
+        nc = 8 - nw
+        par = {"W": nw, "C": nc}
+        cfg = round_robin_configuration(dag, par, 4, DIM)
+        sim = measure_capacity(cfg, params, duration_s=12.0)
+        pred = solve_flow(cfg, models).rate_ktps
+        curve.append((nw, sim, pred))
+        if sim > 1:
+            errs_b.append(abs(pred - sim) / sim * 100)
+        print(f"# variance W={nw} C={nc}: sim {sim:7.1f}  pred {pred:7.1f}")
+    sim_opt = max(curve, key=lambda r: r[1])[0]
+    pred_opt = max(curve, key=lambda r: r[2])[0]
+    emit("fig13b_parallelism_err", 0.0,
+         f"mean_err={np.mean(errs_b):.1f}%;opt_sim=W{sim_opt};opt_pred=W{pred_opt}")
+    results["variance"] = curve
+
+    # (c) mobile analytics
+    dagm = mobile_analytics()
+    models_m = _learned_models(dagm, params, max_rate=200.0)
+    errs_c = []
+    for p, c in [(1, 4), (2, 8), (3, 12)]:
+        cfg = round_robin_configuration(dagm, {n: p for n in dagm.node_names}, c, DIM)
+        sim = measure_capacity(cfg, params, duration_s=12.0)
+        pred = solve_flow(cfg, models_m).rate_ktps
+        if sim > 1:
+            errs_c.append(abs(pred - sim) / sim * 100)
+        print(f"# mobile P={p} C={c}: sim {sim:7.1f}  pred {pred:7.1f}")
+    emit("fig13c_mobile_err", 0.0, f"mean_err={np.mean(errs_c):.1f}%_(paper:~10%)")
+    results["mobile_errs"] = errs_c
+    return results
+
+
+if __name__ == "__main__":
+    run()

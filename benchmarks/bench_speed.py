@@ -1,0 +1,58 @@
+"""Paper §4/§5 speed claims: model prediction in 10-100 ms, allocation in
+<1 s (0.78 s avg for AdAnalytics); plus our LP-solver micro-benchmarks
+(numpy simplex vs batched JAX simplex — the TPU-idiomatic 'score thousands
+of configurations at once' path)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ContainerDim, allocate, oracle_models, round_robin_configuration, solve_flow
+from repro.core.lp import jax_linprog, linprog
+from repro.streams import SimParams, adanalytics, mobile_analytics, wordcount
+
+from .common import emit, timed
+
+DIM = ContainerDim(cpus=3.0, mem_mb=4096.0)
+
+
+def run() -> dict:
+    params = SimParams()
+    out = {}
+    # prediction latency per workload (paper: 10-100 ms)
+    for dag in (wordcount(), adanalytics(), mobile_analytics()):
+        models = oracle_models(dag, params.sm_cost_per_ktuple)
+        cfg = round_robin_configuration(dag, {n: 2 for n in dag.node_names},
+                                        len(dag.node_names), DIM)
+        _, us = timed(solve_flow, cfg, models, repeats=5)
+        emit(f"predict_{dag.name}", us, f"ms={us/1e3:.1f}_(paper:10-100ms)")
+        out[f"predict_{dag.name}"] = us
+
+        _, us_a = timed(allocate, dag, models, 800.0, repeats=5)
+        emit(f"allocate_{dag.name}", us_a, f"s={us_a/1e6:.4f}_(paper:<1s)")
+        out[f"allocate_{dag.name}"] = us_a
+
+    # LP micro-bench: numpy vs batched JAX
+    rng = np.random.default_rng(0)
+    n, m = 24, 16
+    c = rng.normal(size=n)
+    A = np.abs(rng.normal(size=(m, n))) + 0.05
+    b = rng.uniform(1, 4, size=m)
+    _, us_np = timed(linprog, c, A, b, repeats=5)
+    emit("lp_numpy_24var", us_np, "single")
+
+    import jax
+
+    A_eq = np.zeros((0, n))
+    b_eq = np.zeros((0,))
+    batched = jax.jit(jax.vmap(lambda bb: jax_linprog(c, A, bb, A_eq, b_eq)[1]))
+    bs = np.tile(b, (256, 1)) * rng.uniform(0.8, 1.2, size=(256, 1))
+    _ = batched(bs)  # compile
+    _, us_jax = timed(lambda: np.asarray(batched(bs)), repeats=3)
+    emit("lp_jax_batched256", us_jax,
+         f"per_lp_us={us_jax/256:.1f};speedup_vs_numpy={us_np/(us_jax/256):.1f}x")
+    out["lp"] = (us_np, us_jax)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper Table 2: WordCount performance under different configurations —
+simulated ground truth, Trevor's predicted rate, and the bound column."""
+from __future__ import annotations
+
+from repro.core import Configuration, ContainerDim, classify_bound, oracle_models, solve_flow
+from repro.streams import SimParams, measure_capacity, wordcount
+
+from .common import emit, timed
+
+PAPER = {  # id: (packing, paper ktps, paper bound)
+    1: ((("W",), ("C",)), 658, "~Rc"),
+    2: ((("W", "C"), ("W", "C")), 965, "comm"),
+    3: ((("W", "W"), ("C", "C")), 648, "comm"),
+    5: ((("W",), ("C",), ("C",)), 899, "~Rw"),
+    6: ((("W",), ("W",), ("C",), ("C",)), 1319, "2xRc"),
+    7: ((("W",), ("W",), ("C",), ("C",), ("C",)), 1779, "2xRw"),
+    8: ((("W",), ("W",), ("C",), ("C",), ("C",), ("C",)), 1847, "2xRw"),
+    9: ((("W",), ("W",), ("C",), ("C",), ("C",), ("C",), ("C",)), 1582, "drop"),
+}
+
+
+def run() -> dict:
+    dag = wordcount()
+    params = SimParams()
+    models = oracle_models(dag, params.sm_cost_per_ktuple)
+    dim = ContainerDim(cpus=3.0, mem_mb=4096.0)
+    rows = []
+    errs = []
+    print("# id, sim_ktps, pred_ktps, err%, bound, paper_ktps")
+    for cid, (packing, paper_rate, paper_bound) in PAPER.items():
+        cfg = Configuration(dag, packing=packing, dims=(dim,) * len(packing))
+        sim = measure_capacity(cfg, params, duration_s=15.0)
+        sol, us = timed(solve_flow, cfg, models, repeats=3)
+        err = abs(sol.rate_ktps - sim) / max(sim, 1) * 100
+        errs.append(err)
+        bound = classify_bound(sol)
+        rows.append((cid, sim, sol.rate_ktps, err, bound, paper_rate))
+        print(f"# ID={cid}: sim {sim:7.1f}  pred {sol.rate_ktps:7.1f}  "
+              f"err {err:4.1f}%  bound={bound:12s} paper={paper_rate} ({paper_bound})")
+        emit(f"table2_id{cid}_predict", us, f"pred={sol.rate_ktps:.0f}ktps;err={err:.1f}%")
+    mean_err = sum(errs) / len(errs)
+    emit("table2_mean_prediction_error", 0.0, f"{mean_err:.1f}%_(paper:<10%)")
+    return {"rows": rows, "mean_err": mean_err}
+
+
+if __name__ == "__main__":
+    run()

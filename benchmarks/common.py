@@ -1,0 +1,18 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure (+ system extras).
+
+Prints ``name,us_per_call,derived`` CSV rows (comment lines start with '#').
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table2 speed
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+BENCHES = [
+    ("table2", "bench_table2", "Paper Table 2 — WordCount sensitivity + prediction"),
+    ("fig4", "bench_fig4", "Paper Fig. 4 — AdAnalytics heatmap / efficiency gap"),
+    ("models", "bench_models", "Paper Fig. 8 + Table 4 — node-model fits"),
+    ("prediction", "bench_prediction", "Paper Fig. 13 — learned-model accuracy"),
+    ("allocator", "bench_allocator", "Paper Fig. 14 — allocator efficiency"),
+    ("reactive", "bench_reactive", "Paper §2.3/§6 — Dhalion baseline vs one-shot"),
+    ("speed", "bench_speed", "Paper §4/§5 — predict/allocate latency + LP bench"),
+    ("kernels", "bench_kernels", "Pallas kernels vs jnp oracles"),
+]
+
+
+def main() -> None:
+    selected = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    for key, module, desc in BENCHES:
+        if selected and key not in selected:
+            continue
+        print(f"# === {desc} ===")
+        mod = __import__(f"benchmarks.{module}", fromlist=["run"])
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001 — keep the harness going
+            print(f"{key}_FAILED,0,{type(e).__name__}:{e}")
+            raise
+    print(f"# total wall time: {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

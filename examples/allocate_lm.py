@@ -1,0 +1,46 @@
+"""Trevor-for-LM from real dry-run artifacts: read the roofline JSON
+(produced by ``launch/roofline.py``), build per-cell workload models, and
+answer capacity questions in closed form.
+
+Run:  PYTHONPATH=src python examples/allocate_lm.py [--roofline results/roofline_baseline.json]
+"""
+import argparse
+import json
+import os
+import types
+
+from repro.core.lm_bridge import LMWorkloadModel, allocate_chips
+from repro.configs import SHAPES
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--roofline", default="results/roofline_baseline.json")
+    ap.add_argument("--target-tokens-per-s", type=float, default=2e6)
+    args = ap.parse_args()
+
+    if not os.path.exists(args.roofline):
+        print(f"{args.roofline} not found — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun` "
+              "then `python -m repro.launch.roofline` first.")
+        return
+
+    rows = json.load(open(args.roofline))
+    print(f"{len(rows)} roofline cells loaded\n")
+    print(f"{'cell':44s} {'bottleneck':11s} {'chips@'+format(args.target_tokens_per_s,'.0e'):>12s} "
+          f"{'step_ms':>9s}")
+    for r in rows:
+        if SHAPES[r["shape"]].kind != "train":
+            continue
+        row = types.SimpleNamespace(**r)
+        wl = LMWorkloadModel.from_roofline(row)
+        tokens = SHAPES[r["shape"]].tokens
+        alloc = allocate_chips(wl, args.target_tokens_per_s, tokens_per_step=tokens)
+        print(f"{r['arch'] + ' × ' + r['shape']:44s} {r['bottleneck']:11s} "
+              f"{alloc.chips:12d} {alloc.predicted_step_s*1e3:9.1f}")
+    print("\n(chips rounded to TPU slice granularity; the paper's workflow —"
+          " declare a rate, get a configuration — applied to pod capacity.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Auto-scaling under a diurnal load with a World-Cup spike (§2.3).
+
+Compares three operating modes over the same 2-day load trace:
+  * static peak provisioning (the paper's status quo),
+  * Trevor auto-scaling (model-based, one-shot per change),
+  * a Dhalion-style reactive scaler (for convergence-lag comparison).
+
+Prints provisioned CPU-hours and SLA violations for each.
+
+Run:  PYTHONPATH=src python examples/autoscale_stream.py
+"""
+import numpy as np
+
+from repro.core import AutoScaler, ContainerDim, allocate, oracle_models, solve_flow
+from repro.streams import SimParams, adanalytics, sources
+
+DIM = ContainerDim(cpus=3.0, mem_mb=4096.0)
+
+
+def main() -> None:
+    dag = adanalytics()
+    params = SimParams()
+    models = oracle_models(dag, params.sm_cost_per_ktuple)
+
+    # 2 days at 5-min resolution, diurnal 3x + a 25x spike on day 2
+    n = 2 * 288
+    trace = sources.diurnal(n, base_ktps=150.0, peak_ratio=3.0, seed=1)
+    trace = np.maximum(trace, sources.spike(n, base_ktps=150.0, spike_ratio=12.0,
+                                            spike_start=288 + 144, spike_len=8, seed=2))
+
+    # --- static peak provisioning (with the paper's typical headroom) ---
+    peak = float(trace.max()) * 1.3
+    static = allocate(dag, models, peak)
+    static_cpu_hours = static.total_cpus * n * 5 / 60
+
+    # --- Trevor auto-scaler ---
+    scaler = AutoScaler(dag, models, headroom=1.25, deadband=0.15)
+    cpu_hours = 0.0
+    violations = 0
+    for load in trace:
+        scaler.observe_load(float(load))
+        cap = solve_flow(scaler.current.config, models).rate_ktps
+        if cap < load:
+            violations += 1
+        cpu_hours += scaler.current.total_cpus * 5 / 60
+
+    # --- reactive lag model: capacity follows load with a 30-min lag ---
+    reactive_cpu_hours = 0.0
+    reactive_violations = 0
+    lag = 6  # 6 x 5min = 30 min convergence (optimistic for Dhalion, §2.3)
+    for i, load in enumerate(trace):
+        seen = trace[max(0, i - lag)]
+        cfg = allocate(dag, models, float(seen) * 1.25)
+        cap = solve_flow(cfg.config, models).rate_ktps
+        if cap < load:
+            reactive_violations += 1
+        reactive_cpu_hours += cfg.total_cpus * 5 / 60
+
+    print(f"load: mean {trace.mean():.0f} ktps, peak {trace.max():.0f} ktps")
+    print(f"{'mode':24s} {'CPU-hours':>10s} {'SLA misses':>11s} {'reconfigs':>10s}")
+    print(f"{'static-peak':24s} {static_cpu_hours:10.0f} {0:11d} {1:10d}")
+    print(f"{'trevor-autoscale':24s} {cpu_hours:10.0f} {violations:11d} "
+          f"{scaler.reconfigurations:10d}")
+    print(f"{'reactive (30min lag)':24s} {reactive_cpu_hours:10.0f} "
+          f"{reactive_violations:11d} {'n/a':>10s}")
+    save = (1 - cpu_hours / static_cpu_hours) * 100
+    print(f"\nTrevor saves {save:.0f}% of CPU-hours vs static peak provisioning "
+          f"(paper: 2-3x over-provisioning is typical), with "
+          f"{violations} SLA misses vs {reactive_violations} for the laggy reactive loop.")
+    print(f"mean allocation latency: {scaler.mean_alloc_seconds()*1e3:.1f} ms "
+          f"(paper: <1 s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Quickstart: the full Trevor workflow on WordCount in one minute.
+
+1. deploy a test configuration on the (simulated) cluster,
+2. sweep a throttled producer to collect runtime metrics (§5.1),
+3. fit per-node models — CPU~rate, capacity, γ — incl. the stream manager,
+4. predict the rate of unseen configurations (fig. 13),
+5. declare a target rate -> one-shot allocation (fig. 2b),
+6. verify the allocation on the cluster.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    STREAM_MANAGER,
+    Configuration,
+    ContainerDim,
+    allocate,
+    fit_workload,
+    round_robin_configuration,
+    solve_flow,
+)
+from repro.streams import SimParams, measure_capacity, training_sweep, wordcount
+
+DIM = ContainerDim(cpus=3.0, mem_mb=4096.0)
+
+
+def main() -> None:
+    dag = wordcount()
+    params = SimParams()
+
+    print("== 1-2. profile a test deployment over a range of rates ==")
+    test_cfg = round_robin_configuration(dag, {"W": 1, "C": 1}, 2, DIM)
+    store = training_sweep(test_cfg, rates_ktps=np.linspace(50, 300, 6),
+                           params=params, seconds_per_rate=8.0)
+    print(f"collected {len(store)} instance timeseries "
+          f"({len(store.nodes())} logical nodes incl. stream manager)")
+
+    print("\n== 3. fit node models ==")
+    models = fit_workload(store)
+    for name, m in sorted(models.items()):
+        print(f"  {name:22s} peak={m.peak_rate_ktps:7.1f} ktps  "
+              f"γ={m.gamma:4.2f}  cpuR²={m.cpu.r2:.3f}  [{m.resource_class.value}]")
+
+    print("\n== 4. predict unseen configurations ==")
+    for packing in [(("W",), ("C",)), (("W", "C"), ("W", "C")),
+                    (("W",), ("W",), ("C",), ("C",))]:
+        cfg = Configuration(dag, packing=packing, dims=(DIM,) * len(packing))
+        pred = solve_flow(cfg, models).rate_ktps
+        meas = measure_capacity(cfg, params, duration_s=10.0)
+        print(f"  {cfg.describe():55s} pred {pred:7.1f}  measured {meas:7.1f}  "
+              f"err {abs(pred-meas)/meas*100:4.1f}%")
+
+    print("\n== 5. declare a target: 2,000 ktps ==")
+    result = allocate(dag, models, 2000.0, overprovision=1.1)
+    print(f"  allocator -> {result.config.n_containers} containers, "
+          f"{result.total_cpus:.1f} CPUs")
+    for t in result.templates:
+        print(f"    balanced container {t.nodes}: {t.counts} "
+              f"@ {t.rate_ktps:.0f} ktps ×{t.replicas} replicas "
+              f"(SM traversal factor {t.sm_traversal_factor:.2f})")
+
+    print("\n== 6. verify on the cluster ==")
+    achieved = measure_capacity(result.config, params, duration_s=12.0)
+    print(f"  achieved {achieved:.0f} ktps for target 2000 ktps "
+          f"({'OK' if achieved >= 1800 else 'UNDER'})")
+
+
+if __name__ == "__main__":
+    main()

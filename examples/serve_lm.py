@@ -1,0 +1,62 @@
+"""Serving example: batched continuous decoding + Trevor-driven elastic
+capacity planning.
+
+A reduced model serves real batched requests on CPU while the elastic
+controller (Trevor's allocator over dry-run cost models) plans TPU chip
+counts for the observed token load — the declarative workflow of fig. 2b
+applied to inference capacity.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+
+from repro.core.lm_bridge import LMWorkloadModel, StageCost, allocate_chips
+from repro.launch.serve import BatchedServer, Request
+from repro.runtime.elastic import ElasticController
+from repro.streams import sources
+
+
+def main() -> None:
+    # -- 1. real serving on CPU (reduced model) ------------------------------
+    server = BatchedServer("stablelm-1.6b@smoke", batch_slots=4, max_ctx=96)
+    rng = np.random.default_rng(0)
+    for rid in range(10):
+        prompt = rng.integers(4, 250, size=int(rng.integers(8, 24))).astype(np.int32)
+        server.submit(Request(rid, prompt, max_new_tokens=12))
+    server.drain()
+    lat = [r.finished_s for r in server.completed]
+    ftl = [r.first_token_s for r in server.completed]
+    toks = sum(len(r.tokens_out) for r in server.completed)
+    print(f"served {len(server.completed)} requests / {toks} tokens; "
+          f"median first-token {np.median(ftl)*1e3:.0f} ms, "
+          f"median completion {np.median(lat)*1e3:.0f} ms")
+
+    # -- 2. capacity planning for the production model ----------------------
+    # per-token costs for llama3-8b decode_32k from the dry-run roofline
+    # (see EXPERIMENTS.md §Roofline; regenerate with launch/roofline.py)
+    stage = StageCost("decode_step",
+                      flops_per_token=2 * 8.0e9,        # 2*N per token
+                      hbm_bytes_per_token=8.0e9 * 2 / 128,  # params/batch amortized
+                      coll_bytes_per_token=2.5e6)
+    wl = LMWorkloadModel(arch="llama3-8b", shape="decode_32k",
+                         stages=[stage], chips_measured=256)
+
+    print("\ndeclarative allocation: tokens/s -> chips (llama3-8b decode)")
+    for target in (1e4, 1e5, 1e6):
+        alloc = allocate_chips(wl, target, tokens_per_step=128)
+        print(f"  target {target:9.0f} tok/s -> {alloc.chips:5d} chips "
+              f"(predicted {alloc.predicted_tokens_per_s:9.0f} tok/s, "
+              f"bottleneck: {alloc.bottleneck})")
+
+    # -- 3. elastic control over a spiky day --------------------------------
+    ctl = ElasticController(wl, tokens_per_step=128, min_chips=8, max_chips=2048)
+    trace = sources.spike(96, base_ktps=30.0, spike_ratio=15.0, seed=3) * 1e3
+    for load in trace:
+        ctl.observe(float(load))
+    print(f"\nelastic controller: {len(ctl.events)} re-mesh events over the day")
+    for ev in ctl.events[:6]:
+        print(f"  {ev.chips_before:5d} -> {ev.chips_after:5d} chips  ({ev.reason})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: a JAX reproduction + extension of Trevor (auto-configuration and
+auto-scaling of stream processing pipelines) with a multi-pod TPU LM framework
+that applies the same model-based allocation idea to training/serving."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,40 @@
+"""Trevor core: learned performance models, LP data-flow solver, and the
+balanced-container allocator (the paper's primary contribution)."""
+
+from .dag import (
+    Configuration,
+    ContainerDim,
+    DagSpec,
+    EdgeSpec,
+    Grouping,
+    NodeSpec,
+    propagate_rates,
+    round_robin_configuration,
+    single_container_configuration,
+)
+from .metrics import STREAM_MANAGER, InstanceSamples, MetricsStore
+from .node_model import (
+    LinearFit,
+    NodeModel,
+    ResourceClass,
+    fit_node,
+    fit_workload,
+    linear_fit,
+    oracle_models,
+)
+from .flow_solver import FlowSolution, build_flow_problem, classify_bound, solve_flow
+from .allocator import AllocationResult, BalancedContainer, allocate
+from .calibration import Calibrator
+from .autoscaler import AutoScaler, run_against_trace
+from .reactive import ReactiveResult, reactive_scale
+
+__all__ = [
+    "AllocationResult", "AutoScaler", "BalancedContainer", "Calibrator",
+    "Configuration", "ContainerDim", "DagSpec", "EdgeSpec", "FlowSolution",
+    "Grouping", "InstanceSamples", "LinearFit", "MetricsStore", "NodeModel",
+    "NodeSpec", "ReactiveResult", "ResourceClass", "STREAM_MANAGER",
+    "allocate", "build_flow_problem", "classify_bound", "fit_node",
+    "fit_workload", "linear_fit", "oracle_models", "propagate_rates",
+    "reactive_scale", "round_robin_configuration", "run_against_trace",
+    "single_container_configuration", "solve_flow",
+]

@@ -1,0 +1,238 @@
+"""Model-based edge allocator (Trevor §3.2, fig. 10).
+
+Given per-node learned models and a declared target source rate, produce an
+efficient physical configuration in closed form — no search over the
+configuration space:
+
+1. Propagate the target rate through the DAG with learned γ's to get the
+   required input rate of every node.
+2. Group nodes by *alternate edges* in topological order, pairing each node
+   with its heaviest unassigned downstream neighbor (compute-cost weighted) —
+   co-locating communicating nodes for data locality.
+3. For each group, compose a **balanced container**: instance counts such
+   that every node operates at capacity AND the stream manager is
+   rate-matched at one full CPU under the worst-case traversal factor — in
+   the limit of many containers essentially all pair traffic crosses
+   containers, so an edge (u→v) container ingesting ρ sees SM traversals
+   ``ρ·(1 + 2γᵤ + γᵤγᵥ)`` (= 4ρ when γ=1: the paper's "S will need to pass a
+   rate 4R in the limit").
+4. Optionally scale each balanced container by α ≤ 1 to a preferred
+   container dimension.
+5. Replicate each (α-scaled) container to the count required for the target
+   rate on its edge.
+
+Complexity: O(|V| + |E|).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+from .dag import Configuration, ContainerDim, DagSpec, propagate_rates
+from .metrics import STREAM_MANAGER
+from .node_model import NodeModel
+
+
+@dataclasses.dataclass
+class BalancedContainer:
+    """One balanced-container template before replication."""
+
+    nodes: tuple[str, ...]               # 1 (singleton) or 2 (edge) node names
+    counts: dict[str, int]               # instances of each node per container
+    rate_ktps: float                     # input rate (of nodes[0]) one container absorbs
+    dim: ContainerDim
+    sm_traversal_factor: float           # worst-case SM traversals per unit input rate
+    replicas: int = 1
+
+
+@dataclasses.dataclass
+class AllocationResult:
+    config: Configuration
+    templates: list[BalancedContainer]
+    target_rate_ktps: float
+    predicted_node_rates: dict[str, float]
+    total_cpus: float
+    total_mem_mb: float
+
+
+def _traversal_factor(
+    gammas: Sequence[float],
+    u_is_source: bool = False,
+    v_has_consumers: bool = True,
+) -> float:
+    """Worst-case SM traversals per unit container-input-rate for a group.
+
+    For an interior pair (u, v): ingress ρ + u's output origination γᵤρ +
+    v's share arriving from the network γᵤρ + v's output origination γᵤγᵥρ
+    → 1 + 2γᵤ + γᵤγᵥ (the paper's 4R limit at γ = 1).  Two refinements keep
+    the bound tight where the generic one over-provisions ~2×:
+    * a *source* u ingests from the spout directly, not through the SM
+      (drop the ingress term),
+    * a terminal v (no downstream consumers) emits nothing (drop γᵤγᵥ).
+    For a singleton (u,): ingress + origination.
+    """
+    if len(gammas) == 1:
+        base = 0.0 if u_is_source else 1.0
+        return max(base + gammas[0], 0.25)
+    gu, gv = gammas
+    phi = (0.0 if u_is_source else 1.0) + 2.0 * gu
+    if v_has_consumers:
+        phi += gu * gv
+    return max(phi, 0.25)
+
+
+def _pair_nodes(
+    dag: DagSpec, models: Mapping[str, NodeModel], rates: Mapping[str, float]
+) -> list[tuple[str, ...]]:
+    """Group nodes by alternate edges in topological order (fig. 10): each
+    unassigned node pairs with its heaviest (compute cost at required rate)
+    unassigned downstream neighbor; leftovers become singletons."""
+    assigned: set[str] = set()
+    groups: list[tuple[str, ...]] = []
+    for u in dag.topological_order():
+        if u in assigned:
+            continue
+        best, best_w = None, -1.0
+        for e in dag.out_edges(u):
+            v = e.dst
+            if v in assigned:
+                continue
+            w = models[v].busy_cost_per_ktps * rates[v]
+            if w > best_w:
+                best, best_w = v, w
+        if best is not None:
+            groups.append((u, best))
+            assigned.update((u, best))
+        else:
+            groups.append((u,))
+            assigned.add(u)
+    return groups
+
+
+def compose_balanced_container(
+    group: tuple[str, ...],
+    models: Mapping[str, NodeModel],
+    group_rates: Mapping[str, float],
+    max_instances_per_node: int = 64,
+    mem_headroom: float = 1.1,
+    dag: DagSpec | None = None,
+) -> BalancedContainer:
+    """Rate-match the group's nodes to a stream manager at one full CPU."""
+    sm = models[STREAM_MANAGER]
+    gammas = [models[n].gamma for n in group]
+    u_is_source = False
+    v_has_consumers = True
+    if dag is not None:
+        u_is_source = group[0] in {s.name for s in dag.sources()}
+        v_has_consumers = bool(dag.out_edges(group[-1]))
+    phi = _traversal_factor(gammas, u_is_source, v_has_consumers)
+    # SM at one full CPU processes its peak rate; the container's input rate
+    # is bounded by R_sm / phi (rate-matching point, §3.2).
+    rho = sm.peak_rate_ktps / phi
+
+    # Relative input rate of each node in the group (second node of a pair
+    # sees gamma_u * rho).
+    rel = {group[0]: 1.0}
+    if len(group) == 2:
+        rel[group[1]] = gammas[0]
+
+    counts: dict[str, int] = {}
+    for nm in group:
+        need = rho * rel[nm] / models[nm].peak_rate_ktps
+        counts[nm] = max(1, min(max_instances_per_node, math.ceil(need - 1e-9)))
+    # If ceil() left headroom on every node, rho is still SM-limited: keep it.
+    cpus = sum(
+        counts[nm] * models[nm].cpu_at(rho * rel[nm] / counts[nm]) for nm in group
+    )
+    cpus += 1.0  # the rate-matched stream manager at one full CPU
+    mem = sum(
+        counts[nm] * models[nm].mem_at(rho * rel[nm] / counts[nm]) for nm in group
+    )
+    mem = (mem + sm.mem_base_mb) * mem_headroom
+    return BalancedContainer(
+        nodes=group,
+        counts=counts,
+        rate_ktps=rho,
+        dim=ContainerDim(cpus=max(cpus, 0.5), mem_mb=max(mem, 256.0)),
+        sm_traversal_factor=phi,
+    )
+
+
+def _alpha_scale(bc: BalancedContainer, preferred: ContainerDim) -> BalancedContainer:
+    """Scale a balanced container by α ≤ 1 to a preferred dimension (§3.2)."""
+    alpha = min(1.0, preferred.cpus / bc.dim.cpus, preferred.mem_mb / bc.dim.mem_mb)
+    if alpha >= 1.0:
+        return bc
+    counts = {n: max(1, math.ceil(c * alpha)) for n, c in bc.counts.items()}
+    rate = bc.rate_ktps * alpha
+    return BalancedContainer(
+        nodes=bc.nodes,
+        counts=counts,
+        rate_ktps=rate,
+        dim=ContainerDim(
+            cpus=min(preferred.cpus, bc.dim.cpus),
+            mem_mb=min(preferred.mem_mb, bc.dim.mem_mb),
+            link_mbps=preferred.link_mbps,
+        ),
+        sm_traversal_factor=bc.sm_traversal_factor,
+    )
+
+
+def allocate(
+    dag: DagSpec,
+    models: Mapping[str, NodeModel],
+    target_rate_ktps: float,
+    preferred_dim: ContainerDim | None = None,
+    candidate_dims: Sequence[ContainerDim] | None = None,
+    overprovision: float = 1.0,
+) -> AllocationResult:
+    """The Trevor allocator: declared target rate -> physical configuration.
+
+    ``overprovision`` is the calibration factor from §4 (e.g. 1.09 when the
+    flow solver over-predicts by 9%); ``candidate_dims`` optionally searches a
+    small set of preferred container dimensions (the paper's policy knob).
+    """
+    if target_rate_ktps <= 0:
+        raise ValueError("target rate must be positive")
+    if candidate_dims:
+        best: AllocationResult | None = None
+        for dim in candidate_dims:
+            res = allocate(dag, models, target_rate_ktps, preferred_dim=dim,
+                           overprovision=overprovision)
+            if best is None or res.total_cpus < best.total_cpus:
+                best = res
+        assert best is not None
+        return best
+
+    rate = target_rate_ktps * overprovision
+    gammas = {n: models[n].gamma for n in dag.node_names}
+    node_rates = propagate_rates(dag, rate, gammas)
+
+    groups = _pair_nodes(dag, models, node_rates)
+    templates: list[BalancedContainer] = []
+    packing: list[tuple[str, ...]] = []
+    dims: list[ContainerDim] = []
+    for group in groups:
+        bc = compose_balanced_container(group, models, node_rates, dag=dag)
+        if preferred_dim is not None:
+            bc = _alpha_scale(bc, preferred_dim)
+        required = node_rates[group[0]]
+        bc.replicas = max(1, math.ceil(required / max(bc.rate_ktps, 1e-9) - 1e-9))
+        templates.append(bc)
+        pack: list[str] = []
+        for nm in group:
+            pack.extend([nm] * bc.counts[nm])
+        for _ in range(bc.replicas):
+            packing.append(tuple(pack))
+            dims.append(bc.dim)
+
+    config = Configuration(dag=dag, packing=tuple(packing), dims=tuple(dims))
+    return AllocationResult(
+        config=config,
+        templates=templates,
+        target_rate_ktps=target_rate_ktps,
+        predicted_node_rates=node_rates,
+        total_cpus=config.total_cpus(),
+        total_mem_mb=config.total_mem_mb(),
+    )

@@ -1,0 +1,144 @@
+"""Declarative auto-scaling agent (Trevor fig. 2b, §3).
+
+The operator declares a target tuple-rate (or the agent derives one from
+observed load); the agent calls the allocator for a fresh configuration in a
+single shot — no reactive iteration.  The agent also owns the online loop:
+pool metrics, recalibrate the over-provisioning factor, retrain on drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping
+
+from .allocator import AllocationResult, allocate
+from .calibration import Calibrator
+from .dag import Configuration, ContainerDim, DagSpec
+from .metrics import MetricsStore
+from .node_model import NodeModel, fit_workload
+
+
+@dataclasses.dataclass
+class ScalingEvent:
+    t: float
+    load_ktps: float
+    target_ktps: float
+    n_containers: int
+    total_cpus: float
+    reason: str
+    alloc_seconds: float
+
+
+class AutoScaler:
+    """Model-based auto-scaler.
+
+    Parameters
+    ----------
+    headroom: multiplicative spare capacity on top of the observed load
+        (absorbs spikes between scaling decisions).
+    deadband: relative load change that triggers reallocation; within the
+        deadband the current configuration is kept (avoids flapping).
+    """
+
+    def __init__(
+        self,
+        dag: DagSpec,
+        models: Mapping[str, NodeModel],
+        headroom: float = 1.2,
+        deadband: float = 0.15,
+        preferred_dim: ContainerDim | None = None,
+        calibrator: Calibrator | None = None,
+    ) -> None:
+        self.dag = dag
+        self.models = dict(models)
+        self.headroom = headroom
+        self.deadband = deadband
+        self.preferred_dim = preferred_dim
+        self.calibrator = calibrator or Calibrator()
+        self.current: AllocationResult | None = None
+        self.events: list[ScalingEvent] = []
+        self._last_target = 0.0
+
+    # -- one-shot declarative interface (fig. 2b) --------------------------
+    def configure_for(self, target_ktps: float, reason: str = "declared") -> AllocationResult:
+        t0 = time.perf_counter()
+        res = allocate(
+            self.dag,
+            self.models,
+            target_ktps,
+            preferred_dim=self.preferred_dim,
+            overprovision=self.calibrator.overprovision_factor,
+        )
+        dt = time.perf_counter() - t0
+        self.current = res
+        self._last_target = target_ktps
+        self.events.append(
+            ScalingEvent(
+                t=time.time(),
+                load_ktps=target_ktps,
+                target_ktps=target_ktps,
+                n_containers=res.config.n_containers,
+                total_cpus=res.total_cpus,
+                reason=reason,
+                alloc_seconds=dt,
+            )
+        )
+        return res
+
+    # -- load-following loop ------------------------------------------------
+    def observe_load(self, load_ktps: float) -> AllocationResult | None:
+        """Called with the current observed load; returns a new allocation
+        when the deadband is exceeded (else None = keep current config)."""
+        target = load_ktps * self.headroom
+        if self.current is not None and self._last_target > 0:
+            rel = abs(target - self._last_target) / self._last_target
+            if rel < self.deadband:
+                return None
+        return self.configure_for(target, reason=f"load={load_ktps:.0f}ktps")
+
+    # -- online refinement (§4) ----------------------------------------------
+    def observe_measurement(self, config: Configuration, measured_ktps: float) -> bool:
+        """Record predicted-vs-measured; returns True if drift was declared
+        (caller should retrain via :meth:`retrain`)."""
+        self.calibrator.observe(config, self.models, measured_ktps)
+        return self.calibrator.drift_detected()
+
+    def retrain(self, store: MetricsStore) -> None:
+        """Refit every node model from pooled metrics and reset calibration."""
+        self.models.update(fit_workload(store))
+        self.calibrator.mark_retrained()
+
+    # -- reporting ------------------------------------------------------------
+    @property
+    def reconfigurations(self) -> int:
+        return len(self.events)
+
+    def mean_alloc_seconds(self) -> float:
+        if not self.events:
+            return 0.0
+        return sum(e.alloc_seconds for e in self.events) / len(self.events)
+
+
+def run_against_trace(
+    scaler: AutoScaler,
+    load_trace_ktps,
+    measure: Callable[[Configuration, float], float] | None = None,
+) -> list[tuple[float, float, float]]:
+    """Drive the scaler with a load trace.  Returns per-step
+    (load, provisioned_cpus, achieved_rate) tuples.  ``measure(config, load)``
+    is typically the simulator; when given, measurements feed calibration."""
+    out = []
+    for load in load_trace_ktps:
+        load = float(load)
+        scaler.observe_load(load)
+        assert scaler.current is not None
+        cfg = scaler.current.config
+        achieved = float("nan")
+        if measure is not None:
+            achieved = measure(cfg, load)
+            # Only a saturated measurement reveals true capacity; feeding an
+            # unsaturated rate would miscalibrate the predictor.
+            if achieved < 0.98 * load:
+                scaler.observe_measurement(cfg, achieved)
+        out.append((load, scaler.current.total_cpus, achieved))
+    return out

@@ -1,0 +1,206 @@
+"""Trevor-for-LM: the paper's model-based allocation applied to TPU pods.
+
+The mapping (DESIGN.md §2.1):
+
+* a training/serving step is a stream DAG — ``data → embed → L×block → head``,
+* the ICI collectives are the **stream managers**: a tensor resharded across a
+  mesh axis pays link bandwidth on both ends exactly like a tuple crossing
+  containers pays two stream managers,
+* per-stage cost models are *learned from the compiled dry-run* (calibrated
+  FLOPs / HBM bytes / collective bytes per token) instead of from runtime
+  cputil metrics — same linear models, different sensor,
+* the balanced-container allocator becomes: rate-match MXU seconds/token
+  against ICI seconds/token and HBM seconds/token, and replicate chips until
+  the declared tokens/sec is met.
+
+This gives the LM framework a *declarative* interface: declare a target
+token rate, get back (chip count, predicted step time, bottleneck) in closed
+form — the same workflow shift as fig. 2 of the paper, now for TPU serving
+and training capacity planning.  ``repro.runtime.elastic`` drives it online.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .dag import DagSpec, EdgeSpec, Grouping, NodeSpec
+from .metrics import STREAM_MANAGER
+from .node_model import LinearFit, NodeModel, ResourceClass
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCost:
+    """Per-token cost of one pipeline stage on ONE chip."""
+
+    name: str
+    flops_per_token: float
+    hbm_bytes_per_token: float
+    coll_bytes_per_token: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_token / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_token / HBM_BW
+
+    @property
+    def chip_s(self) -> float:
+        """Chip-busy seconds per token (max of MXU and HBM terms — they
+        overlap on TPU)."""
+        return max(self.compute_s, self.memory_s)
+
+    @property
+    def ici_s(self) -> float:
+        return self.coll_bytes_per_token / ICI_BW
+
+
+@dataclasses.dataclass
+class LMWorkloadModel:
+    """Learned per-stage model of one (arch × shape) cell."""
+
+    arch: str
+    shape: str
+    stages: list[StageCost]
+    chips_measured: int          # mesh size the dry-run was taken at
+
+    @classmethod
+    def from_roofline(cls, row) -> "LMWorkloadModel":
+        """Build from a RooflineRow: whole-step totals → per-token stages.
+        The dry-run gives aggregate terms; stage split uses the layer-stack
+        calibration (body vs constant) implicitly via a single fused stage —
+        adequate because Trevor's allocator needs the *rate-matching point*,
+        which depends on totals."""
+        from ..configs import SHAPES, get_config
+
+        shape = SHAPES[row.shape]
+        cfg = get_config(row.arch)
+        tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+        stage = StageCost(
+            name="step",
+            flops_per_token=row.flops_total / tokens,
+            hbm_bytes_per_token=row.bytes_total / tokens,
+            coll_bytes_per_token=row.coll_bytes_total / tokens,
+        )
+        return cls(arch=row.arch, shape=row.shape, stages=[stage],
+                   chips_measured=row.chips)
+
+    # -- Trevor mapping ------------------------------------------------------
+    def to_dag(self) -> DagSpec:
+        """The step pipeline as a stream DAG: tuple = kilotoken."""
+        nodes = []
+        edges = []
+        prev = None
+        for i, st in enumerate(self.stages):
+            # chip-seconds per ktoken; γ=1 (every token flows through)
+            nodes.append(
+                NodeSpec(
+                    st.name,
+                    cpu_cost_per_ktuple=st.chip_s * 1e3,
+                    gamma=1.0 if i < len(self.stages) - 1 else 0.0,
+                    tuple_bytes=st.coll_bytes_per_token,
+                    is_source=(i == 0),
+                )
+            )
+            if prev is not None:
+                edges.append(EdgeSpec(prev, st.name, Grouping.SHUFFLE))
+            prev = st.name
+        return DagSpec(f"lm:{self.arch}:{self.shape}", tuple(nodes), tuple(edges))
+
+    def node_models(self) -> dict[str, NodeModel]:
+        """Trevor node models: chips are 'instances', ICI is the SM."""
+        out: dict[str, NodeModel] = {}
+        total_ici = sum(st.ici_s for st in self.stages)
+        for i, st in enumerate(self.stages):
+            cost = st.chip_s * 1e3  # busy-seconds per ktoken
+            out[st.name] = NodeModel(
+                name=st.name,
+                cpu=LinearFit(cost, 0.0, 1.0, 0.0, 1e9),
+                cap=LinearFit(cost, 0.0, 1.0, 0.0, 1e9),
+                gamma=1.0 if i < len(self.stages) - 1 else 0.0,
+                gamma_r2=1.0,
+                mem_base_mb=0.0,
+                mem_slope_mb_per_ktps=0.0,
+                resource_class=ResourceClass.CPU_BOUND,
+            )
+        out[STREAM_MANAGER] = NodeModel(
+            name=STREAM_MANAGER,
+            cpu=LinearFit(max(total_ici, 1e-15) * 1e3, 0.0, 1.0, 0.0, 1e9),
+            cap=LinearFit(max(total_ici, 1e-15) * 1e3, 0.0, 1.0, 0.0, 1e9),
+            gamma=1.0,
+            gamma_r2=1.0,
+            mem_base_mb=0.0,
+            mem_slope_mb_per_ktps=0.0,
+            resource_class=ResourceClass.CPU_BOUND,
+        )
+        return out
+
+    # -- predictions -----------------------------------------------------------
+    def step_seconds(self, tokens: int, chips: int, overlap: float = 0.0) -> float:
+        """Predicted wall time of one step on ``chips`` chips.
+
+        ``overlap``∈[0,1]: fraction of collective time hidden under compute
+        (the compute/comm-overlap knob; 0 = fully exposed, Trevor-conservative).
+        Per-chip work scales 1/chips; collectives scale with the per-chip
+        shard too (ring collectives move bytes/chips per link).
+        """
+        comp = sum(st.chip_s for st in self.stages) * tokens / chips
+        coll = sum(st.ici_s for st in self.stages) * tokens / chips
+        return comp + (1.0 - overlap) * coll
+
+    def tokens_per_second(self, tokens: int, chips: int, overlap: float = 0.0) -> float:
+        return tokens / self.step_seconds(tokens, chips, overlap)
+
+    def bottleneck(self) -> str:
+        comp = sum(st.compute_s for st in self.stages)
+        mem = sum(st.memory_s for st in self.stages)
+        coll = sum(st.ici_s for st in self.stages)
+        return max(
+            {"compute": comp, "memory": mem, "collective": coll}.items(),
+            key=lambda kv: kv[1],
+        )[0]
+
+
+@dataclasses.dataclass
+class LMAllocation:
+    chips: int
+    predicted_tokens_per_s: float
+    predicted_step_s: float
+    bottleneck: str
+    target_tokens_per_s: float
+
+    @property
+    def meets_target(self) -> bool:
+        return self.predicted_tokens_per_s >= self.target_tokens_per_s * 0.999
+
+
+def allocate_chips(
+    model: LMWorkloadModel,
+    target_tokens_per_s: float,
+    tokens_per_step: int,
+    overlap: float = 0.0,
+    overprovision: float = 1.0,
+    max_chips: int = 65536,
+) -> LMAllocation:
+    """Closed-form Trevor allocation for the LM pipeline: the per-token
+    chip-seconds and ICI-seconds rate-match when every chip is busy, so the
+    chip count follows directly (then rounded to the next power of two, the
+    deployable TPU slice granularity)."""
+    target = target_tokens_per_s * overprovision
+    per_tok = sum(st.chip_s for st in model.stages) + (1 - overlap) * sum(
+        st.ici_s for st in model.stages
+    )
+    chips = max(1, math.ceil(per_tok * target))
+    chips = min(1 << (chips - 1).bit_length(), max_chips)  # slice granularity
+    return LMAllocation(
+        chips=chips,
+        predicted_tokens_per_s=model.tokens_per_second(tokens_per_step, chips, overlap),
+        predicted_step_s=model.step_seconds(tokens_per_step, chips, overlap),
+        bottleneck=model.bottleneck(),
+        target_tokens_per_s=target_tokens_per_s,
+    )

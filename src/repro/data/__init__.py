@@ -1,0 +1,5 @@
+from .pipeline import DataConfig, PrefetchIterator, SyntheticLMStream, shard_batch
+from .tokenizer import HashTokenizer, synthetic_document
+
+__all__ = ["DataConfig", "HashTokenizer", "PrefetchIterator",
+           "SyntheticLMStream", "shard_batch", "synthetic_document"]

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the compute hot-spots, each with an ops.py jit
+wrapper and a ref.py pure-jnp oracle (validated in interpret mode on CPU)."""

@@ -1,0 +1,139 @@
+"""Blocked (flash) attention Pallas TPU kernel.
+
+Online-softmax attention with explicit VMEM tiling: queries are tiled
+(block_q × head_dim) per grid step, keys/values stream through VMEM in
+(block_k × head_dim) tiles along the innermost (sequential) grid dimension,
+and the running max / normalizer / accumulator live in VMEM scratch that
+persists across the K/V sweep.  Supports causal masking, sliding windows
+(SWA) and grouped-query attention (the K/V index map folds the q-head to its
+kv-head, so KV tiles are fetched once per group on TPU's streaming pipeline).
+
+Targets the MXU: block sizes default to 128×128 tiles (hardware-aligned);
+head_dim is zero-padded to a multiple of 128 by the ops wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,            # VMEM tiles
+    o_ref,                          # output tile
+    acc_ref, m_ref, l_ref,          # VMEM scratch (persists across kv steps)
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    block_q: int,
+    block_k: int,
+    seq_len: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # skip fully-masked tiles (still fetched, but no MXU work)
+    run = True
+    if causal:
+        run = (ki * block_k) <= (qi * block_q + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run, (ki + 1) * block_k - 1 > qi * block_q - window) if causal else run
+
+    @pl.when(run if not isinstance(run, bool) else True)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                            # (bq, bk)
+        mask = k_pos < seq_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,                    # (B, H, S, hd)
+    k: jax.Array,                    # (B, KV, S, hd)
+    v: jax.Array,                    # (B, KV, S, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    nq = pl.cdiv(S, block_q)
+    nk = pl.cdiv(S, block_k)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len=S,
+    )
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return out

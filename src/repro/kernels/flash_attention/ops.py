@@ -1,0 +1,63 @@
+"""Jit'd public wrapper: shape handling (padding to tile multiples), GQA
+layout conversion, CPU-interpret fallback, and the model-facing signature
+(B, S, H, hd) used by :mod:`repro.models.attention`."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_reference
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, pad)
+    return jnp.pad(x, pads), n
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,                    # (B, S, H, hd) — model layout
+    k: jax.Array,                    # (B, S, KV, hd)
+    v: jax.Array,                    # (B, S, KV, hd)
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention with GQA; returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    # pad seq to tile multiples (mask handles the tail via seq_len)
+    bq = min(block_q, max(16, 1 << (S - 1).bit_length())) if S < block_q else block_q
+    bk = min(block_k, bq) if S < block_k else block_k
+    qt, _ = _pad_to(qt, 2, bq)
+    kt, _ = _pad_to(kt, 2, bk)
+    vt, _ = _pad_to(vt, 2, bk)
+    out = flash_attention_pallas(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out[:, :, :S, :].transpose(0, 2, 1, 3)
+
+
+def flash_attention_reference(q, k, v, causal=True, window=None):
+    """Oracle in the model layout (B, S, H, hd)."""
+    out = attention_reference(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal, window=window,
+    )
+    return out.transpose(0, 2, 1, 3)

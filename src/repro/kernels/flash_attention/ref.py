@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jax.Array,                    # (B, H, S, hd)
+    k: jax.Array,                    # (B, KV, S, hd)
+    v: jax.Array,                    # (B, KV, S, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(B, KV, G, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bkth->bkgqt", qg, kf) * scale
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bkth->bkgqh", p, vf)
+    return o.reshape(B, H, S, hd).astype(q.dtype)

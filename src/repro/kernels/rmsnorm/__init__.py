@@ -1,0 +1,4 @@
+from .ops import rmsnorm
+from .ref import rmsnorm_reference
+
+__all__ = ["rmsnorm", "rmsnorm_reference"]

@@ -1,0 +1,12 @@
+"""Jit'd wrapper for the fused RMSNorm kernel."""
+import functools
+
+import jax
+
+from .rmsnorm import rmsnorm_pallas
+from .ref import rmsnorm_reference
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, gain, eps: float = 1e-5, interpret: bool = False):
+    return rmsnorm_pallas(x, gain, eps=eps, interpret=interpret)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_reference(x, gain, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * gain.astype(jnp.float32)).astype(x.dtype)

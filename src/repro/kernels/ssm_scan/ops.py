@@ -1,0 +1,32 @@
+"""Jit'd wrapper: pads S to chunk multiples and D to block multiples."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssm_scan_reference
+from .ssm_scan import ssm_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def ssm_scan(dt, x, bmat, cmat, a, h0, chunk: int = 128, block_d: int = 256,
+             interpret: bool = False):
+    B, S, D = dt.shape
+    chunk = min(chunk, S)
+    pad_s = (-S) % chunk
+    block_d = min(block_d, D)
+    pad_d = (-D) % block_d
+    if pad_s or pad_d:
+        pad3 = lambda t: jnp.pad(t, ((0, 0), (0, pad_s), (0, pad_d)))
+        padn = lambda t: jnp.pad(t, ((0, 0), (0, pad_s), (0, 0)))
+        dt_, x_ = pad3(dt), pad3(x)
+        b_, c_ = padn(bmat), padn(cmat)
+        a_ = jnp.pad(a, ((0, pad_d), (0, 0)))
+        h0_ = jnp.pad(h0, ((0, 0), (0, pad_d), (0, 0)))
+    else:
+        dt_, x_, b_, c_, a_, h0_ = dt, x, bmat, cmat, a, h0
+    y, hT = ssm_scan_pallas(dt_, x_, b_, c_, a_, h0_, chunk=chunk,
+                            block_d=block_d, interpret=interpret)
+    return y[:, :S, :D], hT[:, :D]

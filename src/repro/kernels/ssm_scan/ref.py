@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the selective-scan kernel: naive sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_reference(dt, x, bmat, cmat, a, h0):
+    """dt,x: (B,S,D); bmat,cmat: (B,S,N); a: (D,N); h0: (B,D,N).
+    Returns (y: (B,S,D), hT: (B,D,N)), all float32."""
+    dt = dt.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp
+        a_t = jnp.exp(dt_t[..., None] * a)                  # (B,D,N)
+        h = a_t * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y_t = (h * c_t[:, None, :]).sum(-1)                 # (B,D)
+        return h, y_t
+
+    xs = (dt.swapaxes(0, 1), x.swapaxes(0, 1),
+          bmat.swapaxes(0, 1), cmat.swapaxes(0, 1))
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), hT

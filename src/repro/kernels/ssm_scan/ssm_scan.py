@@ -1,0 +1,111 @@
+"""Chunked selective-scan (Mamba SSM) Pallas TPU kernel.
+
+The hardware-aware core of Mamba, adapted to TPU: the per-timestep hidden
+state (d_inner × d_state) never touches HBM — it lives in VMEM scratch and is
+carried across sequence chunks along the innermost (sequential) grid
+dimension.  The channel dimension is tiled (block_d) so each program's working
+set (chunk × block_d inputs + block_d × N state) fits VMEM; channel tiles are
+a parallel grid dimension.
+
+Inputs are the *discretization pre-activations* (dt, B_t, C_t, x) — computing
+``exp(dt·A)`` inside the kernel instead of materializing it in HBM is exactly
+the recompute trick of the original CUDA kernel, transplanted to the
+HBM→VMEM→VREG hierarchy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(
+    dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref,
+    y_ref, hT_ref,
+    h_ref,                               # VMEM scratch: (block_d, N) f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    dt = dt_ref[0].astype(jnp.float32)        # (Lc, bd)
+    x = x_ref[0].astype(jnp.float32)          # (Lc, bd)
+    bmat = b_ref[0].astype(jnp.float32)       # (Lc, N)
+    cmat = c_ref[0].astype(jnp.float32)       # (Lc, N)
+    a = a_ref[...].astype(jnp.float32)        # (bd, N)
+
+    def step(t, carry):
+        h, y = carry
+        a_t = jnp.exp(dt[t][:, None] * a)                  # (bd, N)
+        h = a_t * h + (dt[t] * x[t])[:, None] * bmat[t][None, :]
+        y = y.at[t].set((h * cmat[t][None, :]).sum(axis=1))
+        return h, y
+
+    h0 = h_ref[...]
+    y0 = jnp.zeros((chunk, dt.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_ref[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        hT_ref[0] = h_ref[...].astype(hT_ref.dtype)
+
+
+def ssm_scan_pallas(
+    dt: jax.Array,                   # (B, S, D)   softplus'd step sizes
+    x: jax.Array,                    # (B, S, D)   conv'd inputs
+    bmat: jax.Array,                 # (B, S, N)
+    cmat: jax.Array,                 # (B, S, N)
+    a: jax.Array,                    # (D, N)      negative decay matrix
+    h0: jax.Array,                   # (B, D, N)
+    *,
+    chunk: int = 128,
+    block_d: int = 256,
+    interpret: bool = False,
+):
+    """Returns (y: (B,S,D) float32, hT: (B,D,N) float32)."""
+    B, S, D = dt.shape
+    N = a.shape[1]
+    assert S % chunk == 0, "ops wrapper pads S to a chunk multiple"
+    block_d = min(block_d, D)
+    assert D % block_d == 0, "ops wrapper pads D to a block multiple"
+    nc = S // chunk
+    nd = D // block_d
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk)
+    grid = (B, nd, nc)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((1, chunk, N), lambda b, di, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, di, ci: (b, ci, 0)),
+            pl.BlockSpec((block_d, N), lambda b, di, ci: (di, 0)),
+            pl.BlockSpec((1, block_d, N), lambda b, di, ci: (b, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((1, block_d, N), lambda b, di, ci: (b, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(dt, x, bmat, cmat, a, h0)
+    return y, hT

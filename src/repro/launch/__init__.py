@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, parallelism plans, step builders, the
+multi-pod dry-run, roofline analysis, and train/serve drivers."""

@@ -1,0 +1,210 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) cell
+on the production meshes and dump memory/cost/collective statistics.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, compile-time OOM, or unsupported collective
+fails here.  Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+        --out results/dryrun
+
+The roofline analysis (launch/roofline.py, EXPERIMENTS.md §Roofline) consumes
+the JSON this writes.
+
+NOTE: the first two statements below MUST run before any other import — jax
+locks the device count at first initialization.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from ..configs import SHAPES, cell_is_supported, get_config
+from . import sharding as shlib
+from .mesh import make_production_mesh
+from .steps import make_bundle
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*?\{([^}]*)\}", re.IGNORECASE
+)
+SHAPE_RE = re.compile(r"(bf16|f32|f16|f64|s32|u32|s8|u8|pred|s16|u16)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "f32": 4, "s32": 4, "u32": 4, "f64": 8,
+}
+
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_COLL_OP_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, float]:
+    """Sum output bytes of every collective op in the HLO.
+
+    For ``%x = <types> <op>(...)`` the text left of the op name holds the
+    output type(s) — including tuple outputs ``(f32[..], f32[..])`` that
+    all-to-all produces.  Async ``-done`` halves are skipped (the ``-start``
+    carries the payload)."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_OP_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        kind = m.group(1).lower()
+        prefix = line[: m.start()]
+        if "=" not in prefix:
+            continue
+        nbytes = 0.0
+        for dm in SHAPE_RE.finditer(prefix.split("=", 1)[1]):
+            dt, dims = dm.group(1), dm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0.0) + nbytes
+    return out
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    error: str = ""
+    compile_seconds: float = 0.0
+    flops: float = 0.0
+    hlo_bytes: float = 0.0
+    peak_bytes_per_device: float = 0.0
+    argument_bytes: float = 0.0
+    output_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    n_params: int = 0
+    notes: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             plan_overrides: dict | None = None, verbose: bool = True) -> CellReport:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rep = CellReport(arch=arch, shape=shape_name, mesh=mesh_name, ok=False)
+
+    supported, why = cell_is_supported(cfg, shape)
+    if not supported:
+        rep.error = f"skipped: {why}"
+        rep.notes = "skip"
+        return rep
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        huge = cfg.param_count()[0] > 100e9
+        plan = shlib.PlanConfig(
+            multi_pod=multi_pod,
+            fsdp_over_pod=huge,
+            **(plan_overrides or {}),
+        )
+        kw = {}
+        if shape.kind == "train" and huge:
+            # 398B-class: bf16 moments, no fp32 master (§Perf iter 4)
+            from ..optim.optimizer import AdamWConfig
+            kw["opt_cfg"] = AdamWConfig(use_master=False, moments_dtype="bfloat16")
+        t0 = time.perf_counter()
+        with jax.set_mesh(mesh):
+            bundle = make_bundle(cfg, shape, mesh, plan, **kw)
+            lowered = bundle.step_fn.lower(*bundle.args)
+            compiled = lowered.compile()
+        rep.compile_seconds = time.perf_counter() - t0
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        rep.flops = float(cost.get("flops", 0.0))
+        rep.hlo_bytes = float(cost.get("bytes accessed", 0.0))
+        mem = compiled.memory_analysis()
+        rep.peak_bytes_per_device = float(getattr(mem, "temp_size_in_bytes", 0.0))
+        rep.argument_bytes = float(getattr(mem, "argument_size_in_bytes", 0.0))
+        rep.output_bytes = float(getattr(mem, "output_size_in_bytes", 0.0))
+        hlo = compiled.as_text()
+        rep.collectives = collective_bytes_from_hlo(hlo)
+        rep.n_params = cfg.param_count()[0]
+        rep.ok = True
+        if verbose:
+            print(
+                f"[OK] {arch} × {shape_name} × {mesh_name}: "
+                f"compile {rep.compile_seconds:.1f}s  "
+                f"GFLOPs {rep.flops/1e9:.1f}  "
+                f"temp/device {rep.peak_bytes_per_device/2**30:.2f} GiB  "
+                f"args/device {rep.argument_bytes/2**30:.2f} GiB  "
+                f"coll {sum(rep.collectives.values())/2**30:.2f} GiB"
+            )
+            print("  memory_analysis:", mem)
+    except Exception as e:  # noqa: BLE001 — report every failure kind
+        rep.error = f"{type(e).__name__}: {e}"
+        if verbose:
+            print(f"[FAIL] {arch} × {shape_name} × {mesh_name}: {rep.error}")
+            traceback.print_exc()
+    return rep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--out", default=None, help="write JSON reports to this dir")
+    args = ap.parse_args()
+
+    from ..configs import list_archs
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+
+    reports = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                reports.append(run_cell(arch, shape, mp))
+
+    n_ok = sum(r.ok for r in reports)
+    n_skip = sum(r.notes == "skip" for r in reports)
+    n_fail = len(reports) - n_ok - n_skip
+    print(f"\n=== dry-run summary: {n_ok} ok, {n_skip} skipped (documented), {n_fail} FAILED ===")
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        for r in reports:
+            path = os.path.join(args.out, f"{r.arch}__{r.shape}__{r.mesh}.json")
+            with open(path, "w") as f:
+                json.dump(r.to_json(), f, indent=2)
+        print(f"wrote {len(reports)} reports to {args.out}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

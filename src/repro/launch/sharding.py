@@ -1,0 +1,190 @@
+"""Parallelism plans: logical-axis → mesh-axis rules per (arch, mode).
+
+The default plan composes:
+
+* **DP**   — batch over ('pod','data')
+* **FSDP** — every weight's d_model-side axis ("embed_w") over 'data'
+             (+'pod' for the 398B hybrid), gathered per-layer inside the scan
+* **TP**   — heads / ff / vocab over 'model'
+* **SP**   — activation seq over 'model' between blocks (train/prefill)
+* **EP**   — expert axis over 'model' when n_experts % tp == 0, else
+             expert-TP (per-expert ff over 'model')
+* decode   — KV-cache time axis over 'model' (GSPMD lowers the softmax over
+             the sharded axis to a flash-decoding-style partial reduction);
+             long_500k additionally spreads the cache time axis over
+             ('data','model') since batch=1 leaves 'data' idle.
+
+Divisibility is checked per arch — axes that don't divide (e.g. minicpm3's
+40 heads on tp=16, xlstm's 4 heads) fall back to replication for the
+*activation* while the flattened weight dim stays TP-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.ssm import mlstm_inner_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    multi_pod: bool = False
+    tp: int = 16
+    dp: int = 16
+    fsdp: bool = True
+    fsdp_over_pod: bool = False     # ZeRO across pods too (398B-class models)
+    sp: bool = True                 # sequence-parallel activations
+    ep: bool | None = None          # None = auto (divisibility)
+    seqshard_cache: bool = True     # shard decode KV cache time axis on 'model'
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def make_rules(cfg: ModelConfig, shape: ShapeConfig, plan: PlanConfig) -> dict[str, Any]:
+    """Logical axis name -> mesh axis (or tuple, or None)."""
+    tp = plan.tp
+    data_axes = ("pod", "data") if plan.multi_pod else ("data",)
+    fsdp_axes = None
+    if plan.fsdp:
+        fsdp_axes = ("pod", "data") if (plan.multi_pod and plan.fsdp_over_pod) else "data"
+
+    mode = shape.kind
+    B = shape.global_batch
+    dp_total = plan.dp * (2 if plan.multi_pod else 1)
+
+    rules: dict[str, Any] = {
+        # ---- weights ----
+        "layers": None,
+        "embed_w": fsdp_axes,
+        "heads_w": "model" if _div(cfg.n_heads * cfg.head_dim, tp) else None,
+        "kv_w": "model" if _div(cfg.n_kv_heads * cfg.head_dim, tp) else None,
+        "ff": "model" if cfg.d_ff and _div(cfg.d_ff, tp) else None,
+        "vocab": "model",   # configs pad the table; see padded_vocab()
+        "rank": None,
+        "conv": None,
+        # ---- activations ----
+        "act_batch": data_axes if _div(B, dp_total) else None,
+        "act_seq": "model" if (plan.sp and mode != "decode" and _div(shape.seq_len, tp)) else None,
+        "act_heads": "model" if _div(cfg.n_heads, tp) else None,
+        "act_kv": "model" if _div(cfg.n_kv_heads, tp) else None,
+        "act_ff": "model" if cfg.d_ff and _div(cfg.d_ff, tp) else None,
+        "act_vocab": "model",
+    }
+
+    # MLA: heads_w carries H*(nope+rope) and H*v_head flattened dims
+    if cfg.attention == "mla" and cfg.mla is not None:
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        ok = _div(cfg.n_heads * qk, tp) and _div(cfg.n_heads * m.v_head_dim, tp)
+        rules["heads_w"] = "model" if ok else None
+
+    # SSM inner dims
+    if cfg.family in ("ssm", "hybrid"):
+        ssm = cfg.ssm
+        di_mamba = (ssm.expand if ssm else 2) * cfg.d_model
+        di_mlstm = mlstm_inner_dim(cfg)
+        inner_ok = _div(di_mamba, tp) if "mamba" in cfg.pattern() else True
+        if any(k in cfg.pattern() for k in ("mlstm", "slstm")):
+            inner_ok = inner_ok and _div(2 * di_mlstm, tp) and _div(4 * cfg.d_model, tp)
+        rules["inner"] = "model" if inner_ok else None
+        rules["act_inner"] = rules["inner"]
+        rules["heads"] = "model" if _div(cfg.n_heads, tp) else None
+        # mlstm per-head q/k/v head-dim sharding was tried and REFUTED
+        # (§Perf iter 5): sharding the contracted dh axis makes GSPMD psum
+        # every block-diagonal matmul and re-gather the operands — measured
+        # temp rose 78->100 GiB.  Keep the axis unmapped.
+        rules["act_headdim"] = None
+    else:
+        rules["inner"] = None
+        rules["act_inner"] = None
+        rules["heads"] = None
+        rules["act_headdim"] = None
+
+    # MoE: EP when experts divide tp, else expert-TP
+    if cfg.is_moe:
+        use_ep = plan.ep if plan.ep is not None else _div(cfg.n_experts, tp)
+        if use_ep:
+            rules["experts"] = "model"
+            rules["experts_act"] = "model"
+            rules["expert_ff"] = None
+            rules["expert_act_ff"] = None
+        else:
+            rules["experts"] = None
+            rules["experts_act"] = None
+            rules["expert_ff"] = "model" if _div(cfg.expert_ff, tp) else None
+            rules["expert_act_ff"] = rules["expert_ff"]
+    return rules
+
+
+def cache_rules(cfg: ModelConfig, shape: ShapeConfig, plan: PlanConfig) -> dict[str, Any]:
+    """Extra logical axes used only by decode caches."""
+    data_axes = ("pod", "data") if plan.multi_pod else ("data",)
+    B = shape.global_batch
+    dp_total = plan.dp * (2 if plan.multi_pod else 1)
+    batch_ok = B % dp_total == 0
+    t = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+    rules: dict[str, Any] = {
+        "cache_batch": data_axes if batch_ok else None,
+        "cache_t": None,
+        "cache_kv": None,
+    }
+    if plan.seqshard_cache and cfg.attention != "mla":
+        if not batch_ok and t % (dp_total * plan.tp) == 0:
+            # batch=1 long-context: spread the cache over every axis we have
+            rules["cache_t"] = data_axes + ("model",) if plan.multi_pod else ("data", "model")
+        elif t % plan.tp == 0:
+            rules["cache_t"] = "model"
+    elif cfg.attention == "mla":
+        # compressed cache: no head axis; shard time over model
+        if t % plan.tp == 0:
+            rules["cache_t"] = "model"
+    return rules
+
+
+def cache_specs(cache_struct: Any, cfg: ModelConfig, rules: dict[str, Any],
+                crules: dict[str, Any]) -> Any:
+    """PartitionSpec tree matching Model.cache_struct(...) by leaf name."""
+    import jax
+
+    def spec_for(path, leaf) -> P:
+        names = [p.key if hasattr(p, "key") else str(p) for p in path]
+        leafname = names[-1]
+        if leafname in ("k", "v"):            # (nper, B, T, KV, hd)
+            return P(None, crules["cache_batch"], crules["cache_t"], None, None)
+        if leafname in ("c_kv", "k_rope"):    # (nper, B, T, r)
+            return P(None, crules["cache_batch"], crules["cache_t"], None)
+        if leafname == "h" and leaf.ndim == 4:  # mamba (nper, B, di, N)
+            return P(None, crules["cache_batch"], rules.get("inner"), None)
+        if leafname == "conv":                # (nper, B, d_conv-1, di)
+            return P(None, crules["cache_batch"], None, rules.get("inner"))
+        if leafname == "C":                   # mlstm (nper, B, nh, dh, dh)
+            return P(None, crules["cache_batch"], rules.get("heads"), None, None)
+        if leafname == "n" and leaf.ndim == 4:
+            return P(None, crules["cache_batch"], rules.get("heads"), None)
+        # slstm scalars (nper, B, d) and anything else
+        return P(*([None] * (leaf.ndim - 2) + [crules["cache_batch"], None])) if leaf.ndim >= 2 else P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_struct)
+
+
+def batch_specs(batch_struct: Any, rules: dict[str, Any]) -> Any:
+    """PartitionSpecs for the input batch."""
+    import jax
+
+    def spec_for(path, leaf) -> P:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        b = rules.get("act_batch")
+        if name in ("tokens", "labels"):
+            return P(b, None)
+        if name == "frontend":
+            return P(b, None, None)
+        if name == "token":
+            return P(b, None)
+        return P()  # pos scalar
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_struct)

@@ -1,0 +1,183 @@
+"""Step builders: jit-compiled train / prefill / decode programs with full
+sharding annotations — the artifacts the dry-run lowers and the drivers run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.common import axis_rules, logical_to_spec, param_specs
+from ..models.model import Model, build_model
+from ..optim.optimizer import AdamWConfig, adamw_update, init_opt_state
+from . import sharding as shlib
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower/run one (arch × shape × mesh) cell."""
+
+    model: Model
+    cfg: ModelConfig
+    shape: ShapeConfig
+    plan: shlib.PlanConfig
+    rules: dict[str, Any]
+    step_fn: Any              # jitted function
+    args: tuple               # abstract args for .lower(*args)
+    kind: str                 # train | prefill | decode
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def opt_state_specs(pspecs: Any, use_master: bool = True) -> dict:
+    """Optimizer state shards exactly like params (ZeRO)."""
+    out = {"step": P(), "m": pspecs, "v": pspecs}
+    if use_master:
+        out["master"] = pspecs
+    return out
+
+
+def make_train_bundle(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    plan: shlib.PlanConfig,
+    opt_cfg: AdamWConfig | None = None,
+    param_dtype=jnp.bfloat16,
+    remat: str = "full",
+    scan_layers: bool = True,
+) -> StepBundle:
+    opt_cfg = opt_cfg or AdamWConfig()
+    model = build_model(cfg, param_dtype=param_dtype, compute_dtype=jnp.bfloat16,
+                        remat=remat, scan_layers=scan_layers)
+    rules = shlib.make_rules(cfg, shape, plan)
+    pspecs = param_specs(model.defs(), rules)
+
+    def train_step(params, opt_state, batch):
+        with axis_rules(rules):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True
+            )(params, batch)
+            new_params, new_opt, opt_metrics = adamw_update(
+                opt_cfg, params, grads, opt_state
+            )
+        return new_params, new_opt, {"loss": loss, **metrics, **opt_metrics}
+
+    abstract_p = model.abstract()
+    mdt = jnp.dtype(opt_cfg.moments_dtype)
+    abstract_opt = {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "m": jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, mdt), abstract_p
+        ),
+        "v": jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, mdt), abstract_p
+        ),
+    }
+    if opt_cfg.use_master:
+        abstract_opt["master"] = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), abstract_p
+        )
+    batch_abs = model.input_specs(shape, abstract=True)
+    ospecs = opt_state_specs(pspecs, use_master=opt_cfg.use_master)
+    bspecs = shlib.batch_specs(batch_abs, rules)
+
+    step = jax.jit(
+        train_step,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), _named(mesh, bspecs)),
+        out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), None),
+        donate_argnums=(0, 1),
+    )
+    return StepBundle(model, cfg, shape, plan, rules, step,
+                      (abstract_p, abstract_opt, batch_abs), "train")
+
+
+def make_prefill_bundle(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    plan: shlib.PlanConfig,
+    param_dtype=jnp.bfloat16,
+    remat: str = "full",
+    scan_layers: bool = True,
+) -> StepBundle:
+    model = build_model(cfg, param_dtype=param_dtype, compute_dtype=jnp.bfloat16,
+                        remat=remat, scan_layers=scan_layers)
+    rules = shlib.make_rules(cfg, shape, plan)
+    crules = shlib.cache_rules(cfg, shape, plan)
+    pspecs = param_specs(model.defs(), rules)
+
+    def prefill_step(params, batch):
+        with axis_rules(rules):
+            logits, caches = model.forward_prefill(params, batch)
+        return logits, caches
+
+    batch_abs = model.input_specs(shape, abstract=True)
+    bspecs = shlib.batch_specs(batch_abs, rules)
+    step = jax.jit(
+        prefill_step,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+    )
+    return StepBundle(model, cfg, shape, plan, rules, step,
+                      (model.abstract(), batch_abs), "prefill")
+
+
+def make_decode_bundle(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    plan: shlib.PlanConfig,
+    param_dtype=jnp.bfloat16,
+    scan_layers: bool = True,
+) -> StepBundle:
+    model = build_model(cfg, param_dtype=param_dtype, compute_dtype=jnp.bfloat16,
+                        remat="none", scan_layers=scan_layers)
+    rules = shlib.make_rules(cfg, shape, plan)
+    crules = shlib.cache_rules(cfg, shape, plan)
+    pspecs = param_specs(model.defs(), rules)
+
+    B = shape.global_batch
+    ctx = shape.seq_len
+    cache_abs = model.cache_struct(B, ctx, abstract=True, dtype=param_dtype)
+    cspecs = shlib.cache_specs(cache_abs, cfg, rules, crules)
+
+    def decode_step(params, caches, token, pos):
+        with axis_rules(rules):
+            logits, new_caches = model.forward_decode(params, token, caches, pos)
+        return logits, new_caches
+
+    batch_abs = model.input_specs(shape, abstract=True)
+    token_abs = batch_abs["token"]
+    pos_abs = batch_abs["pos"]
+    tok_spec = P(rules.get("act_batch"), None)
+    step = jax.jit(
+        decode_step,
+        in_shardings=(
+            _named(mesh, pspecs),
+            _named(mesh, cspecs),
+            NamedSharding(mesh, tok_spec),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(None, _named(mesh, cspecs)),
+        donate_argnums=(1,),
+    )
+    return StepBundle(model, cfg, shape, plan, rules, step,
+                      (model.abstract(), cache_abs, token_abs, pos_abs), "decode")
+
+
+def make_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, plan: shlib.PlanConfig,
+                **kw) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_bundle(cfg, shape, mesh, plan, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_bundle(cfg, shape, mesh, plan, **kw)
+    return make_decode_bundle(cfg, shape, mesh, plan, **kw)

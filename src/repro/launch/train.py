@@ -1,0 +1,161 @@
+"""Training driver: data pipeline + jitted train step + checkpointing +
+fault tolerance, runnable end-to-end on CPU with a ~100M model.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b@smoke \
+        --steps 50 --d-model 512
+
+On a real cluster this module is launched per host (jax.distributed); the
+single-host CPU path exercises the identical control flow.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ShapeConfig, get_config
+from ..data.pipeline import DataConfig, SyntheticLMStream
+from ..models import build_model
+from ..models.common import axis_rules
+from ..optim.optimizer import AdamWConfig, adamw_update, init_opt_state
+from ..checkpoint.checkpointer import Checkpointer
+from ..runtime.fault import FailurePlan, StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    arch: str = "stablelm-1.6b@smoke"
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    ckpt_dir: str | None = None
+    ckpt_every: int = 25
+    seed: int = 0
+    log_every: int = 10
+    opt: AdamWConfig = dataclasses.field(
+        default_factory=lambda: AdamWConfig(peak_lr=1e-3, warmup_steps=20,
+                                            total_steps=1000)
+    )
+    # model overrides for the "~100M example" without a dedicated config
+    d_model: int | None = None
+    n_layers: int | None = None
+
+
+def build_state(tc: TrainConfig):
+    cfg = get_config(tc.arch)
+    overrides = {}
+    if tc.d_model:
+        overrides["d_model"] = tc.d_model
+        overrides["head_dim"] = tc.d_model // cfg.n_heads
+        overrides["d_ff"] = tc.d_model * 3 if cfg.d_ff else 0
+    if tc.n_layers:
+        overrides["n_layers"] = tc.n_layers
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = build_model(cfg, param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(tc.seed))
+    opt_state = init_opt_state(tc.opt, params)
+    return cfg, model, params, opt_state
+
+
+def make_step(model, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True
+        )(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return jax.jit(train_step, donate_argnums=(0, 1))
+
+
+def train(
+    tc: TrainConfig,
+    failure_plan: FailurePlan | None = None,
+    on_step: Any = None,
+) -> dict:
+    """Run (or resume) training; returns summary metrics."""
+    cfg, model, params, opt_state = build_state(tc)
+    stream = SyntheticLMStream(
+        DataConfig(vocab=cfg.vocab, seq_len=tc.seq_len,
+                   global_batch=tc.global_batch, seed=tc.seed)
+    )
+    step_fn = make_step(model, tc.opt)
+
+    start_step = 0
+    ckpt = Checkpointer(tc.ckpt_dir) if tc.ckpt_dir else None
+    if ckpt is not None:
+        restored = ckpt.restore_latest()
+        if restored is not None:
+            start_step, tree = restored
+            params = jax.tree_util.tree_map(
+                lambda a, b: jnp.asarray(a, b.dtype), tree["params"], params
+            )
+            opt_state = jax.tree_util.tree_map(
+                lambda a, b: jnp.asarray(a, b.dtype), tree["opt"], opt_state
+            )
+
+    monitor = StragglerMonitor()
+    losses = []
+    step = start_step
+    for step in range(start_step, tc.steps):
+        batch_np = stream.batch_at(step)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        if cfg.frontend is not None:
+            batch["frontend"] = 0.02 * jax.random.normal(
+                jax.random.PRNGKey(step), (tc.global_batch, cfg.frontend_tokens, cfg.d_model)
+            )
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        monitor.observe(step, dt)
+        losses.append(loss)
+        if on_step is not None:
+            on_step(step, loss)
+        if tc.log_every and step % tc.log_every == 0:
+            print(f"step {step:5d}  loss {loss:7.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  {dt*1000:6.1f} ms")
+        if ckpt is not None and (step + 1) % tc.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+        if failure_plan is not None:
+            failure_plan.maybe_fail(step)
+
+    if ckpt is not None:
+        ckpt.save(tc.steps, {"params": params, "opt": opt_state}, blocking=True)
+    return {
+        "final_loss": losses[-1] if losses else float("nan"),
+        "first_loss": losses[0] if losses else float("nan"),
+        "losses": losses,
+        "stragglers": monitor.stragglers,
+        "params": params,
+        "start_step": start_step,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b@smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--n-layers", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    tc = TrainConfig(
+        arch=args.arch, steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch, ckpt_dir=args.ckpt_dir,
+        d_model=args.d_model, n_layers=args.n_layers,
+    )
+    out = train(tc)
+    print(f"done: loss {out['first_loss']:.4f} -> {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""LM model zoo: layers, attention variants (GQA/SWA/MLA), MoE, SSM/xLSTM
+blocks, composable decoder/enc-dec stacks, frontend stubs."""
+
+from .model import Model, build_model
+
+__all__ = ["Model", "build_model"]

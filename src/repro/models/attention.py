@@ -1,0 +1,388 @@
+"""Attention variants: GQA (with optional sliding window), MLA (multi-head
+latent attention, compressed KV cache, absorbed decode), plus decode paths
+with static KV caches (circular for SWA) and a sequence-sharded flash-decoding
+path for very long contexts.
+
+All math is einsum-based jnp (so the dry-run's ``cost_analysis`` sees the true
+FLOPs); the Pallas flash kernel (:mod:`repro.kernels.flash_attention`) is an
+optional drop-in for the prefill core on real TPUs (``use_pallas``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MLAConfig, ModelConfig
+from .common import (
+    ParamDef,
+    apply_rope,
+    causal_mask,
+    shard_act,
+    softmax_fp32,
+)
+
+# ---------------------------------------------------------------------------
+# Parameter tables
+# ---------------------------------------------------------------------------
+
+
+def gqa_defs(cfg: ModelConfig, stack: int, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    L = (stack,)
+    lax_ = ("layers",)
+    return {
+        "wq": ParamDef(L + (d, H * hd), lax_ + ("embed_w", "heads_w")),
+        "wk": ParamDef(L + (d, KV * hd), lax_ + ("embed_w", "kv_w")),
+        "wv": ParamDef(L + (d, KV * hd), lax_ + ("embed_w", "kv_w")),
+        "wo": ParamDef(L + (H * hd, d), lax_ + ("heads_w", "embed_w")),
+    }
+
+
+def mla_defs(cfg: ModelConfig, stack: int) -> dict:
+    m = cfg.mla or MLAConfig()
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    L = (stack,)
+    lax_ = ("layers",)
+    return {
+        "wq_down": ParamDef(L + (d, m.q_lora_rank), lax_ + ("embed_w", "rank")),
+        "q_norm": ParamDef(L + (m.q_lora_rank,), lax_ + (None,), init="ones"),
+        "wq_up": ParamDef(L + (m.q_lora_rank, H * qk), lax_ + ("rank", "heads_w")),
+        "wkv_down": ParamDef(
+            L + (d, m.kv_lora_rank + m.qk_rope_head_dim), lax_ + ("embed_w", None)
+        ),
+        "kv_norm": ParamDef(L + (m.kv_lora_rank,), lax_ + (None,), init="ones"),
+        "wk_up": ParamDef(
+            L + (m.kv_lora_rank, H * m.qk_nope_head_dim), lax_ + ("rank", "heads_w")
+        ),
+        "wv_up": ParamDef(
+            L + (m.kv_lora_rank, H * m.v_head_dim), lax_ + ("rank", "heads_w")
+        ),
+        "wo": ParamDef(L + (H * m.v_head_dim, d), lax_ + ("heads_w", "embed_w")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (grouped-query, fp32 softmax)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_core(q, k, v, mask, scale,
+              score_axes=("act_batch", "act_heads", None, None)) -> jax.Array:
+    """q: (B,S,H,hd)  k/v: (B,T,KV,hd)  mask: (S,T) or (B,S,T) bool.
+
+    K/V are expanded to the full head count before the einsum so the whole
+    attention pipeline carries ONE sharded head axis — the (B,KV,G,S,T)
+    factored layout confused GSPMD into replicating the score tensors
+    ("involuntary full rematerialization"), which dominated both the
+    collective roofline term and peak memory in the baseline (§Perf iter 1).
+    The expansion is free per-device: with H sharded over 'model', each chip
+    holds H/tp expanded heads — the same bytes as the grouped layout.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    k = shard_act(k, ("act_batch", None, "act_heads", None))
+    v = shard_act(v, ("act_batch", None, "act_heads", None))
+    scores = jnp.einsum("bsnh,btnh->bnst", q, k) * scale
+    scores = shard_act(scores, score_axes)
+    if mask.ndim == 2:
+        mask = mask[None, None]
+    else:
+        mask = mask[:, None]
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    p = softmax_fp32(scores)
+    p = shard_act(p, score_axes)
+    out = jnp.einsum("bnst,btnh->bsnh", p.astype(v.dtype), v)
+    return out
+
+
+QCHUNK_THRESHOLD = 8192  # chunk the q axis beyond this sequence length
+QCHUNK = 2048
+
+
+def _gqa_core_qchunked(q, k, v, scale, window,
+                       score_axes=("act_batch", "act_heads", None, None)) -> jax.Array:
+    """Flash-style q-chunking in plain XLA (§Perf iter 3): scores for one
+    (chunk × T) block at a time — softmax over the full (available) row is
+    exact, so no online rescaling is needed; peak memory falls from O(S²) to
+    O(QCHUNK·S) per head.  The Pallas kernel is the on-TPU analogue with the
+    additional k-tiling."""
+    B, S, H, hd = q.shape
+    nc = S // QCHUNK
+
+    def chunk(carry, inputs):
+        qc, offset = inputs
+        mask = causal_mask(QCHUNK, S, q_offset=offset, window=window)
+        out = _gqa_core(qc, k, v, mask, scale, score_axes)
+        return carry, out
+
+    qs = q.reshape(B, nc, QCHUNK, H, hd).swapaxes(0, 1)
+    offsets = jnp.arange(nc) * QCHUNK
+    _, outs = jax.lax.scan(chunk, 0, (qs, offsets))
+    hd_out = v.shape[-1]  # MLA: v_head_dim differs from the q/k dim
+    return outs.swapaxes(0, 1).reshape(B, S, H, hd_out)
+
+
+def gqa_prefill(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+                make_cache: bool = False):
+    """Full-sequence causal attention.  Returns (out, cache|None)."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # SP hands off to TP here: seq gathers, heads shard (Megatron-SP style)
+    q = shard_act(q, ("act_batch", None, "act_heads", None))
+    k = shard_act(k, ("act_batch", None, "act_kv", None))
+    if S > QCHUNK_THRESHOLD and S % QCHUNK == 0:
+        out = _gqa_core_qchunked(q, k, v, 1.0 / hd ** 0.5, cfg.sliding_window)
+    else:
+        mask = causal_mask(S, S, window=cfg.sliding_window)
+        out = _gqa_core(q, k, v, mask, 1.0 / hd ** 0.5)
+    out = out.reshape(B, S, H * hd) @ p["wo"]
+    cache = None
+    if make_cache:
+        W = cfg.sliding_window
+        if W is not None and S >= W:
+            k, v = k[:, -W:], v[:, -W:]
+        cache = {"k": k, "v": v}
+    return out, cache
+
+
+def gqa_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
+               pos: jax.Array):
+    """Single-token decode against a static cache.
+
+    cache["k"]/["v"]: (B, T, KV, hd) with T = full context (or the sliding
+    window, used as a circular buffer).  ``pos`` (scalar int32) is the
+    absolute position of the new token.
+    """
+    B, S, d = x.shape
+    assert S == 1
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    T = cache["k"].shape[1]
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    k = (x @ p["wk"]).reshape(B, 1, KV, hd)
+    v = (x @ p["wv"]).reshape(B, 1, KV, hd)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    slot = pos % T if cfg.sliding_window is not None else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    idx = jnp.arange(T)
+    if cfg.sliding_window is not None:
+        # circular buffer: valid once within the window
+        valid = (idx != slot) | (idx == slot)  # all slots hold the last T tokens
+        valid = jnp.ones((T,), bool)
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, :] & jnp.ones((B, 1, 1), bool)
+    out = _gqa_core(q, ck, cv, mask, 1.0 / hd ** 0.5)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+def gqa_decode_seqsharded(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
+                          pos: jax.Array, axis_name: str = "data"):
+    """Flash-decoding over a sequence-sharded KV cache (long_500k): each shard
+    computes partial softmax statistics over its slice of the context and the
+    results are combined with a psum — decode attention scales across the
+    'data' axis even at batch 1.  Must run inside shard_map with the cache's
+    T axis sharded on ``axis_name``."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Tl = cache["k"].shape[1]  # local slice length
+    shard = jax.lax.axis_index(axis_name)
+    nsh = jax.lax.axis_size(axis_name)
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    k_new = (x @ p["wk"]).reshape(B, 1, KV, hd)
+    v_new = (x @ p["wv"]).reshape(B, 1, KV, hd)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+    # the new token's KV lands on the shard owning slot `pos`
+    owner = (pos // Tl) == shard
+    local_slot = pos % Tl
+    cur_k = jax.lax.dynamic_slice_in_dim(cache["k"], local_slot, 1, axis=1)
+    cur_v = jax.lax.dynamic_slice_in_dim(cache["v"], local_slot, 1, axis=1)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], jnp.where(owner, k_new, cur_k), (0, local_slot, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], jnp.where(owner, v_new, cur_v), (0, local_slot, 0, 0)
+    )
+    # partial attention over the local slice
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, ck) * (1.0 / hd ** 0.5)
+    gpos = shard * Tl + jnp.arange(Tl)
+    valid = gpos <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores.astype(jnp.float32), -1e30)
+    m_loc = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - m_loc)
+    num_loc = jnp.einsum("bkgst,btkh->bskgh", e.astype(cv.dtype), cv).astype(jnp.float32)
+    den_loc = e.sum(axis=-1)[..., None]  # (B,KV,G,1,1)
+    # global max then rescale + psum combine
+    m_glob = jax.lax.pmax(m_loc, axis_name)
+    corr = jnp.exp(m_loc - m_glob)                      # (B,KV,G,1,1)
+    corr_n = jnp.moveaxis(corr, -2, 1)                  # align to (B,1,KV,G,1)
+    num = jax.lax.psum(num_loc * corr_n, axis_name)
+    den = jax.lax.psum(den_loc * corr, axis_name)
+    den = jnp.moveaxis(den, -2, 1)
+    out = (num / jnp.maximum(den, 1e-30)).astype(x.dtype)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (MiniCPM3 / DeepSeek-style latent attention)
+# ---------------------------------------------------------------------------
+
+
+def _mla_qkv(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    from .common import rms_norm
+
+    m = cfg.mla or MLAConfig()
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q = rms_norm(x @ p["wq_down"], p["q_norm"], cfg.norm_eps) @ p["wq_up"]
+    q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ p["wkv_down"]
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # shared head
+    return q_nope, q_rope, c_kv, k_rope[:, :, 0, :]
+
+
+def mla_prefill(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+                make_cache: bool = False):
+    """MLA prefill on the shared blocked core: q/k are assembled per head as
+    [nope ‖ rope] (the rope half broadcast across heads), then run through
+    the same q-chunked attention as GQA.  When the head count doesn't divide
+    tp (minicpm3: 40 heads on 16) the score tensors are sharded along the KV
+    sequence axis instead — GSPMD turns the softmax into a partial reduction
+    (§Perf iter 6: 61.7 -> O(4) GiB prefill peak)."""
+    m = cfg.mla or MLAConfig()
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    k_nope = (c_kv @ p["wk_up"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (c_kv @ p["wv_up"]).reshape(B, S, H, m.v_head_dim)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)                 # (B,S,H,qk)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1
+    )
+    scale = 1.0 / (m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5
+    from .common import current_rules
+
+    rules = current_rules() or {}
+    heads_ok = rules.get("act_heads") is not None
+    score_axes = (
+        ("act_batch", "act_heads", None, None) if heads_ok
+        else ("act_batch", None, None, "act_seq")
+    )
+    if S > QCHUNK_THRESHOLD and S % QCHUNK == 0:
+        out = _gqa_core_qchunked(qf, kf, v, scale, None, score_axes)
+    else:
+        mask = causal_mask(S, S)
+        out = _gqa_core(qf, kf, v, mask, scale, score_axes)
+    out = out.reshape(B, S, H * m.v_head_dim) @ p["wo"]
+    cache = {"c_kv": c_kv, "k_rope": k_rope} if make_cache else None
+    return out, cache
+
+
+def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict, pos: jax.Array):
+    """Absorbed-matrix decode on the *compressed* cache: scores are computed
+    against c_kv directly (wk_up folded into the query), so the per-token
+    cache is only kv_lora_rank + rope_dim floats."""
+    m = cfg.mla or MLAConfig()
+    B, S, _ = x.shape
+    assert S == 1
+    H = cfg.n_heads
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, x, cfg, posb)
+    ck = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new, (0, pos, 0))
+    cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, pos, 0))
+    T = ck.shape[1]
+    # absorb wk_up: q_eff (B,1,H,rank)
+    wk = p["wk_up"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_eff = jnp.einsum("bshd,rhd->bshr", q_nope, wk)
+    scale = 1.0 / (m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_eff, ck)
+        + jnp.einsum("bshd,btd->bhst", q_rope, cr)
+    ) * scale
+    valid = jnp.arange(T) <= pos
+    scores = jnp.where(valid[None, None, None], scores.astype(jnp.float32), -1e30)
+    pattn = softmax_fp32(scores)
+    ctx = jnp.einsum("bhst,btr->bshr", pattn.astype(ck.dtype), ck)  # (B,1,H,rank)
+    wv = p["wv_up"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhd->bshd", ctx, wv)
+    out = out.reshape(B, 1, H * m.v_head_dim) @ p["wo"]
+    return out, {"c_kv": ck, "k_rope": cr}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention(p: dict, x: jax.Array, enc_kv: dict, cfg: ModelConfig):
+    """Decoder cross-attention over precomputed encoder K/V."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k, v = enc_kv["k"], enc_kv["v"]
+    mask = jnp.ones((S, k.shape[1]), bool)
+    out = _gqa_core(q, k, v, mask, 1.0 / hd ** 0.5)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def encoder_kv(p: dict, enc_out: jax.Array, cfg: ModelConfig) -> dict:
+    B, T, _ = enc_out.shape
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": (enc_out @ p["wk"]).reshape(B, T, KV, hd),
+        "v": (enc_out @ p["wv"]).reshape(B, T, KV, hd),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cache allocation
+# ---------------------------------------------------------------------------
+
+
+def make_cache_struct(cfg: ModelConfig, batch: int, ctx_len: int, dtype=jnp.bfloat16,
+                      abstract: bool = True):
+    """Abstract (ShapeDtypeStruct) or zero-filled KV cache for ONE attention
+    layer; the transformer stacks these per period."""
+    if cfg.attention == "mla":
+        m = cfg.mla or MLAConfig()
+        shapes = {
+            "c_kv": (batch, ctx_len, m.kv_lora_rank),
+            "k_rope": (batch, ctx_len, m.qk_rope_head_dim),
+        }
+    else:
+        T = min(ctx_len, cfg.sliding_window) if cfg.sliding_window else ctx_len
+        shapes = {
+            "k": (batch, T, cfg.n_kv_heads, cfg.head_dim),
+            "v": (batch, T, cfg.n_kv_heads, cfg.head_dim),
+        }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, dtype) for k, s in shapes.items()}
+    return {k: jnp.zeros(s, dtype) for k, s in shapes.items()}

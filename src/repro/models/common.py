@@ -1,0 +1,205 @@
+"""Model-layer foundations: parameter definitions with logical sharding axes,
+initialization, activation-sharding helpers, RoPE, norms.
+
+Parameters are plain pytrees (nested dicts of arrays).  Every leaf is declared
+through :class:`ParamDef`, which carries the *logical* axis names of each dim
+(e.g. ``("layers", "embed_w", "ff")``).  The launch layer maps logical axes to
+mesh axes (DP/FSDP/TP/SP/EP) — model code never mentions the mesh.
+
+``axis_rules(...)`` installs the active logical→mesh mapping;
+``shard_act(x, axes)`` inserts a sharding constraint when a mapping is active
+and is a no-op otherwise (so smoke tests run unsharded on one CPU device).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical axis rules
+# ---------------------------------------------------------------------------
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Mapping[str, Any] | None):
+    """Install logical→mesh axis rules for the duration of a trace."""
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = dict(rules) if rules is not None else None
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def current_rules() -> dict[str, Any] | None:
+    return getattr(_STATE, "rules", None)
+
+
+def logical_to_spec(axes: tuple[str | None, ...], rules: Mapping[str, Any]) -> P:
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def shard_act(x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+    """Constrain an activation's sharding by logical axes (no-op w/o rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, logical_to_spec(axes, rules))
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"       # normal | zeros | ones | embed | small
+    scale: float = 1.0         # extra multiplier on the init std
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+ParamTree = dict  # nested dict[str, ParamDef | ParamTree]
+
+
+def tree_defs_map(fn: Callable[[ParamDef], Any], defs: ParamTree) -> dict:
+    out = {}
+    for k, v in defs.items():
+        out[k] = fn(v) if isinstance(v, ParamDef) else tree_defs_map(fn, v)
+    return out
+
+
+def init_params(defs: ParamTree, key: jax.Array, dtype=jnp.float32) -> dict:
+    leaves: list[tuple[tuple[str, ...], ParamDef]] = []
+
+    def walk(d, path):
+        for k, v in sorted(d.items()):
+            if isinstance(v, ParamDef):
+                leaves.append((path + (k,), v))
+            else:
+                walk(v, path + (k,))
+
+    walk(defs, ())
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def make(pd: ParamDef, k):
+        if pd.init == "zeros":
+            return jnp.zeros(pd.shape, dtype)
+        if pd.init == "ones":
+            return jnp.ones(pd.shape, dtype)
+        fan_in = pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1]
+        std = pd.scale / max(fan_in, 1) ** 0.5
+        if pd.init == "embed":
+            std = pd.scale * 0.02
+        return (jax.random.normal(k, pd.shape) * std).astype(dtype)
+
+    out: dict = {}
+    for (path, pd), k in zip(leaves, keys):
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = make(pd, k)
+    return out
+
+
+def abstract_params(defs: ParamTree, dtype=jnp.bfloat16) -> dict:
+    return tree_defs_map(lambda pd: jax.ShapeDtypeStruct(pd.shape, dtype), defs)
+
+
+def param_specs(defs: ParamTree, rules: Mapping[str, Any]) -> dict:
+    return tree_defs_map(lambda pd: logical_to_spec(pd.axes, rules), defs)
+
+
+def param_logical_axes(defs: ParamTree) -> dict:
+    return tree_defs_map(lambda pd: pd.axes, defs)
+
+
+def count_params(defs: ParamTree) -> int:
+    total = 0
+
+    def walk(d):
+        nonlocal total
+        for v in d.values():
+            if isinstance(v, ParamDef):
+                n = 1
+                for s in v.shape:
+                    n *= s
+                total += n
+            else:
+                walk(v)
+
+    walk(defs)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * gain.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, gain: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gain.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def softmax_fp32(scores: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=axis)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset: int = 0,
+                window: int | None = None) -> jax.Array:
+    """(q_len, kv_len) boolean mask; True = attend.  ``q_offset`` positions the
+    query block inside the kv sequence (for decode/chunked prefill); ``window``
+    enables sliding-window attention."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m

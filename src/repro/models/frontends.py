@@ -1,0 +1,27 @@
+"""Modality-frontend STUBS (per the assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+The stubs define the *interface* a real InternViT / w2v-BERT frontend would
+fill: a (batch, frontend_tokens, d_model) embedding tensor.  A learned
+projection maps them into the backbone's residual stream so the dry-run sees
+the real backbone-side cost of multimodal fusion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int) -> tuple[int, int, int]:
+    return (batch, cfg.frontend_tokens, cfg.d_model)
+
+
+def frontend_embed_struct(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(frontend_embed_shape(cfg, batch), dtype)
+
+
+def apply_frontend_proj(params: dict, emb: jax.Array) -> jax.Array:
+    return emb @ params["frontend_proj"]

@@ -1,0 +1,229 @@
+"""The Model facade: parameter construction, forward passes for train /
+prefill / decode, cache construction, and input specs for every architecture
+family — the single entry point the launch layer builds steps from.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import attention, frontends, ssm
+from .common import (
+    abstract_params,
+    count_params,
+    init_params,
+    param_logical_axes,
+    rms_norm,
+    shard_act,
+)
+from .transformer import decoder_defs, run_decoder_stack, run_encoder_stack
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: str = "full"
+    scan_layers: bool = True
+
+    # -- parameters --------------------------------------------------------
+    def defs(self) -> dict:
+        return decoder_defs(self.cfg)
+
+    def init(self, key: jax.Array) -> dict:
+        return init_params(self.defs(), key, dtype=self.param_dtype)
+
+    def abstract(self) -> dict:
+        return abstract_params(self.defs(), dtype=self.param_dtype)
+
+    def logical_axes(self) -> dict:
+        return param_logical_axes(self.defs())
+
+    def n_params(self) -> int:
+        return count_params(self.defs())
+
+    # -- embedding / head ----------------------------------------------------
+    def _embed(self, params, tokens):
+        e = params["embed"][tokens]  # gather (V, d) -> (B, S, d)
+        return e.astype(self.compute_dtype)
+
+    def _head(self, params, x):
+        w = params["lm_head"] if "lm_head" in params else params["embed"].T
+        logits = x @ w.astype(self.compute_dtype)
+        if self.cfg.padded_vocab != self.cfg.vocab:
+            # mask padded vocabulary rows out of the softmax
+            valid = jnp.arange(self.cfg.padded_vocab) < self.cfg.vocab
+            logits = jnp.where(valid, logits, jnp.asarray(-1e9, logits.dtype))
+        return shard_act(logits, ("act_batch", None, "act_vocab"))
+
+    def _assemble_inputs(self, params, batch: dict):
+        """Merge token embeddings with optional frontend embeddings."""
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"])
+        if cfg.frontend is not None and not cfg.is_encdec:
+            fe = frontends.apply_frontend_proj(params, batch["frontend"].astype(self.compute_dtype))
+            x = jnp.concatenate([fe, x], axis=1)
+        x = shard_act(x, ("act_batch", "act_seq", None))
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return x, positions
+
+    # -- forward passes ------------------------------------------------------
+    def forward_train(self, params, batch: dict):
+        """Full causal forward; returns (logits, aux)."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.is_encdec:
+            enc_in = batch["frontend"].astype(self.compute_dtype)
+            enc_in = frontends.apply_frontend_proj(params, enc_in)
+            enc_out = run_encoder_stack(params, enc_in, cfg, remat=self.remat,
+                                        scan_layers=self.scan_layers)
+        x, positions = self._assemble_inputs(params, batch)
+        x, _, aux = run_decoder_stack(
+            params, x, cfg, mode="train", positions=positions,
+            enc_out=enc_out, remat=self.remat, scan_layers=self.scan_layers,
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x)
+        return logits, aux
+
+    def loss_fn(self, params, batch: dict):
+        """Next-token cross-entropy in fp32 (+ MoE aux losses)."""
+        cfg = self.cfg
+        logits, aux = self.forward_train(params, batch)
+        labels = batch["labels"]
+        if cfg.frontend is not None and not cfg.is_encdec:
+            # loss only over the text positions (after the frontend tokens)
+            logits = logits[:, cfg.frontend_tokens :, :]
+        logits = logits[:, :-1, :].astype(jnp.float32)
+        targets = labels[:, 1:]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        ce = (logz - gold).mean()
+        loss = ce
+        if "lb_loss" in aux:
+            loss = loss + 0.01 * aux["lb_loss"] + 0.001 * aux["z_loss"]
+        metrics = {"ce": ce, **aux}
+        return loss, metrics
+
+    def forward_prefill(self, params, batch: dict):
+        """Causal forward that also builds decode caches."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.is_encdec:
+            enc_in = frontends.apply_frontend_proj(
+                params, batch["frontend"].astype(self.compute_dtype)
+            )
+            enc_out = run_encoder_stack(params, enc_in, cfg, remat=self.remat,
+                                        scan_layers=self.scan_layers)
+        x, positions = self._assemble_inputs(params, batch)
+        x, caches, aux = run_decoder_stack(
+            params, x, cfg, mode="prefill", positions=positions,
+            enc_out=enc_out, remat=self.remat, scan_layers=self.scan_layers,
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x[:, -1:, :])
+        return logits, caches
+
+    def forward_decode(self, params, token: jax.Array, caches, pos: jax.Array,
+                       seqsharded_kv: bool = False):
+        """One decode step: token (B,1) int32, pos scalar int32."""
+        cfg = self.cfg
+        x = self._embed(params, token)
+        x, new_caches, _ = run_decoder_stack(
+            params, x, cfg, mode="decode", caches=caches, positions=pos,
+            remat="none", decode_seqsharded=seqsharded_kv,
+            scan_layers=self.scan_layers,
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x)
+        return logits, new_caches
+
+    # -- caches ----------------------------------------------------------------
+    def cache_struct(self, batch: int, ctx_len: int, abstract: bool = True,
+                     dtype=None):
+        """Decode cache pytree, stacked along the period axis."""
+        cfg = self.cfg
+        dtype = dtype or self.param_dtype
+        nper = cfg.n_periods()
+        per: dict = {}
+        for i, kind in enumerate(cfg.pattern()):
+            key = f"b{i}_{kind}"
+            if kind == "attn":
+                per[key] = attention.make_cache_struct(cfg, batch, ctx_len, dtype, abstract)
+            elif kind == "mamba":
+                per[key] = ssm.mamba_state_struct(cfg, batch, dtype, abstract)
+            elif kind == "mlstm":
+                per[key] = ssm.mlstm_state_struct(cfg, batch, abstract)
+            elif kind == "slstm":
+                per[key] = ssm.slstm_state_struct(cfg, batch, abstract)
+
+        def stack(leaf):
+            if abstract:
+                return jax.ShapeDtypeStruct((nper,) + leaf.shape, leaf.dtype)
+            return jnp.broadcast_to(leaf[None], (nper,) + leaf.shape).copy()
+
+        caches = jax.tree_util.tree_map(stack, per)
+        if cfg.is_encdec:
+            T = cfg.frontend_tokens
+            kv_shape = (nper, batch, T, cfg.n_kv_heads, cfg.head_dim)
+            if abstract:
+                caches["cross_kv"] = {
+                    "k": jax.ShapeDtypeStruct(kv_shape, dtype),
+                    "v": jax.ShapeDtypeStruct(kv_shape, dtype),
+                }
+            else:
+                caches["cross_kv"] = {
+                    "k": jnp.zeros(kv_shape, dtype), "v": jnp.zeros(kv_shape, dtype)
+                }
+        return caches
+
+    # -- input specs -------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig, abstract: bool = True) -> dict:
+        """ShapeDtypeStruct stand-ins (or concrete zeros) for every model input."""
+        cfg = self.cfg
+        B = shape.global_batch
+        S = shape.seq_len
+        mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else (
+            lambda s, d: jnp.zeros(s, d)
+        )
+        if shape.kind == "train":
+            if cfg.is_encdec:
+                return {
+                    "tokens": mk((B, S), jnp.int32),
+                    "labels": mk((B, S), jnp.int32),
+                    "frontend": mk((B, cfg.frontend_tokens, cfg.d_model), self.compute_dtype),
+                }
+            batch: dict = {}
+            s_text = S - (cfg.frontend_tokens if cfg.frontend else 0)
+            batch["tokens"] = mk((B, s_text), jnp.int32)
+            batch["labels"] = mk((B, s_text), jnp.int32)
+            if cfg.frontend is not None:
+                batch["frontend"] = mk((B, cfg.frontend_tokens, cfg.d_model), self.compute_dtype)
+            return batch
+        if shape.kind == "prefill":
+            batch = {}
+            s_text = S - (cfg.frontend_tokens if cfg.frontend else 0)
+            if cfg.is_encdec:
+                s_text = S
+            batch["tokens"] = mk((B, s_text), jnp.int32)
+            if cfg.frontend is not None:
+                batch["frontend"] = mk((B, cfg.frontend_tokens, cfg.d_model), self.compute_dtype)
+            return batch
+        # decode: one new token against a ctx_len cache
+        return {
+            "token": mk((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32) if abstract else jnp.asarray(S - 1, jnp.int32),
+        }
+
+
+def build_model(cfg: ModelConfig, param_dtype=jnp.float32, compute_dtype=None,
+                remat: str = "full", scan_layers: bool = True) -> Model:
+    return Model(cfg, param_dtype=param_dtype,
+                 compute_dtype=compute_dtype or param_dtype, remat=remat,
+                 scan_layers=scan_layers)

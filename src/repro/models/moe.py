@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded scatter dispatch.
+
+Dispatch is scatter/gather-based (not the dense (T,E,C) one-hot einsum), so
+compiled FLOPs stay proportional to *active* FLOPs (k/E of a dense layer) —
+essential for honest MODEL_FLOPS/HLO_FLOPs roofline accounting.
+
+Sharding: expert-parallel (EP) when ``n_experts % tp == 0`` — the expert axis
+carries the logical name "experts" which the launch plan maps to 'model'; the
+(E, C, d) dispatch buffers then reshard with an all-to-all.  When E < tp
+(mixtral: 8 < 16) the plan maps "experts" to None and shards the per-expert
+ff dim instead (expert-TP).
+
+Trevor tie-in: the router is a stream node with learned γ = k (token
+replication ratio) and the capacity factor is a container dimension —
+``repro.core.lm_bridge`` models MoE stages exactly this way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import ParamDef, shard_act
+
+
+def moe_defs(cfg: ModelConfig, stack: int) -> dict:
+    d, ff, E = cfg.d_model, cfg.expert_ff, cfg.n_experts
+    L = (stack,)
+    lax_ = ("layers",)
+    return {
+        "router": ParamDef(L + (d, E), lax_ + ("embed_w", None), scale=0.1),
+        "w1": ParamDef(L + (E, d, ff), lax_ + ("experts", "embed_w", "expert_ff")),
+        "w3": ParamDef(L + (E, d, ff), lax_ + ("experts", "embed_w", "expert_ff")),
+        "w2": ParamDef(L + (E, ff, d), lax_ + ("experts", "expert_ff", "embed_w")),
+    }
+
+
+def _moe_groups(cfg: ModelConfig, T: int) -> int:
+    """Dispatch-group count: one group per data shard so capacity, scatter and
+    expert compute all stay local to the shard (a global capacity buffer made
+    every replica compute over ALL tokens — the dominant term in the baseline
+    MoE rooflines; §Perf iter 2)."""
+    g = cfg.moe_groups
+    while g > 1 and T % g != 0:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux) with load-balance + router-z aux losses.
+
+    Grouped capacity dispatch: tokens are split into G groups (G = data
+    shards), each with its own capacity C_g = Tg*k/E*cf; the dispatch buffer
+    (G, E, C_g, d) is sharded G→data, E→model, so the expert einsum's
+    per-device FLOPs are the true active FLOPs and the G→E reshard is the
+    all-to-all."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    G = _moe_groups(cfg, T)
+    Tg = T // G
+    xt = x.reshape(G, Tg, d)
+    xt = shard_act(xt, ("act_batch", None, None))
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(max(1, round(Tg * k / E * cfg.capacity_factor)))
+
+    flat_ids = expert_ids.reshape(G, Tg * k)                 # (G, Tk)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)    # (G, Tk, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot
+    pos_in_expert = jnp.take_along_axis(
+        pos_all, flat_ids[..., None], axis=2
+    )[..., 0]                                                # (G, Tk)
+    keep = pos_in_expert < capacity
+
+    # scatter tokens into (G, E, C, d), grouped (vmapped over G)
+    xt_rep = jnp.repeat(xt, k, axis=1)                       # (G, Tk, d)
+    safe_pos = jnp.where(keep, pos_in_expert, capacity - 1)
+    contrib = jnp.where(keep[..., None], xt_rep, 0.0)
+
+    def scatter_group(ids, pos, src):
+        buf = jnp.zeros((E, capacity, d), x.dtype)
+        return buf.at[ids, pos].add(src)
+
+    buf = jax.vmap(scatter_group)(flat_ids, safe_pos, contrib)  # (G,E,C,d)
+    buf = shard_act(buf, ("act_batch", "experts_act", None, None))
+
+    # expert SwiGLU
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w1"]))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, p["w3"])
+    h = shard_act(h, ("act_batch", "experts_act", None, "expert_act_ff"))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    out_buf = shard_act(out_buf, ("act_batch", "experts_act", None, None))
+
+    # gather back + gate
+    def gather_group(ob, ids, pos):
+        return ob[ids, pos]
+
+    y_rep = jax.vmap(gather_group)(out_buf, flat_ids, safe_pos)  # (G, Tk, d)
+    w = keep.astype(x.dtype) * gate_vals.reshape(G, Tg * k).astype(x.dtype)
+    y = (y_rep * w[..., None]).reshape(G, Tg, k, d).sum(axis=2)
+    y = y.reshape(B, S, d)
+
+    # aux losses (Switch-style load balance + router z-loss)
+    me = probs.reshape(T, E).mean(axis=0)
+    ce = onehot.reshape(T, k, E).sum(1).astype(jnp.float32).mean(0) / k
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - keep.astype(jnp.float32).mean()
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "dropped_frac": dropped}
+    return y, aux

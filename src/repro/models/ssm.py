@@ -1,0 +1,380 @@
+"""State-space / recurrent blocks: Mamba (selective scan) and xLSTM
+(mLSTM matrix-memory + sLSTM scalar-memory).
+
+Training uses chunked scans: ``lax.scan`` over chunks carrying the recurrent
+state, with a parallel (associative-scan / attention-form) computation inside
+each chunk — the same decomposition the Pallas ``ssm_scan`` kernel tiles into
+VMEM on real TPUs.  Decode paths are single-step state updates (O(1)/token —
+this is what makes long_500k decoding tractable for these families).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, SSMConfig
+from .common import ParamDef, rms_norm, shard_act
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+
+def mamba_defs(cfg: ModelConfig, stack: int) -> dict:
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    di = s.expand * d
+    dt_rank = max(di // 16, 1)
+    L = (stack,)
+    lax_ = ("layers",)
+    return {
+        "in_proj": ParamDef(L + (d, 2 * di), lax_ + ("embed_w", "inner")),
+        "conv_w": ParamDef(L + (s.d_conv, di), lax_ + (None, "inner"), scale=0.5),
+        "x_proj": ParamDef(L + (di, dt_rank + 2 * s.d_state), lax_ + ("inner", None)),
+        "dt_proj": ParamDef(L + (dt_rank, di), lax_ + (None, "inner")),
+        "dt_bias": ParamDef(L + (di,), lax_ + ("inner",), init="zeros"),
+        "A_log": ParamDef(L + (di, s.d_state), lax_ + ("inner", None), init="ones"),
+        "D": ParamDef(L + (di,), lax_ + ("inner",), init="ones"),
+        "out_proj": ParamDef(L + (di, d), lax_ + ("inner", "embed_w")),
+    }
+
+
+def _mamba_inner(p, x_conv, z, s: SSMConfig, h0):
+    """Selective scan over a chunk.  x_conv: (B, Lc, di); h0: (B, di, N)."""
+    dt_rank = p["dt_proj"].shape[0]
+    N = s.d_state
+    proj = x_conv @ p["x_proj"]                                   # (B,Lc,rank+2N)
+    dt_low, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])    # (B,Lc,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (di,N)
+    # discretize: a = exp(dt*A); b = dt * B_t * x
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)            # (B,Lc,di,N)
+    bx = (dt * x_conv).astype(jnp.float32)[..., None] * Bmat.astype(jnp.float32)[:, :, None, :]
+    # associative scan within the chunk: h_t = a_t h_{t-1} + b_t
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+    a_cum, b_cum = jax.lax.associative_scan(op, (a, bx), axis=1)
+    h = b_cum + a_cum * h0[:, None]                               # (B,Lc,di,N)
+    y = jnp.einsum("blin,bln->bli", h, Cmat.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(x_conv.dtype), h[:, -1]
+
+
+def mamba_block(p: dict, x: jax.Array, cfg: ModelConfig, state=None):
+    """x: (B, S, d).  Training/prefill path (chunked scan).  Returns
+    (y, final_state) where state = {"h": (B,di,N), "conv": (B,d_conv-1,di)}."""
+    s = cfg.ssm or SSMConfig()
+    B, S, d = x.shape
+    di = s.expand * d
+    xz = x @ p["in_proj"]
+    xz = shard_act(xz, ("act_batch", None, "act_inner"))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # depthwise causal conv (kernel d_conv)
+    prev = state["conv"] if state is not None else jnp.zeros((B, s.d_conv - 1, di), x.dtype)
+    xp = jnp.concatenate([prev, xs], axis=1)
+    x_conv = sum(
+        xp[:, i : i + S] * p["conv_w"][i][None, None, :] for i in range(s.d_conv)
+    )
+    x_conv = jax.nn.silu(x_conv)
+    h0 = state["h"] if state is not None else jnp.zeros((B, di, s.d_state), jnp.float32)
+
+    Lc = min(s.chunk, S)
+    if S % Lc != 0:
+        Lc = S  # fall back to one chunk for odd smoke shapes
+    nc = S // Lc
+
+    def chunk_step(h, inputs):
+        xc, zc = inputs
+        y, h_new = _mamba_inner(p, xc, zc, s, h)
+        return h_new, y
+
+    xcs = x_conv.reshape(B, nc, Lc, di).swapaxes(0, 1)
+    zcs = z.reshape(B, nc, Lc, di).swapaxes(0, 1)
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (xcs, zcs))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    out = y @ p["out_proj"]
+    new_state = {"h": h_fin, "conv": xp[:, -(s.d_conv - 1):] if s.d_conv > 1 else prev}
+    return out, new_state
+
+
+def mamba_decode(p: dict, x: jax.Array, cfg: ModelConfig, state: dict):
+    """Single-token state update.  x: (B, 1, d)."""
+    s = cfg.ssm or SSMConfig()
+    B, S, d = x.shape
+    di = s.expand * d
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_prev = state["conv"]                                  # (B, d_conv-1, di)
+    xp = jnp.concatenate([conv_prev, xs], axis=1)              # (B, d_conv, di)
+    x_conv = jax.nn.silu(jnp.einsum("bki,ki->bi", xp, p["conv_w"]))[:, None, :]
+    dt_rank = p["dt_proj"].shape[0]
+    N = s.d_state
+    proj = x_conv @ p["x_proj"]
+    dt_low, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])  # (B,1,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)[:, 0]    # (B,di,N)
+    bx = ((dt * x_conv).astype(jnp.float32)[..., None] * Bm.astype(jnp.float32)[:, :, None, :])[:, 0]
+    h = a * state["h"] + bx
+    y = jnp.einsum("bin,bn->bi", h, Cm[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * x_conv[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"h": h, "conv": xp[:, 1:]}
+
+
+def mamba_state_struct(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16, abstract=True):
+    s = cfg.ssm or SSMConfig()
+    di = s.expand * cfg.d_model
+    shapes = {"h": ((batch, di, s.d_state), jnp.float32),
+              "conv": ((batch, s.d_conv - 1, di), dtype)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt) in shapes.items()}
+    return {k: jnp.zeros(sh, dt) for k, (sh, dt) in shapes.items()}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, chunked linear attention form)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_inner_dim(cfg: ModelConfig) -> int:
+    """Projection width rounded up to a multiple of n_heads."""
+    s = cfg.ssm or SSMConfig()
+    di = int(s.mlstm_proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    return ((di + nh - 1) // nh) * nh
+
+
+def mlstm_defs(cfg: ModelConfig, stack: int) -> dict:
+    d = cfg.d_model
+    di = mlstm_inner_dim(cfg)
+    nh = cfg.n_heads
+    dh = di // nh
+    L = (stack,)
+    lax_ = ("layers",)
+    return {
+        "up": ParamDef(L + (d, 2 * di), lax_ + ("embed_w", "inner")),
+        # block-diagonal per-head q/k/v (xLSTM qkv_proj_blocksize)
+        "wq": ParamDef(L + (nh, dh, dh), lax_ + ("heads", None, None)),
+        "wk": ParamDef(L + (nh, dh, dh), lax_ + ("heads", None, None)),
+        "wv": ParamDef(L + (nh, dh, dh), lax_ + ("heads", None, None)),
+        "w_i": ParamDef(L + (di, nh), lax_ + ("inner", "heads"), scale=0.1),
+        "w_f": ParamDef(L + (di, nh), lax_ + ("inner", "heads"), scale=0.1),
+        "b_f": ParamDef(L + (nh,), lax_ + ("heads",), init="ones"),
+        "norm": ParamDef(L + (di,), lax_ + ("inner",), init="ones"),
+        "down": ParamDef(L + (di, d), lax_ + ("inner", "embed_w")),
+    }
+
+
+def _mlstm_chunk(q, k, v, logf, logi, C0, n0):
+    """One chunk of gated linear attention (mLSTM parallel form).
+
+    q,k,v: (B,H,Lc,dh); logf/logi: (B,H,Lc); C0: (B,H,dh,dh); n0: (B,H,dh).
+    """
+    Lc = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    cum = jnp.cumsum(logf, axis=-1)                        # inclusive cumsum
+    total = cum[..., -1:]
+    # intra-chunk decay: D[i,j] = exp(cum_i - cum_j) * exp(logi_j), j <= i
+    Dm = cum[..., :, None] - cum[..., None, :] + logi[..., None, :]
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    Dm = jnp.where(tri, Dm, -jnp.inf)
+    S = jnp.einsum("bhid,bhjd->bhij", q, k) * scale
+    Sg = S * jnp.exp(Dm)
+    intra = jnp.einsum("bhij,bhjd->bhid", Sg, v)
+    # inter-chunk: contribution of carried state (q scaled like the decode path)
+    qdec = q * scale * jnp.exp(cum)[..., None]
+    inter = jnp.einsum("bhid,bhde->bhie", qdec, C0)
+    num = intra + inter
+    # normalizer: q̃·n_t = row-sum of Sg (+ carried part)
+    n_intra = Sg.sum(-1, keepdims=True)
+    n_inter = jnp.einsum("bhid,bhd->bhi", qdec, n0)[..., None]
+    den = jnp.abs(n_intra + n_inter)
+    h = num / jnp.maximum(den, 1.0)
+    # state update for the next chunk
+    kdec = k * jnp.exp(total - cum + logi)[..., None]
+    C1 = jnp.exp(total)[..., None] * C0 + jnp.einsum("bhjd,bhje->bhde", kdec, v)
+    n1 = jnp.exp(total) * n0 + kdec.sum(2)
+    return h, C1, n1
+
+
+def mlstm_block(p: dict, x: jax.Array, cfg: ModelConfig, state=None):
+    s = cfg.ssm or SSMConfig()
+    B, S, d = x.shape
+    di = mlstm_inner_dim(cfg)
+    nh = cfg.n_heads
+    dh = di // nh
+    up = x @ p["up"]
+    u, z = jnp.split(up, 2, axis=-1)                      # (B,S,di) each
+    uh = u.reshape(B, S, nh, dh).transpose(0, 2, 1, 3)    # (B,H,S,dh)
+    # NOTE (§Perf iter 5, REFUTED): constraining q/k/v head-dim sharding here
+    # was measured to RAISE peak memory (78->100 GiB) — with_sharding_
+    # constraint pins unlisted dims to replicated and the contracted-dh
+    # psums forced re-gathers.  Leave GSPMD free to propagate.
+    q = jnp.einsum("bhsd,hde->bhse", uh, p["wq"])
+    k = jnp.einsum("bhsd,hde->bhse", uh, p["wk"])
+    v = jnp.einsum("bhsd,hde->bhse", uh, p["wv"])
+    logi = (u @ p["w_i"]).transpose(0, 2, 1)              # (B,H,S)
+    logf = jax.nn.log_sigmoid((u @ p["w_f"] + p["b_f"]).transpose(0, 2, 1))
+    q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+    logi = logi.astype(jnp.float32)
+    logf = logf.astype(jnp.float32)
+
+    C0 = state["C"] if state is not None else jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = state["n"] if state is not None else jnp.zeros((B, nh, dh), jnp.float32)
+
+    Lc = min(s.chunk, S)
+    if S % Lc != 0:
+        Lc = S
+    nc = S // Lc
+
+    def step(carry, inp):
+        C, n = carry
+        qc, kc, vc, fc, ic = inp
+        h, C1, n1 = _mlstm_chunk(qc, kc, vc, fc, ic, C, n)
+        return (C1, n1), h
+
+    resh = lambda t: t.reshape(B, nh, nc, Lc, *t.shape[3:]).swapaxes(0, 2).swapaxes(1, 2)
+    # -> (nc, B, H, Lc, ...)
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    fs = logf.reshape(B, nh, nc, Lc).transpose(2, 0, 1, 3)
+    is_ = logi.reshape(B, nh, nc, Lc).transpose(2, 0, 1, 3)
+    (C1, n1), hs = jax.lax.scan(step, (C0, n0), (qs, ks, vs, fs, is_))
+    h = hs.transpose(1, 3, 0, 4, 2).reshape(B, S, di, -1)[..., 0] if False else (
+        hs.swapaxes(0, 1).swapaxes(1, 2).reshape(B, nh, S, dh).transpose(0, 2, 1, 3).reshape(B, S, di)
+    )
+    h = rms_norm(h.astype(x.dtype), p["norm"], cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ p["down"]
+    return out, {"C": C1, "n": n1}
+
+
+def mlstm_decode(p: dict, x: jax.Array, cfg: ModelConfig, state: dict):
+    s = cfg.ssm or SSMConfig()
+    B, S, d = x.shape
+    di = mlstm_inner_dim(cfg)
+    nh = cfg.n_heads
+    dh = di // nh
+    up = x @ p["up"]
+    u, z = jnp.split(up, 2, axis=-1)
+    uh = u.reshape(B, 1, nh, dh).transpose(0, 2, 1, 3)
+    q = jnp.einsum("bhsd,hde->bhse", uh, p["wq"]).astype(jnp.float32)[:, :, 0]
+    k = jnp.einsum("bhsd,hde->bhse", uh, p["wk"]).astype(jnp.float32)[:, :, 0]
+    v = jnp.einsum("bhsd,hde->bhse", uh, p["wv"]).astype(jnp.float32)[:, :, 0]
+    logi = (u @ p["w_i"]).astype(jnp.float32)[:, 0]          # (B,H)
+    logf = jax.nn.log_sigmoid((u @ p["w_f"] + p["b_f"]).astype(jnp.float32))[:, 0]
+    f = jnp.exp(logf)[..., None]
+    i = jnp.exp(logi)[..., None]
+    C = f[..., None] * state["C"] + i[..., None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = f * state["n"] + i * k
+    num = jnp.einsum("bhd,bhde->bhe", q * (dh ** -0.5), C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q * (dh ** -0.5), n))[..., None]
+    h = (num / jnp.maximum(den, 1.0)).reshape(B, 1, di).astype(x.dtype)
+    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ p["down"]
+    return out, {"C": C, "n": n}
+
+
+def mlstm_state_struct(cfg: ModelConfig, batch: int, abstract=True):
+    di = mlstm_inner_dim(cfg)
+    nh = cfg.n_heads
+    dh = di // nh
+    shapes = {"C": (batch, nh, dh, dh), "n": (batch, nh, dh)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(sh, jnp.float32) for k, sh in shapes.items()}
+    return {k: jnp.zeros(sh, jnp.float32) for k, sh in shapes.items()}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM (scalar memory, sequential exponential-gated recurrence)
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ModelConfig, stack: int) -> dict:
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ffd = int(s.slstm_ff_factor * d)
+    L = (stack,)
+    lax_ = ("layers",)
+    return {
+        "w_gates": ParamDef(L + (d, 4 * d), lax_ + ("embed_w", "inner")),
+        "r_gates": ParamDef(L + (nh, dh, 4 * dh), lax_ + ("heads", None, None), scale=0.5),
+        "b_gates": ParamDef(L + (4 * d,), lax_ + ("inner",), init="zeros"),
+        "norm": ParamDef(L + (d,), lax_ + ("embed_w",), init="ones"),
+        "ff_up": ParamDef(L + (d, ffd), lax_ + ("embed_w", "ff")),
+        "ff_down": ParamDef(L + (ffd, d), lax_ + ("ff", "embed_w")),
+    }
+
+
+def _slstm_step(p, cfg: ModelConfig, carry, wx_t):
+    """One timestep of stabilized exponential-gated sLSTM.
+    carry: (h, c, n, m) each (B, d)-shaped (heads folded); wx_t: (B, 4d)."""
+    h, c, n, m = carry
+    nh = cfg.n_heads
+    d = h.shape[-1]
+    dh = d // nh
+    rh = h.reshape(-1, nh, dh)
+    rec = jnp.einsum("bhd,hde->bhe", rh, p["r_gates"]).reshape(-1, nh * 4 * dh)
+    # interleave: r_gates produce (B, nh, 4dh) -> regroup to (B, 4d)
+    rec = rec.reshape(-1, nh, 4, dh).transpose(0, 2, 1, 3).reshape(-1, 4 * d)
+    gates = wx_t + rec + p["b_gates"]
+    zi, zf, zz, zo = jnp.split(gates, 4, axis=-1)
+    log_i = zi
+    log_f = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_t = jnp.exp(log_i - m_new)
+    f_t = jnp.exp(log_f + m - m_new)
+    z_t = jnp.tanh(zz)
+    o_t = jax.nn.sigmoid(zo)
+    c_new = f_t * c + i_t * z_t
+    n_new = f_t * n + i_t
+    h_new = o_t * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_block(p: dict, x: jax.Array, cfg: ModelConfig, state=None):
+    B, S, d = x.shape
+    wx = (x @ p["w_gates"]).astype(jnp.float32)              # (B,S,4d)
+    if state is None:
+        zero = jnp.zeros((B, d), jnp.float32)
+        carry = (zero, zero, zero, zero - 1e30)
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+
+    def step(carry, wx_t):
+        new = _slstm_step(p, cfg, carry, wx_t)
+        return new, new[0]
+
+    carry, hs = jax.lax.scan(step, carry, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                    # (B,S,d)
+    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    y = jax.nn.gelu(h @ p["ff_up"]) @ p["ff_down"]
+    new_state = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+    return y, new_state
+
+
+def slstm_decode(p: dict, x: jax.Array, cfg: ModelConfig, state: dict):
+    B, S, d = x.shape
+    wx = (x @ p["w_gates"]).astype(jnp.float32)[:, 0]
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    h, c, n, m = _slstm_step(p, cfg, carry, wx)
+    hn = rms_norm(h[:, None].astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = jax.nn.gelu(hn @ p["ff_up"]) @ p["ff_down"]
+    return y, {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_state_struct(cfg: ModelConfig, batch: int, abstract=True):
+    d = cfg.d_model
+    shapes = {"h": (batch, d), "c": (batch, d), "n": (batch, d), "m": (batch, d)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(sh, jnp.float32) for k, sh in shapes.items()}
+    return {
+        k: (jnp.zeros(sh, jnp.float32) - (1e30 if k == "m" else 0.0))
+        for k, sh in shapes.items()
+    }

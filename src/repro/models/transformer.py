@@ -1,0 +1,329 @@
+"""Composable decoder / encoder-decoder stacks over heterogeneous block
+patterns (attention / mamba / mLSTM / sLSTM), scanned over periods with
+configurable remat — one code path serves all ten assigned architectures.
+
+Parameters are stacked along a leading "layers" axis of length
+``cfg.n_periods()``; a period is one repetition of ``cfg.pattern()``
+(e.g. jamba: 7 mamba + 1 attention).  ``jax.lax.scan`` over periods keeps the
+HLO size O(period) instead of O(depth) — essential for compiling 72-layer
+configs in the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import ssm
+from .common import ParamDef, rms_norm, shard_act, swiglu
+from .moe import moe_defs, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Parameter tables
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ModelConfig, stack: int) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    L = (stack,)
+    lax_ = ("layers",)
+    return {
+        "w1": ParamDef(L + (d, ff), lax_ + ("embed_w", "ff")),
+        "w3": ParamDef(L + (d, ff), lax_ + ("embed_w", "ff")),
+        "w2": ParamDef(L + (ff, d), lax_ + ("ff", "embed_w")),
+    }
+
+
+def _block_defs(cfg: ModelConfig, kind: str, idx_in_period: int, stack: int) -> dict:
+    d = cfg.d_model
+    L = (stack,)
+    lax_ = ("layers",)
+    norm = lambda: ParamDef(L + (d,), lax_ + ("embed_w",), init="ones")
+    defs: dict = {"norm1": norm()}
+    if kind == "attn":
+        defs["attn"] = (
+            attn.mla_defs(cfg, stack) if cfg.attention == "mla" else attn.gqa_defs(cfg, stack)
+        )
+    elif kind == "mamba":
+        defs["mamba"] = ssm.mamba_defs(cfg, stack)
+    elif kind == "mlstm":
+        defs["mlstm"] = ssm.mlstm_defs(cfg, stack)
+        return defs  # self-contained block (gated output)
+    elif kind == "slstm":
+        defs["slstm"] = ssm.slstm_defs(cfg, stack)
+        return defs
+    else:
+        raise ValueError(kind)
+    # feed-forward half (dense or MoE), if the arch has one
+    if cfg.is_moe and (idx_in_period % cfg.moe_every == cfg.moe_every - 1):
+        defs["norm2"] = norm()
+        defs["moe"] = moe_defs(cfg, stack)
+    elif cfg.d_ff > 0:
+        defs["norm2"] = norm()
+        defs["mlp"] = mlp_defs(cfg, stack)
+    return defs
+
+
+def decoder_defs(cfg: ModelConfig) -> dict:
+    stack = cfg.n_periods()
+    d = cfg.d_model
+    defs: dict = {
+        "embed": ParamDef((cfg.padded_vocab, d), ("vocab", "embed_w"), init="embed"),
+        "final_norm": ParamDef((d,), ("embed_w",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, cfg.padded_vocab), ("embed_w", "vocab"))
+    blocks = {}
+    for i, kind in enumerate(cfg.pattern()):
+        blocks[f"b{i}_{kind}"] = _block_defs(cfg, kind, i, stack)
+    defs["blocks"] = blocks
+    if cfg.is_encdec:
+        enc_blocks = {}
+        for i in range(1):
+            enc_blocks["b0_attn"] = {
+                "norm1": ParamDef((cfg.enc_layers, d), ("layers", "embed_w"), init="ones"),
+                "attn": attn.gqa_defs(cfg, cfg.enc_layers),
+                "norm2": ParamDef((cfg.enc_layers, d), ("layers", "embed_w"), init="ones"),
+                "mlp": mlp_defs(cfg, cfg.enc_layers),
+            }
+        defs["encoder"] = {
+            "blocks": enc_blocks,
+            "final_norm": ParamDef((d,), ("embed_w",), init="ones"),
+        }
+        defs["cross"] = {
+            "norm": ParamDef((stack,) + (d,), ("layers", "embed_w"), init="ones"),
+            "attn": attn.gqa_defs(cfg, stack),
+        }
+    if cfg.frontend is not None:
+        defs["frontend_proj"] = ParamDef((d, d), ("embed_w", None))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _ffn_half(bp: dict, x: jax.Array, cfg: ModelConfig, aux_acc: dict) -> jax.Array:
+    if "moe" in bp:
+        h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        y, aux = moe_ffn(bp["moe"], h, cfg)
+        for k, v in aux.items():
+            aux_acc[k] = aux_acc.get(k, 0.0) + v
+        return x + y
+    if "mlp" in bp:
+        h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        h = shard_act(h, ("act_batch", "act_seq", None))
+        return x + swiglu(h, bp["mlp"]["w1"], bp["mlp"]["w3"], bp["mlp"]["w2"])
+    return x
+
+
+def apply_block(
+    bp: dict,
+    kind: str,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mode: str,                     # "train" | "prefill" | "decode"
+    state: Any,                    # cache/state slice for this block (or None)
+    positions: jax.Array,          # (B,S) for train/prefill; scalar pos for decode
+    aux_acc: dict,
+    cross_ctx: dict | None = None,  # {"params":..., "kv":...} for enc-dec
+    decode_seqsharded: bool = False,
+):
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    h = shard_act(h, ("act_batch", "act_seq", None))
+    new_state = state
+    if kind == "attn":
+        if mode == "decode":
+            if cfg.attention == "mla":
+                y, new_state = attn.mla_decode(bp["attn"], h, cfg, state, positions)
+            elif decode_seqsharded:
+                y, new_state = attn.gqa_decode_seqsharded(bp["attn"], h, cfg, state, positions)
+            else:
+                y, new_state = attn.gqa_decode(bp["attn"], h, cfg, state, positions)
+        else:
+            make_cache = mode == "prefill"
+            if cfg.attention == "mla":
+                y, new_state = attn.mla_prefill(bp["attn"], h, cfg, positions, make_cache)
+            else:
+                y, new_state = attn.gqa_prefill(bp["attn"], h, cfg, positions, make_cache)
+    elif kind == "mamba":
+        if mode == "decode":
+            y, new_state = ssm.mamba_decode(bp["mamba"], h, cfg, state)
+        else:
+            y, new_state = ssm.mamba_block(bp["mamba"], h, cfg,
+                                           state if mode == "decode" else None)
+    elif kind == "mlstm":
+        if mode == "decode":
+            y, new_state = ssm.mlstm_decode(bp["mlstm"], h, cfg, state)
+        else:
+            y, new_state = ssm.mlstm_block(bp["mlstm"], h, cfg, None)
+    elif kind == "slstm":
+        if mode == "decode":
+            y, new_state = ssm.slstm_decode(bp["slstm"], h, cfg, state)
+        else:
+            y, new_state = ssm.slstm_block(bp["slstm"], h, cfg, None)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    x = shard_act(x, ("act_batch", "act_seq", None))
+
+    if cross_ctx is not None:
+        hc = rms_norm(x, cross_ctx["norm"], cfg.norm_eps)
+        x = x + attn.cross_attention(cross_ctx["params"], hc, cross_ctx["kv"], cfg)
+
+    if kind in ("attn", "mamba"):
+        x = _ffn_half(bp, x, cfg, aux_acc)
+        x = shard_act(x, ("act_batch", "act_seq", None))
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+
+def _tree_index(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def run_decoder_stack(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mode: str,
+    caches: Any = None,            # pytree stacked along period axis (or None)
+    positions: jax.Array | None = None,
+    enc_out: jax.Array | None = None,
+    remat: str = "full",           # "full" | "none"
+    decode_seqsharded: bool = False,
+    scan_layers: bool = True,
+):
+    """Returns (x, new_caches, aux).  ``scan_layers=False`` unrolls the
+    period loop into straight-line HLO (used by the roofline calibration,
+    where while-loop bodies are cost-counted once)."""
+    pattern = cfg.pattern()
+    nper = cfg.n_periods()
+    blocks = params["blocks"]
+
+    cross_all = params.get("cross")
+    enc_kv_all = None
+    if cross_all is not None:
+        assert enc_out is not None or (caches is not None and "cross_kv" in caches)
+        if enc_out is not None:
+            # precompute per-period cross K/V from encoder output
+            def per_period(i):
+                p = _tree_index(cross_all["attn"], i)
+                return attn.encoder_kv(p, enc_out, cfg)
+            enc_kv_all = jax.vmap(per_period)(jnp.arange(nper)) if False else (
+                jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs),
+                    *[per_period(i) for i in range(nper)],
+                )
+            )
+        else:
+            enc_kv_all = caches["cross_kv"]
+
+    def period_body(x, per_inputs):
+        block_params, cache_slices, cross_slice = per_inputs
+        aux_acc: dict = {}
+        new_slices = {}
+        for i, kind in enumerate(pattern):
+            key = f"b{i}_{kind}"
+            cross_ctx = None
+            if cross_slice is not None:
+                cross_ctx = {
+                    "norm": cross_slice["norm"],
+                    "params": cross_slice["attn"],
+                    "kv": cross_slice["kv"],
+                }
+            x, ns = apply_block(
+                block_params[key], kind, x, cfg, mode,
+                None if cache_slices is None else cache_slices.get(key),
+                positions, aux_acc, cross_ctx, decode_seqsharded,
+            )
+            if ns is not None:
+                new_slices[key] = ns
+        return x, (new_slices, aux_acc)
+
+    if remat == "full":
+        period_body = jax.checkpoint(period_body)
+
+    body_caches = None if caches is None else {
+        k: v for k, v in caches.items() if k != "cross_kv"
+    }
+
+    def scan_body(carry, inp):
+        x = carry
+        idx = inp
+        block_params = _tree_index(blocks, idx)
+        cache_slices = None if body_caches is None else _tree_index(body_caches, idx)
+        cross_slice = None
+        if cross_all is not None:
+            cross_slice = {
+                "norm": cross_all["norm"][idx],
+                "attn": _tree_index(cross_all["attn"], idx),
+                "kv": _tree_index(enc_kv_all, idx),
+            }
+        x, (new_slices, aux) = period_body(x, (block_params, cache_slices, cross_slice))
+        return x, (new_slices, aux)
+
+    if scan_layers:
+        x, (new_caches, auxs) = jax.lax.scan(scan_body, x, jnp.arange(nper))
+        aux = {k: v.sum() for k, v in auxs.items()}
+    else:
+        per_slices, per_auxs = [], []
+        for i in range(nper):
+            x, (ns, aux_i) = scan_body(x, i)
+            per_slices.append(ns)
+            per_auxs.append(aux_i)
+        new_caches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_slices
+        ) if per_slices and per_slices[0] else {}
+        aux = {}
+        for a in per_auxs:
+            for k, v in a.items():
+                aux[k] = aux.get(k, 0.0) + v
+    if cross_all is not None and new_caches is not None:
+        new_caches = dict(new_caches)
+        new_caches["cross_kv"] = enc_kv_all
+    return x, new_caches, aux
+
+
+def run_encoder_stack(params: dict, x: jax.Array, cfg: ModelConfig,
+                      remat: str = "full", scan_layers: bool = True):
+    """Bidirectional encoder (enc-dec archs).  x: (B, T, d)."""
+    enc = params["encoder"]
+    bp_all = enc["blocks"]["b0_attn"]
+    B, T, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(x, bp):
+        h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = (h @ bp["attn"]["wq"]).reshape(B, T, H, hd)
+        k = (h @ bp["attn"]["wk"]).reshape(B, T, KV, hd)
+        v = (h @ bp["attn"]["wv"]).reshape(B, T, KV, hd)
+        q = attn.apply_rope(q, positions, cfg.rope_theta)
+        k = attn.apply_rope(k, positions, cfg.rope_theta)
+        mask = jnp.ones((T, T), bool)  # bidirectional
+        y = attn._gqa_core(q, k, v, mask, 1.0 / hd ** 0.5)
+        x = x + y.reshape(B, T, H * hd) @ bp["attn"]["wo"]
+        h2 = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        x = x + swiglu(h2, bp["mlp"]["w1"], bp["mlp"]["w3"], bp["mlp"]["w2"])
+        return x, None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    if scan_layers:
+        x, _ = jax.lax.scan(lambda c, i: body(c, _tree_index(bp_all, i)),
+                            x, jnp.arange(cfg.enc_layers))
+    else:
+        for i in range(cfg.enc_layers):
+            x, _ = body(x, _tree_index(bp_all, i))
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)

@@ -1,0 +1,5 @@
+from .optimizer import AdamWConfig, adamw_update, cosine_lr, global_norm, init_opt_state
+from . import compression
+
+__all__ = ["AdamWConfig", "adamw_update", "compression", "cosine_lr",
+           "global_norm", "init_opt_state"]

@@ -1,0 +1,106 @@
+"""Gradient compression for bandwidth-bound data parallelism.
+
+Two distributed-optimization tricks:
+
+* **Top-k sparsification with error feedback** (Deep Gradient Compression):
+  each worker keeps only the k largest-magnitude entries of its local
+  gradient, accumulating the residual locally so nothing is lost over time —
+  the all-reduce moves k values + k indices instead of the dense tensor.
+
+* **Int8 stochastic quantization**: dense but 4× fewer bytes than fp32 /
+  2× fewer than bf16, unbiased via stochastic rounding.
+
+Both are expressed as (compress, decompress) pairs usable inside
+``shard_map`` over the data axis; the train step wires them in when the
+Trevor-LM bridge decides the collective term dominates the roofline
+(comm-bound regime — exactly the paper's "shuffling-limited" diagnosis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKConfig:
+    density: float = 0.01   # fraction of entries kept
+    min_k: int = 16
+
+
+def topk_compress(g: jax.Array, err: jax.Array, cfg: TopKConfig):
+    """Returns ((values, indices), new_err).  ``err`` is the error-feedback
+    residual from previous steps (same shape as g)."""
+    flat = (g.astype(jnp.float32) + err.astype(jnp.float32)).reshape(-1)
+    k = max(cfg.min_k, int(flat.shape[0] * cfg.density))
+    k = min(k, flat.shape[0])
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    sel = flat[idx]
+    new_err = flat.at[idx].set(0.0).reshape(g.shape)
+    return (sel, idx), new_err
+
+
+def topk_decompress(payload, shape) -> jax.Array:
+    vals, idx = payload
+    n = 1
+    for s in shape:
+        n *= s
+    return jnp.zeros((n,), jnp.float32).at[idx].add(vals).reshape(shape)
+
+
+def topk_allreduce(g: jax.Array, err: jax.Array, cfg: TopKConfig, axis_name: str):
+    """Compressed all-reduce across ``axis_name`` (call inside shard_map):
+    each worker contributes its top-k; the sparse payloads are summed via
+    gather-and-scatter.  Returns (mean_gradient, new_err)."""
+    (vals, idx), new_err = topk_compress(g, err, cfg)
+    all_vals = jax.lax.all_gather(vals, axis_name)       # (W, k)
+    all_idx = jax.lax.all_gather(idx, axis_name)         # (W, k)
+    n = g.size
+    dense = jnp.zeros((n,), jnp.float32).at[all_idx.reshape(-1)].add(
+        all_vals.reshape(-1)
+    )
+    w = jax.lax.axis_size(axis_name)
+    return (dense / w).reshape(g.shape), new_err
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Config:
+    block: int = 2048  # per-block scales
+
+
+def int8_quantize(g: jax.Array, key: jax.Array, cfg: Int8Config):
+    """Blockwise stochastic int8 quantization: returns (q, scales)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % cfg.block
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, cfg.block)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    x = flat / scale
+    noise = jax.random.uniform(key, x.shape) - 0.5
+    q = jnp.clip(jnp.round(x + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compressed_mean_tree(grads: Any, errs: Any, cfg: TopKConfig, axis_name: str):
+    """Apply topk_allreduce leaf-wise over a gradient pytree."""
+    flat_g, tree = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(errs)
+    outs, new_errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        o, ne = topk_allreduce(g, e, cfg, axis_name)
+        outs.append(o.astype(g.dtype))
+        new_errs.append(ne)
+    return (
+        jax.tree_util.tree_unflatten(tree, outs),
+        jax.tree_util.tree_unflatten(tree, new_errs),
+    )

@@ -1,0 +1,105 @@
+"""AdamW with cosine schedule, global-norm clipping and mixed precision
+(bf16 params + fp32 master copies / moments in the optimizer state).
+
+Pure pytree functions — optimizer state shards exactly like the parameters
+(ZeRO: the launch plan maps the same logical axes), so m/v/master are
+distributed across the FSDP axes for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    use_master: bool = True       # keep fp32 master weights when params are low-precision
+    moments_dtype: str = "float32"  # "bfloat16" halves m/v memory (§Perf iter 4:
+                                    # makes 398B-class optimizer state fit 512 chips)
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.peak_lr * warm * frac
+
+
+def init_opt_state(cfg: AdamWConfig, params: Any) -> dict:
+    mdt = jnp.dtype(cfg.moments_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+    if cfg.use_master:
+        # copy=True: never alias the live params (donation safety)
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+        )
+    return state
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(
+    cfg: AdamWConfig, params: Any, grads: Any, state: dict
+) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moments_dtype)
+    new_m = jax.tree_util.tree_map(
+        lambda m, g: (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g).astype(mdt),
+        state["m"], grads,
+    )
+    new_v = jax.tree_util.tree_map(
+        lambda v, g: (cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g).astype(mdt),
+        state["v"], grads,
+    )
+
+    ref = state["master"] if cfg.use_master and "master" in state else params
+
+    def upd(p32, m, v):
+        p32 = p32.astype(jnp.float32)
+        u = (m.astype(jnp.float32) / b1c) / (
+            jnp.sqrt(v.astype(jnp.float32) / b2c) + cfg.eps
+        )
+        return p32 - lr * (u + cfg.weight_decay * p32)
+
+    new_master = jax.tree_util.tree_map(upd, ref, new_m, new_v)
+    new_params = jax.tree_util.tree_map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params
+    )
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if cfg.use_master and "master" in state:
+        new_state["master"] = new_master
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics

@@ -1,0 +1,76 @@
+"""Elastic scaling: Trevor's declarative allocator driving TPU capacity.
+
+The controller watches the serving/training load (tokens/sec), and — exactly
+like the paper's auto-scaler, but with ``lm_bridge`` cost models instead of
+cputil fits — emits re-mesh decisions in closed form.  Consolidated
+checkpoints (``repro.checkpoint``) make the re-mesh executable: restart with
+the new chip count and restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from ..core.lm_bridge import LMAllocation, LMWorkloadModel, allocate_chips
+
+
+@dataclasses.dataclass
+class ElasticEvent:
+    load_tokens_per_s: float
+    chips_before: int
+    chips_after: int
+    reason: str
+
+
+class ElasticController:
+    """Deadband-controlled chip-count planner (one per served model)."""
+
+    def __init__(
+        self,
+        model: LMWorkloadModel,
+        tokens_per_step: int,
+        headroom: float = 1.25,
+        deadband: float = 0.2,
+        min_chips: int = 8,
+        max_chips: int = 4096,
+        on_remesh: Callable[[ElasticEvent], None] | None = None,
+    ):
+        self.model = model
+        self.tokens_per_step = tokens_per_step
+        self.headroom = headroom
+        self.deadband = deadband
+        self.min_chips = min_chips
+        self.max_chips = max_chips
+        self.chips = min_chips
+        self.events: list[ElasticEvent] = []
+        self.on_remesh = on_remesh
+
+    def capacity_tokens_per_s(self, chips: int | None = None) -> float:
+        return self.model.tokens_per_second(
+            self.tokens_per_step, chips or self.chips
+        )
+
+    def observe(self, load_tokens_per_s: float) -> LMAllocation | None:
+        """Returns a new allocation when a re-mesh is warranted, else None."""
+        target = load_tokens_per_s * self.headroom
+        cap = self.capacity_tokens_per_s()
+        if cap > 0:
+            rel = abs(target - cap) / cap
+            scale_up_needed = target > cap
+            if rel < self.deadband and not scale_up_needed:
+                return None
+            if not scale_up_needed and target > cap / (1 + 2 * self.deadband):
+                return None  # avoid thrashing on the way down
+        alloc = allocate_chips(
+            self.model, target, self.tokens_per_step, max_chips=self.max_chips
+        )
+        chips = max(self.min_chips, min(alloc.chips, self.max_chips))
+        if chips == self.chips:
+            return None
+        ev = ElasticEvent(load_tokens_per_s, self.chips, chips,
+                          f"target={target:.0f}tok/s")
+        self.chips = chips
+        self.events.append(ev)
+        if self.on_remesh is not None:
+            self.on_remesh(ev)
+        return alloc

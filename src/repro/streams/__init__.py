@@ -1,0 +1,17 @@
+"""Stream-processing substrate: operators, workloads, load sources, the
+discrete-time cluster simulator, and the real JAX executor."""
+
+from .workloads import WORKLOADS, adanalytics, mobile_analytics, wordcount
+from .simulator import (
+    SimParams,
+    SimResult,
+    measure_capacity,
+    simulate,
+    training_sweep,
+)
+from . import sources
+
+__all__ = [
+    "WORKLOADS", "SimParams", "SimResult", "adanalytics", "measure_capacity",
+    "mobile_analytics", "simulate", "sources", "training_sweep", "wordcount",
+]

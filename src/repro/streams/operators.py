@@ -1,0 +1,213 @@
+"""Real, jittable stream-operator bodies.
+
+The simulator models *costs*; these functions are the actual computations the
+DAG nodes perform, used by the executor (:mod:`repro.streams.executor`) to
+process real tuple batches on device and to calibrate per-ktuple costs.
+
+A tuple batch is a dict of equal-length arrays (column format — the natural
+TPU-friendly layout for streams).  Every operator is
+``(state, batch) -> (state, batch)`` and jit-compatible; stateless operators
+ignore/return their state unchanged.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Batch = dict
+
+
+# -- WordCount ---------------------------------------------------------------
+
+
+def make_word_producer(vocab_size: int = 4096, batch: int = 2048):
+    """Emits (word_id, 1) tuples drawn uniformly from a finite vocabulary."""
+
+    @jax.jit
+    def step(key, _batch_unused=None):
+        key, sub = jax.random.split(key)
+        words = jax.random.randint(sub, (batch,), 0, vocab_size)
+        return key, {"key": words, "value": jnp.ones((batch,), jnp.int32)}
+
+    return step
+
+
+def make_counting_consumer(vocab_size: int = 4096):
+    """Maintains running counts per word (fields-grouped key-value store)."""
+
+    @jax.jit
+    def step(counts, batch: Batch):
+        counts = counts.at[batch["key"]].add(batch["value"])
+        return counts, {"key": batch["key"], "value": counts[batch["key"]]}
+
+    def init():
+        return jnp.zeros((vocab_size,), jnp.int32)
+
+    step.init = init  # type: ignore[attr-defined]
+    return step
+
+
+# -- Yahoo AdAnalytics (fig. 5) ----------------------------------------------
+
+EVENT_TYPES = 3  # view / click / purchase
+
+
+def make_ad_source(n_campaigns: int = 100, n_ads: int = 1000, batch: int = 2048):
+    @jax.jit
+    def step(key, _unused=None):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        ad_id = jax.random.randint(k1, (batch,), 0, n_ads)
+        ev_type = jax.random.randint(k2, (batch,), 0, EVENT_TYPES)
+        ts = jax.random.uniform(k3, (batch,)) * 1e6
+        return key, {"ad_id": ad_id, "event_type": ev_type, "ts": ts}
+
+    return step
+
+
+@jax.jit
+def event_deserializer(state, batch: Batch):
+    # byte-level "parse": cheap transformation of the raw columns
+    return state, {
+        "ad_id": batch["ad_id"].astype(jnp.int32),
+        "event_type": batch["event_type"].astype(jnp.int32),
+        "ts": batch["ts"].astype(jnp.float32),
+    }
+
+
+@jax.jit
+def event_filter(state, batch: Batch):
+    """Keep only 'view' events — about a third of the stream (γ ≈ 0.32)."""
+    keep = batch["event_type"] == 0
+    # column-format filtering with a validity mask (static shapes for jit)
+    return state, {**batch, "valid": keep}
+
+
+@jax.jit
+def event_projection(state, batch: Batch):
+    """Re-represent the event (γ = 1.0): drop ts, keep join key."""
+    return state, {
+        "ad_id": batch["ad_id"],
+        "valid": batch.get("valid", jnp.ones_like(batch["ad_id"], bool)),
+    }
+
+
+def make_redis_join(n_ads: int = 1000, n_campaigns: int = 100):
+    """Join ad_id -> campaign_id against an in-memory table (Redis stand-in)."""
+    table = jnp.arange(n_ads, dtype=jnp.int32) % n_campaigns
+
+    @jax.jit
+    def step(state, batch: Batch):
+        camp = table[batch["ad_id"]]
+        return state, {"campaign_id": camp, "valid": batch["valid"]}
+
+    return step
+
+
+def make_campaign_processor(n_campaigns: int = 100):
+    """Windowed per-campaign counters (fields-grouped)."""
+
+    @jax.jit
+    def step(counts, batch: Batch):
+        inc = batch["valid"].astype(jnp.int32)
+        counts = counts.at[batch["campaign_id"]].add(inc)
+        return counts, {"campaign_id": batch["campaign_id"], "count": counts[batch["campaign_id"]]}
+
+    def init():
+        return jnp.zeros((n_campaigns,), jnp.int32)
+
+    step.init = init  # type: ignore[attr-defined]
+    return step
+
+
+# -- Mobile-network user analytics (fig. 12) ----------------------------------
+
+
+def make_mobile_source(n_cells: int = 3000, n_users: int = 100_000, batch: int = 2048):
+    @jax.jit
+    def step(key, _unused=None):
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        return key, {
+            "user": jax.random.randint(k1, (batch,), 0, n_users),
+            "cell": jax.random.randint(k2, (batch,), 0, n_cells),
+            "bytes": jax.random.exponential(k3, (batch,)) * 1500.0,
+            "latency_ms": jax.random.gamma(k4, 2.0, (batch,)) * 10.0,
+        }
+
+    return step
+
+
+@jax.jit
+def log_parser(state, batch: Batch):
+    return state, {**batch, "kb": batch["bytes"] / 1024.0}
+
+
+def make_session_tracker(n_users: int = 100_000):
+    @jax.jit
+    def step(sessions, batch: Batch):
+        sessions = sessions.at[batch["user"]].add(batch["kb"])
+        return sessions, {**batch, "session_kb": sessions[batch["user"]]}
+
+    def init():
+        return jnp.zeros((n_users,), jnp.float32)
+
+    step.init = init  # type: ignore[attr-defined]
+    return step
+
+
+def make_cell_kpi(n_cells: int = 3000):
+    """Per-cell EWMA of latency — the RAN KPI aggregation stage."""
+
+    @jax.jit
+    def step(ewma, batch: Batch):
+        cell = batch["cell"]
+        cur = ewma[cell]
+        upd = 0.99 * cur + 0.01 * batch["latency_ms"]
+        ewma = ewma.at[cell].set(upd)
+        return ewma, {"cell": cell, "kpi": upd}
+
+    def init():
+        return jnp.zeros((n_cells,), jnp.float32)
+
+    step.init = init  # type: ignore[attr-defined]
+    return step
+
+
+@jax.jit
+def anomaly_detector(state, batch: Batch):
+    """Flag sessions 3σ above a running mean (cheap z-score filter)."""
+    mean, var, n = state
+    x = batch["session_kb"]
+    n_new = n + x.shape[0]
+    delta = x.mean() - mean
+    mean_new = mean + delta * x.shape[0] / n_new
+    var_new = var + ((x - mean) * (x - mean_new)).sum()
+    z = (x - mean_new) / jnp.sqrt(jnp.maximum(var_new / n_new, 1e-6))
+    return (mean_new, var_new, n_new), {**batch, "anomaly": z > 3.0}
+
+
+anomaly_detector_init = lambda: (jnp.asarray(0.0), jnp.asarray(1.0), jnp.asarray(1.0))
+
+
+@jax.jit
+def geo_mapper(state, batch: Batch):
+    """Map cell -> geohash bucket (integer mixing, pure map)."""
+    h = batch["cell"].astype(jnp.uint32)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    return state, {**batch, "geo": (h % 1024).astype(jnp.int32)}
+
+
+def make_report_sink(n_buckets: int = 1024):
+    @jax.jit
+    def step(acc, batch: Batch):
+        w = batch.get("anomaly", jnp.ones_like(batch["geo"], bool)).astype(jnp.float32)
+        acc = acc.at[batch["geo"]].add(w)
+        return acc, {"geo": batch["geo"]}
+
+    def init():
+        return jnp.zeros((n_buckets,), jnp.float32)
+
+    step.init = init  # type: ignore[attr-defined]
+    return step

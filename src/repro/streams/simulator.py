@@ -1,0 +1,463 @@
+"""Vectorized discrete-time cluster simulator — the "physical truth".
+
+This plays the role of the Heron cluster in the paper: it executes a
+:class:`~repro.core.dag.Configuration` tick by tick (a jitted ``lax.scan``)
+and emits exactly the runtime metrics Heron exposes (§4): per-instance tuple
+rates, ``cputil``, ``capacityutil``, sawtooth ``memutil``, ``gctime`` and
+``backpressure`` — plus the same metrics for every stream manager.
+
+The simulator deliberately contains *non-linear* physics that Trevor's linear
+models do NOT know about, reproducing the paper's observed phenomena:
+
+* every tuple crossing a container boundary traverses **two** stream managers
+  (the paper's key communication-cost insight),
+* container CPU contention (processor sharing) when packed instances plus the
+  stream manager demand more cores than the container has,
+* runtime-overhead threads: ``cputil`` can exceed 1.0 for a single-threaded
+  instance (§3.1.1's parenthetical observation),
+* stream-manager fan-out overhead: per-tuple routing cost grows mildly with
+  the number of remote peers (drives the over-parallelization drop of
+  Table 2 ID=9 / fig. 4c),
+* Heron-style spout backpressure gating with hysteresis,
+* JVM-style memory sawtooth with GC pauses (fig. 11),
+* multiplicative measurement noise.
+
+Because of these effects, Trevor's learned linear models are *approximations*
+— which is precisely the regime the paper evaluates (≈10 % prediction error,
+over-provisioning calibration, drift).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dag import Configuration, Grouping
+from ..core.metrics import STREAM_MANAGER, InstanceSamples, MetricsStore
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    """Physics of the simulated cluster."""
+
+    dt: float = 0.01                   # tick length (seconds)
+    sm_cost_per_ktuple: float = 1.0 / 724.0   # sec CPU per ktuple traversal
+    sm_fanout_coef: float = 0.015      # per-remote-peer routing overhead
+    cpu_overhead_mult: float = 1.12    # runtime helper threads (cputil > caputil)
+    noise_std: float = 0.03            # multiplicative per-tick cost noise
+    queue_high_ktuples: float = 50.0   # backpressure high watermark
+    queue_low_ktuples: float = 10.0    # resume watermark
+    gc_heap_mb: float = 512.0          # per-instance heap above live set
+    gc_cost_frac: float = 0.05         # gc time fraction while collecting
+    mem_alloc_mb_per_ktuple: float = 0.02
+    sample_every: int = 25             # ticks per metric sample
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimStructure:
+    """Static arrays describing one configuration (host-side, numpy)."""
+
+    config: Configuration
+    n_inst: int
+    n_cont: int
+    node_of: np.ndarray          # (n_inst,) node index
+    cont_of: np.ndarray          # (n_inst,) container index
+    is_source: np.ndarray        # (n_inst,) bool
+    busy_cost: np.ndarray        # (n_inst,) sec per ktuple (capacity cost)
+    cpu_cost: np.ndarray         # (n_inst,) CPU-sec per ktuple (on-CPU, incl. overhead)
+    gamma: np.ndarray            # (n_inst,)
+    mem_base: np.ndarray         # (n_inst,) MB
+    mem_slope: np.ndarray        # (n_inst,) MB per ktps
+    W: np.ndarray                # (n_inst, n_inst) routing weights (copies per output tuple)
+    remote: np.ndarray           # (n_inst, n_inst) bool, cross-container
+    cont_cpus: np.ndarray        # (n_cont,)
+    cont_mem: np.ndarray         # (n_cont,)
+    sm_cost_eff: np.ndarray      # (n_cont,) per-traversal SM cost incl. fan-out overhead
+    rowsum_W: np.ndarray         # (n_inst,)
+    node_names: list[str]
+
+
+def build_structure(config: Configuration, params: SimParams) -> SimStructure:
+    dag = config.dag
+    instances = config.instances()
+    n_inst = len(instances)
+    n_cont = config.n_containers
+    name_to_idx = {n: i for i, n in enumerate(dag.node_names)}
+    node_of = np.array([name_to_idx[nm] for nm, _c, _s in instances], np.int32)
+    cont_of = np.array([c for _n, c, _s in instances], np.int32)
+    src_names = {s.name for s in dag.sources()}
+    is_source = np.array([nm in src_names for nm, _c, _s in instances])
+
+    specs = [dag.node(nm) for nm, _c, _s in instances]
+    busy_cost = np.array([s.cpu_cost_per_ktuple for s in specs])
+    cpu_cost = np.array(
+        [s.cpu_cost_per_ktuple * (1.0 - s.io_fraction) * params.cpu_overhead_mult for s in specs]
+    )
+    gamma = np.array([s.gamma for s in specs])
+    mem_base = np.array([s.mem_mb_base for s in specs])
+    mem_slope = np.array([s.mem_mb_per_ktps for s in specs])
+
+    inst_of_node: dict[str, list[int]] = {}
+    for i, (nm, _c, _s) in enumerate(instances):
+        inst_of_node.setdefault(nm, []).append(i)
+
+    W = np.zeros((n_inst, n_inst))
+    for e in dag.edges:
+        ups = inst_of_node.get(e.src, [])
+        downs = inst_of_node.get(e.dst, [])
+        if not ups or not downs:
+            raise ValueError(f"edge {e.src}->{e.dst} lacks instances")
+        w = 1.0 if e.grouping is Grouping.ALL else 1.0 / len(downs)
+        for p in ups:
+            for q in downs:
+                W[p, q] += w
+    remote = cont_of[:, None] != cont_of[None, :]
+
+    # fan-out overhead: number of distinct remote peer containers each SM talks to
+    sm_cost_eff = np.zeros(n_cont)
+    for c in range(n_cont):
+        peers = set()
+        for p in range(n_inst):
+            if cont_of[p] != c:
+                continue
+            for q in range(n_inst):
+                if W[p, q] > 0 and cont_of[q] != c:
+                    peers.add(int(cont_of[q]))
+        for q in range(n_inst):
+            if cont_of[q] != c:
+                continue
+            for p in range(n_inst):
+                if W[p, q] > 0 and cont_of[p] != c:
+                    peers.add(int(cont_of[p]))
+        sm_cost_eff[c] = params.sm_cost_per_ktuple * (1.0 + params.sm_fanout_coef * len(peers))
+
+    return SimStructure(
+        config=config,
+        n_inst=n_inst,
+        n_cont=n_cont,
+        node_of=node_of,
+        cont_of=cont_of,
+        is_source=is_source,
+        busy_cost=busy_cost,
+        cpu_cost=cpu_cost,
+        gamma=gamma,
+        mem_base=mem_base,
+        mem_slope=mem_slope,
+        W=W,
+        remote=remote,
+        cont_cpus=np.array([d.cpus for d in config.dims]),
+        cont_mem=np.array([d.mem_mb for d in config.dims]),
+        sm_cost_eff=sm_cost_eff,
+        rowsum_W=W.sum(axis=1),
+        node_names=list(dag.node_names),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The tick kernel (pure JAX; scanned)
+# ---------------------------------------------------------------------------
+
+
+def _one_hot(cont_of: jnp.ndarray, n_cont: int) -> jnp.ndarray:
+    return (cont_of[:, None] == jnp.arange(n_cont)[None, :]).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("n_ticks", "sample_every"))
+def _simulate(
+    arrays: dict,
+    offered_per_tick: jnp.ndarray,  # (n_ticks,) total source ktuples per tick
+    n_ticks: int,
+    sample_every: int,
+    dt: float,
+    noise_std: float,
+    q_high: float,
+    q_low: float,
+    gc_heap: float,
+    gc_cost: float,
+    mem_alloc: float,
+    seed: int,
+):
+    W = arrays["W"]
+    remote = arrays["remote"]
+    busy_cost = arrays["busy_cost"]
+    cpu_cost = arrays["cpu_cost"]
+    gamma = arrays["gamma"]
+    is_source = arrays["is_source"]
+    cont_cpus = arrays["cont_cpus"]
+    sm_cost_eff = arrays["sm_cost_eff"]
+    mem_base = arrays["mem_base"]
+    mem_slope = arrays["mem_slope"]
+    C = _one_hot(arrays["cont_of"], cont_cpus.shape[0])  # (I, K)
+    n_inst = W.shape[0]
+    n_src = jnp.maximum(is_source.sum(), 1)
+    rowsum = W.sum(axis=1)
+
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, n_ticks)
+
+    def tick(state, inp):
+        qin, qout, mem, admit, sm_cpu_prev = state
+        offered, k = inp
+        noise = 1.0 + noise_std * jax.random.normal(k, (n_inst,))
+        noise = jnp.clip(noise, 0.7, 1.3)
+        busy = busy_cost * noise
+
+        # 1) spouts are pull-based: they admit min(offered, admit) per tick;
+        #    ``admit`` is the backpressure-driven rate limit (token bucket).
+        admitted = jnp.minimum(offered, admit)
+        src_want = admitted / n_src
+
+        # 2) desired processing, limited by single-thread capacity
+        cap_tuples = dt / jnp.maximum(busy, 1e-9)
+        want = jnp.where(is_source, jnp.minimum(src_want, cap_tuples),
+                         jnp.minimum(qin, cap_tuples))
+
+        # 3) container CPU contention (incl. last tick's SM CPU)
+        demand = C.T @ (want * cpu_cost) + sm_cpu_prev  # (K,) CPU-seconds
+        scale_c = jnp.minimum(1.0, cont_cpus * dt / jnp.maximum(demand, 1e-9))
+        proc = want * (C @ scale_c)
+        qin = qin - jnp.where(is_source, 0.0, proc)
+        out_copies = proc * gamma * rowsum
+        qout = qout + out_copies
+
+        # 4) SM transfer with per-container capacity
+        #    desired flow matrix if everything in qout were released this tick
+        share = W / jnp.maximum(rowsum, 1e-9)[:, None]
+        F_want = qout[:, None] * share                      # (I, I) copies
+        orig_c = C.T @ F_want.sum(axis=1)                   # per-source-SM traversals
+        arr_c = ((F_want * remote).sum(axis=0)) @ C         # per-dest-SM net arrivals
+        sm_budget = dt / jnp.maximum(sm_cost_eff, 1e-9)     # traversals per tick
+        s_c = jnp.minimum(1.0, sm_budget / jnp.maximum(orig_c + arr_c, 1e-9))
+        s_src = C @ s_c
+        s_dst = C @ s_c
+        # a flow is limited by the slowest SM on its path (source SM always;
+        # destination SM only when crossing containers)
+        eff = jnp.minimum(s_src[:, None], jnp.where(remote, s_dst[None, :], 1.0))
+        F = F_want * eff
+        delivered_from = F.sum(axis=1)
+        qout = qout - delivered_from
+        qin = qin + jnp.where(is_source, 0.0, F.sum(axis=0))
+
+        # SM CPU consumed this tick (feeds next tick's contention)
+        trav_c = C.T @ F.sum(axis=1) + (F * remote).sum(axis=0) @ C
+        sm_cpu = trav_c * sm_cost_eff
+
+        # 5) memory sawtooth + GC
+        mem_live = mem_base + mem_slope * (proc / dt)
+        mem = jnp.maximum(mem + proc * mem_alloc, mem_live)
+        gc_trigger = mem > (mem_live + gc_heap)
+        mem = jnp.where(gc_trigger, mem_live, mem)
+
+        # 6) spout throttle: Heron-style backpressure adjusts the admission
+        #    rate multiplicatively (gentle steps -> tight equilibrium at the
+        #    sustainable rate); growth only once queues have drained.
+        congested = (qin.max() > q_high) | (qout.max() > q_high)
+        relaxed = (qin.max() < q_low) & (qout.max() < q_low)
+        admit = jnp.where(
+            congested, admit * 0.98, jnp.where(relaxed, admit * 1.02, admit)
+        )
+        admit = jnp.clip(admit, 1e-3, 1e9)
+
+        metrics = dict(
+            proc=proc,
+            out=proc * gamma,
+            caputil=proc * busy / dt,
+            cputil=proc * cpu_cost / dt,
+            mem=mem,
+            gc=gc_trigger.astype(jnp.float32) * gc_cost,
+            bp=jnp.where(is_source, (admitted < 0.98 * offered).astype(jnp.float32),
+                         (qin > q_high).astype(jnp.float32)),
+            sm_trav=trav_c,
+            sm_cpu=sm_cpu / dt,
+            gate=admit,
+        )
+        return (qin, qout, mem, admit, sm_cpu), metrics
+
+    # initial admission: start LOW and grow multiplicatively — approaching the
+    # ceiling from below avoids flooding deep pipelines with backlog that
+    # takes the whole run to drain (slow-start, like TCP)
+    src_cap0 = jnp.where(is_source, dt / jnp.maximum(busy_cost, 1e-9), 0.0).sum()
+    state0 = (
+        jnp.zeros(n_inst),
+        jnp.zeros(n_inst),
+        mem_base + 0.0,
+        src_cap0 * 0.05,
+        jnp.zeros(cont_cpus.shape[0]),
+    )
+    _, traj = jax.lax.scan(tick, state0, (offered_per_tick, keys))
+
+    # windowed averaging into samples
+    n_samples = n_ticks // sample_every
+    def avg(x):
+        x = x[: n_samples * sample_every]
+        return x.reshape(n_samples, sample_every, *x.shape[1:]).mean(axis=1)
+
+    return {k: avg(v) for k, v in traj.items()}
+
+
+# ---------------------------------------------------------------------------
+# Host-side API
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimResult:
+    structure: SimStructure
+    params: SimParams
+    samples: dict                      # windowed metric arrays
+    offered_ktps: np.ndarray           # per-sample offered load
+
+    @property
+    def achieved_ktps(self) -> float:
+        """Steady-state delivered source rate (mean of second half)."""
+        proc = np.asarray(self.samples["proc"])          # (S, I) ktuples/tick
+        src = np.asarray(self.structure.is_source)
+        per_tick = proc[:, src].sum(axis=1)
+        half = per_tick[len(per_tick) // 2 :]
+        return float(half.mean() / self.params.dt)
+
+    def bottleneck_node(self) -> str | None:
+        """Most saturated node (by mean caputil over the last half); the
+        stream manager is reported when it dominates."""
+        cap = np.asarray(self.samples["caputil"])
+        half = cap[cap.shape[0] // 2 :].mean(axis=0)
+        node_names = self.structure.node_names
+        per_node: dict[str, float] = {}
+        for i, n in enumerate(self.structure.node_of):
+            nm = node_names[int(n)]
+            per_node[nm] = max(per_node.get(nm, 0.0), float(half[i]))
+        sm_cap = np.asarray(self.samples["sm_cpu"])
+        sm_busy = sm_cap[sm_cap.shape[0] // 2 :].mean(axis=0).max() if sm_cap.size else 0.0
+        name, val = max(per_node.items(), key=lambda kv: kv[1])
+        if sm_busy > val and sm_busy > 0.9:
+            return STREAM_MANAGER
+        return name if val > 0.8 else name
+
+    def to_metrics_store(self) -> MetricsStore:
+        """Package the trajectory as Heron-style metric timeseries."""
+        store = MetricsStore()
+        st = self.structure
+        dt = self.params.dt
+        proc = np.asarray(self.samples["proc"]) / dt       # ktps in
+        out = np.asarray(self.samples["out"]) / dt         # ktps out
+        cpu = np.asarray(self.samples["cputil"])
+        cap = np.asarray(self.samples["caputil"])
+        mem = np.asarray(self.samples["mem"])
+        gc = np.asarray(self.samples["gc"])
+        bp = np.asarray(self.samples["bp"])
+        for i in range(st.n_inst):
+            nm = st.node_names[int(st.node_of[i])]
+            store.add(
+                InstanceSamples(
+                    node=nm,
+                    container=int(st.cont_of[i]),
+                    slot=i,
+                    rate_in_ktps=proc[:, i],
+                    rate_out_ktps=out[:, i],
+                    cputil=cpu[:, i],
+                    caputil=cap[:, i],
+                    memutil_mb=mem[:, i],
+                    gctime=gc[:, i],
+                    backpressure=bp[:, i],
+                )
+            )
+        trav = np.asarray(self.samples["sm_trav"]) / dt     # traversal ktps
+        smc = np.asarray(self.samples["sm_cpu"])
+        for c in range(st.n_cont):
+            store.add(
+                InstanceSamples(
+                    node=STREAM_MANAGER,
+                    container=c,
+                    slot=-1,
+                    rate_in_ktps=trav[:, c],
+                    rate_out_ktps=trav[:, c],
+                    cputil=smc[:, c],
+                    caputil=smc[:, c],
+                    memutil_mb=np.full(trav.shape[0], 256.0),
+                    gctime=np.zeros(trav.shape[0]),
+                    backpressure=np.zeros(trav.shape[0]),
+                )
+            )
+        return store
+
+
+def simulate(
+    config: Configuration,
+    offered_ktps,
+    duration_s: float = 20.0,
+    params: SimParams = SimParams(),
+) -> SimResult:
+    """Run ``config`` under ``offered_ktps`` (scalar or per-sample array)."""
+    st = build_structure(config, params)
+    n_ticks = int(duration_s / params.dt)
+    n_ticks = (n_ticks // params.sample_every) * params.sample_every
+    offered = np.asarray(offered_ktps, np.float64)
+    if offered.ndim == 0:
+        per_tick = np.full(n_ticks, float(offered) * params.dt)
+    else:
+        # piecewise-constant load trace stretched over the run
+        reps = int(np.ceil(n_ticks / offered.shape[0]))
+        per_tick = np.repeat(offered, reps)[:n_ticks] * params.dt
+
+    arrays = dict(
+        W=jnp.asarray(st.W, jnp.float32),
+        remote=jnp.asarray(st.remote),
+        busy_cost=jnp.asarray(st.busy_cost, jnp.float32),
+        cpu_cost=jnp.asarray(st.cpu_cost, jnp.float32),
+        gamma=jnp.asarray(st.gamma, jnp.float32),
+        is_source=jnp.asarray(st.is_source),
+        cont_of=jnp.asarray(st.cont_of),
+        cont_cpus=jnp.asarray(st.cont_cpus, jnp.float32),
+        sm_cost_eff=jnp.asarray(st.sm_cost_eff, jnp.float32),
+        mem_base=jnp.asarray(st.mem_base, jnp.float32),
+        mem_slope=jnp.asarray(st.mem_slope, jnp.float32),
+    )
+    samples = _simulate(
+        arrays,
+        jnp.asarray(per_tick, jnp.float32),
+        n_ticks=n_ticks,
+        sample_every=params.sample_every,
+        dt=params.dt,
+        noise_std=params.noise_std,
+        q_high=params.queue_high_ktuples,
+        q_low=params.queue_low_ktuples,
+        gc_heap=params.gc_heap_mb,
+        gc_cost=params.gc_cost_frac,
+        mem_alloc=params.mem_alloc_mb_per_ktuple,
+        seed=params.seed,
+    )
+    samples = {k: np.asarray(v) for k, v in samples.items()}
+    n_samples = n_ticks // params.sample_every
+    off = per_tick[: n_samples * params.sample_every].reshape(n_samples, -1).mean(1) / params.dt
+    return SimResult(structure=st, params=params, samples=samples, offered_ktps=off)
+
+
+def measure_capacity(
+    config: Configuration,
+    params: SimParams = SimParams(),
+    duration_s: float = 20.0,
+    overload_ktps: float = 1e6,
+) -> float:
+    """The 'measured rate' of a configuration: offered load far above capacity,
+    backpressure gating throttles spouts, steady-state admission = capacity."""
+    return simulate(config, overload_ktps, duration_s, params).achieved_ktps
+
+
+def training_sweep(
+    config: Configuration,
+    rates_ktps,
+    params: SimParams = SimParams(),
+    seconds_per_rate: float = 10.0,
+) -> MetricsStore:
+    """The paper's profiling procedure (§5.1): sweep a throttled producer over
+    a range of rates with hold times, collect metrics at each level."""
+    store = MetricsStore()
+    for i, r in enumerate(rates_ktps):
+        p = dataclasses.replace(params, seed=params.seed + 1000 + i)
+        res = simulate(config, float(r), seconds_per_rate, p)
+        store.extend(res.to_metrics_store())
+    return store

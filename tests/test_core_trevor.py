@@ -1,0 +1,352 @@
+"""Core Trevor behaviour: DAG spec, node models, flow solver, allocator,
+calibration — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    STREAM_MANAGER,
+    Configuration,
+    ContainerDim,
+    DagSpec,
+    EdgeSpec,
+    Grouping,
+    NodeSpec,
+    allocate,
+    classify_bound,
+    fit_node,
+    linear_fit,
+    oracle_models,
+    propagate_rates,
+    round_robin_configuration,
+    single_container_configuration,
+    solve_flow,
+)
+from repro.core.calibration import Calibrator
+from repro.core.metrics import InstanceSamples
+from repro.core.node_model import ResourceClass, sawtooth_floor
+
+
+def chain_dag(costs=(1 / 800, 1 / 600), gammas=(1.0, 1.0)) -> DagSpec:
+    nodes = [
+        NodeSpec("n0", costs[0], gamma=gammas[0], is_source=True),
+    ]
+    edges = []
+    for i in range(1, len(costs)):
+        nodes.append(NodeSpec(f"n{i}", costs[i], gamma=gammas[i]))
+        edges.append(EdgeSpec(f"n{i-1}", f"n{i}", Grouping.FIELDS))
+    return DagSpec("chain", tuple(nodes), tuple(edges))
+
+
+# ---------------------------------------------------------------- DAG spec
+
+
+def test_dag_rejects_cycles():
+    n = (NodeSpec("a", 0.1, is_source=True), NodeSpec("b", 0.1))
+    with pytest.raises(ValueError):
+        DagSpec("bad", n, (EdgeSpec("a", "b"), EdgeSpec("b", "a")))
+
+
+def test_dag_rejects_duplicate_names():
+    with pytest.raises(ValueError):
+        DagSpec("bad", (NodeSpec("a", 0.1), NodeSpec("a", 0.2)), ())
+
+
+def test_topological_order_and_rates():
+    dag = chain_dag(costs=(1 / 800, 1 / 600, 1 / 400), gammas=(1.0, 0.5, 1.0))
+    assert dag.topological_order() == ("n0", "n1", "n2")
+    rates = dag.gamma_rates(100.0)
+    assert rates["n0"] == pytest.approx(100.0)
+    assert rates["n1"] == pytest.approx(100.0)
+    assert rates["n2"] == pytest.approx(50.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    g0=st.floats(0.1, 3.0),
+    g1=st.floats(0.1, 3.0),
+    rate=st.floats(1.0, 1000.0),
+)
+def test_property_rate_propagation_multiplicative(g0, g1, rate):
+    dag = chain_dag(costs=(1e-3, 1e-3, 1e-3), gammas=(g0, g1, 1.0))
+    rates = propagate_rates(dag, rate, {"n0": g0, "n1": g1, "n2": 1.0})
+    assert rates["n2"] == pytest.approx(rate * g0 * g1, rel=1e-9)
+
+
+def test_fanout_rates_sum():
+    # source -> {a, b}, a -> sink, b -> sink: sink input = out(a) + out(b)
+    nodes = (
+        NodeSpec("s", 1e-3, gamma=1.0, is_source=True),
+        NodeSpec("a", 1e-3, gamma=0.5),
+        NodeSpec("b", 1e-3, gamma=2.0),
+        NodeSpec("k", 1e-3, gamma=0.0),
+    )
+    edges = (
+        EdgeSpec("s", "a"), EdgeSpec("s", "b"),
+        EdgeSpec("a", "k"), EdgeSpec("b", "k"),
+    )
+    dag = DagSpec("fan", nodes, edges)
+    rates = dag.gamma_rates(10.0)
+    assert rates["k"] == pytest.approx(10 * 0.5 + 10 * 2.0)
+
+
+# ---------------------------------------------------------------- node models
+
+
+def _mk_samples(rate, cpu, cap=None, out=None, mem=None, gc=None, bp=None):
+    n = len(rate)
+    return InstanceSamples(
+        node="x", container=0, slot=0,
+        rate_in_ktps=np.asarray(rate, float),
+        rate_out_ktps=np.asarray(out if out is not None else rate, float),
+        cputil=np.asarray(cpu, float),
+        caputil=np.asarray(cap if cap is not None else cpu, float),
+        memutil_mb=np.asarray(mem if mem is not None else np.full(n, 100.0), float),
+        gctime=np.asarray(gc if gc is not None else np.zeros(n), float),
+        backpressure=np.asarray(bp if bp is not None else np.zeros(n), float),
+    )
+
+
+def test_linear_fit_recovers_slope():
+    x = np.linspace(10, 500, 50)
+    y = 0.002 * x + 0.05
+    fit = linear_fit(x, y)
+    assert fit.slope == pytest.approx(0.002, rel=1e-6)
+    assert fit.intercept == pytest.approx(0.05, abs=1e-6)
+    assert fit.r2 == pytest.approx(1.0)
+
+
+def test_gamma_recovery():
+    rng = np.random.default_rng(0)
+    rate = np.linspace(50, 600, 80)
+    out = 0.32 * rate * (1 + 0.02 * rng.standard_normal(80))
+    s = _mk_samples(rate, 0.001 * rate, out=out)
+    m = fit_node(s)
+    assert m.gamma == pytest.approx(0.32, rel=0.02)
+
+
+def test_sawtooth_floor_extraction():
+    # synthetic sawtooth: grows then drops sharply
+    t = np.arange(200)
+    mem = 100 + (t % 40) * 5.0
+    idx = sawtooth_floor(mem)
+    assert (mem[idx] <= 105).all()
+
+
+def test_io_bound_classification():
+    rate = np.linspace(100, 900, 60)
+    cap = rate / 900.0
+    cpu = 0.4 * cap  # CPU plateaus below capacity: IO-bound
+    s = _mk_samples(rate, cpu, cap=cap)
+    m = fit_node(s)
+    assert m.resource_class == ResourceClass.IO_BOUND
+    # capacity model still limits throughput
+    assert m.peak_rate_ktps == pytest.approx(900.0, rel=0.05)
+
+
+def test_backpressure_marks_saturated():
+    rate = np.linspace(100, 900, 60)
+    bp = np.where(rate > 800, 0.5, 0.0)
+    s = _mk_samples(rate, 0.001 * rate, bp=bp)
+    m = fit_node(s)
+    assert m.resource_class == ResourceClass.SATURATED_MISCALIBRATED
+
+
+# ---------------------------------------------------------------- flow solver
+
+
+def _wc_models(sm_peak=724.0):
+    dag = DagSpec(
+        "wc",
+        (
+            NodeSpec("W", 1 / 839, gamma=1.0, is_source=True),
+            NodeSpec("C", 1 / 658, gamma=0.0),
+        ),
+        (EdgeSpec("W", "C", Grouping.FIELDS),),
+    )
+    return dag, oracle_models(dag, sm_cost_per_ktuple=1 / sm_peak)
+
+
+def test_flow_single_edge_separate_containers():
+    dag, models = _wc_models()
+    cfg = Configuration(dag, packing=(("W",), ("C",)))
+    sol = solve_flow(cfg, models)
+    assert sol.feasible
+    assert sol.rate_ktps == pytest.approx(658.0, rel=1e-6)
+    assert classify_bound(sol) == "compute"
+
+
+def test_flow_copacked_is_comm_bound():
+    dag, models = _wc_models()
+    cfg = Configuration(dag, packing=(("W", "C"), ("W", "C")))
+    sol = solve_flow(cfg, models)
+    # fields-grouping: half the tuples cross containers; each SM carries 1.5r
+    assert sol.rate_ktps == pytest.approx(724 / 1.5 * 2, rel=1e-6)
+    assert classify_bound(sol) == "comm"
+
+
+def test_flow_cross_container_counts_twice():
+    dag, models = _wc_models()
+    cfg = Configuration(dag, packing=(("W", "W"), ("C", "C")))
+    sol = solve_flow(cfg, models)
+    # everything crosses: SM traversals == rate on both sides
+    assert sol.rate_ktps == pytest.approx(724.0, rel=1e-6)
+    assert sol.cross_container_ktps == pytest.approx(sol.rate_ktps, rel=1e-6)
+
+
+def test_flow_memory_infeasible():
+    dag, models = _wc_models()
+    tiny = ContainerDim(cpus=3.0, mem_mb=32.0)
+    cfg = Configuration(dag, packing=(("W", "C"),), dims=(tiny,))
+    sol = solve_flow(cfg, models)
+    assert not sol.feasible
+
+
+def test_flow_gamma_scales_downstream_load():
+    # filter with gamma 0.1 -> downstream nearly free
+    dag = DagSpec(
+        "g",
+        (
+            NodeSpec("s", 1 / 500, gamma=0.1, is_source=True),
+            NodeSpec("t", 1 / 100, gamma=0.0),
+        ),
+        (EdgeSpec("s", "t", Grouping.SHUFFLE),),
+    )
+    models = oracle_models(dag, sm_cost_per_ktuple=1 / 5000)
+    cfg = Configuration(dag, packing=(("s",), ("t",)))
+    sol = solve_flow(cfg, models)
+    # t sees 0.1x the rate; its capacity 100 ktps allows s up to 500 (its own peak)
+    assert sol.rate_ktps == pytest.approx(500.0, rel=1e-6)
+
+
+def test_flow_all_grouping_broadcast():
+    dag = DagSpec(
+        "b",
+        (
+            NodeSpec("s", 1 / 1000, gamma=1.0, is_source=True),
+            NodeSpec("t", 1 / 1000, gamma=0.0),
+        ),
+        (EdgeSpec("s", "t", Grouping.ALL),),
+    )
+    models = oracle_models(dag, sm_cost_per_ktuple=1 / 1e9)
+    # two consumers, each receives the FULL stream
+    cfg = Configuration(dag, packing=(("s",), ("t",), ("t",)))
+    sol = solve_flow(cfg, models)
+    assert sol.rate_ktps == pytest.approx(1000.0, rel=1e-4)
+    # each t instance processes the full rate (not half)
+    t_rates = [r for (nm, c, s), r in sol.instance_rates.items() if nm == "t"]
+    for r in t_rates:
+        assert r == pytest.approx(1000.0, rel=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    w_peak=st.floats(200, 2000),
+    c_peak=st.floats(200, 2000),
+    sm_peak=st.floats(200, 2000),
+)
+def test_property_separate_containers_rate_is_min(w_peak, c_peak, sm_peak):
+    """(w) -> (c): rate = min(R_w, R_c, R_sm) — every tuple crosses once."""
+    dag = DagSpec(
+        "wc",
+        (
+            NodeSpec("W", 1 / w_peak, gamma=1.0, is_source=True),
+            NodeSpec("C", 1 / c_peak, gamma=0.0),
+        ),
+        (EdgeSpec("W", "C", Grouping.FIELDS),),
+    )
+    models = oracle_models(dag, sm_cost_per_ktuple=1 / sm_peak)
+    cfg = Configuration(dag, packing=(("W",), ("C",)),
+                        dims=(ContainerDim(cpus=8),) * 2)
+    sol = solve_flow(cfg, models)
+    assert sol.rate_ktps == pytest.approx(min(w_peak, c_peak, sm_peak), rel=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(nW=st.integers(1, 4), nC=st.integers(1, 4))
+def test_property_more_instances_never_hurts_lp(nW, nC):
+    """In the LP (no interference physics), adding instances with fresh
+    containers never reduces the predicted rate."""
+    dag, models = _wc_models()
+    base = Configuration(dag, packing=tuple([("W",)] * nW + [("C",)] * nC))
+    more = Configuration(dag, packing=tuple([("W",)] * nW + [("C",)] * (nC + 1)))
+    r0 = solve_flow(base, models).rate_ktps
+    r1 = solve_flow(more, models).rate_ktps
+    assert r1 >= r0 - 1e-6
+
+
+# ---------------------------------------------------------------- allocator
+
+
+def test_allocator_meets_target_in_lp():
+    dag, models = _wc_models()
+    for target in (500.0, 1500.0, 4000.0):
+        res = allocate(dag, models, target)
+        sol = solve_flow(res.config, models)
+        assert sol.feasible
+        assert sol.rate_ktps >= target * 0.999, (target, sol.rate_ktps)
+
+
+def test_allocator_efficiency_vs_round_robin():
+    """Trevor's allocation should need no more CPU than naive round-robin
+    packing achieving the same rate (AdAnalytics-style multi-node DAG)."""
+    from repro.streams import adanalytics
+
+    dag = adanalytics()
+    models = oracle_models(dag, sm_cost_per_ktuple=1 / 724)
+    target = 1000.0
+    res = allocate(dag, models, target)
+    assert solve_flow(res.config, models).rate_ktps >= target * 0.999
+
+    # round robin: grow parallelism uniformly until the LP says target met
+    dim = ContainerDim(cpus=3.0, mem_mb=4096.0)
+    rr_cpus = None
+    for p in range(1, 40):
+        par = {n: p for n in dag.node_names}
+        n_cont = max(1, (sum(par.values()) + 1) // 2)
+        cfg = round_robin_configuration(dag, par, n_cont, dim)
+        if solve_flow(cfg, models).rate_ktps >= target:
+            rr_cpus = cfg.total_cpus()
+            break
+    assert rr_cpus is not None
+    assert res.total_cpus <= rr_cpus * 1.1
+
+
+def test_allocator_alpha_scaling_respects_dim():
+    dag, models = _wc_models()
+    pref = ContainerDim(cpus=2.0, mem_mb=2048.0)
+    res = allocate(dag, models, 2000.0, preferred_dim=pref)
+    for d in res.config.dims:
+        assert d.cpus <= pref.cpus + 1e-9
+
+
+def test_allocator_linear_complexity_smoke():
+    # 12-node chain allocates instantly (closed form)
+    import time
+
+    costs = tuple(1 / r for r in np.linspace(400, 1500, 12))
+    dag = chain_dag(costs=costs, gammas=(1.0,) * 12)
+    models = oracle_models(dag, sm_cost_per_ktuple=1 / 724)
+    t0 = time.perf_counter()
+    res = allocate(dag, models, 900.0)
+    assert time.perf_counter() - t0 < 1.0  # the paper's < 1 s claim
+    assert res.config.n_containers >= 1
+
+
+# ---------------------------------------------------------------- calibration
+
+
+def test_calibrator_overprovision_factor():
+    cal = Calibrator()
+    cal.observe_prediction(1050.0, 965.0)  # the paper's worked example
+    assert cal.overprovision_factor == pytest.approx(1050 / 965, rel=1e-6)
+
+
+def test_calibrator_drift_detection():
+    cal = Calibrator(drift_threshold=0.25)
+    for _ in range(3):
+        cal.observe_prediction(2000.0, 1000.0)  # 2x off -> drift
+    assert cal.drift_detected()
+    cal.mark_retrained()
+    assert not cal.drift_detected()
+    assert cal.retrain_count == 1

@@ -1,0 +1,196 @@
+"""Distributed-execution tests on a subprocess with 8 fake host devices:
+real (not just lowered) sharded train steps, sharding-plan invariants,
+compressed all-reduce under shard_map, and serving."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_train_step_executes_and_matches_single_device():
+    """A 2x2-mesh sharded train step produces the same loss as the
+    single-device step (DP+TP correctness, executed not just compiled)."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, json
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config, ShapeConfig
+        from repro.models import build_model
+        from repro.models.common import axis_rules, param_specs
+        from repro.launch import sharding as shlib
+        from repro.launch.mesh import make_debug_mesh
+
+        cfg = get_config("llama3-8b@smoke")
+        shape = ShapeConfig("t", 64, 4, "train")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0, cfg.vocab),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 64), 0, cfg.vocab),
+        }
+        ref, _ = jax.jit(model.loss_fn)(params, batch)
+
+        mesh = make_debug_mesh(2, 2)
+        plan = shlib.PlanConfig(tp=2, dp=2)
+        rules = shlib.make_rules(cfg, shape, plan)
+        pspecs = param_specs(model.defs(), rules)
+        with jax.set_mesh(mesh):
+            p_sh = jax.tree_util.tree_map(
+                lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), params, pspecs)
+            b_sh = jax.tree_util.tree_map(
+                lambda a: jax.device_put(a, NamedSharding(mesh, P("data", None))), batch)
+            def lf(p, b):
+                with axis_rules(rules):
+                    return model.loss_fn(p, b)
+            loss, _ = jax.jit(lf)(p_sh, b_sh)
+        print(json.dumps({"ref": float(ref), "sharded": float(loss)}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["sharded"] == pytest.approx(res["ref"], rel=2e-4)
+
+
+def test_moe_ep_matches_unsharded():
+    """Expert-parallel MoE (experts over 'model') == single-device result."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, json, dataclasses
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.models.moe import moe_defs, moe_ffn
+        from repro.models.common import axis_rules, init_params
+        from repro.launch.mesh import make_debug_mesh
+
+        cfg = dataclasses.replace(get_config("olmoe-1b-7b@smoke"), capacity_factor=8.0)
+        defs = {"moe": moe_defs(cfg, 1)}
+        params = jax.tree_util.tree_map(lambda a: a[0],
+                                        init_params(defs, jax.random.PRNGKey(0))["moe"])
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        y_ref, _ = moe_ffn(params, x, cfg)
+
+        mesh = make_debug_mesh(2, 4)  # experts (8) % tp (4) == 0 -> EP
+        rules = {"experts": "model", "experts_act": "model",
+                 "expert_ff": None, "expert_act_ff": None,
+                 "act_batch": "data", "act_ff": None}
+        with jax.set_mesh(mesh):
+            shard = lambda a, s: jax.device_put(a, NamedSharding(mesh, s))
+            p_sh = {
+                "router": shard(params["router"], P(None, None)),
+                "w1": shard(params["w1"], P("model", None, None)),
+                "w3": shard(params["w3"], P("model", None, None)),
+                "w2": shard(params["w2"], P("model", None, None)),
+            }
+            x_sh = shard(x, P("data", None, None))
+            def f(p, x):
+                with axis_rules(rules):
+                    return moe_ffn(p, x, cfg)[0]
+            y = jax.jit(f)(p_sh, x_sh)
+        import numpy as np
+        print(json.dumps({"err": float(jnp.abs(y - y_ref).max())}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["err"] < 1e-4
+
+
+def test_compressed_allreduce_under_shard_map():
+    """Top-k + error-feedback all-reduce across the data axis approximates
+    the dense mean gradient."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, json
+        from functools import partial
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.optim.compression import TopKConfig, topk_allreduce
+        from repro.launch.mesh import make_debug_mesh
+
+        mesh = make_debug_mesh(8, 1)
+        g = jax.random.normal(jax.random.PRNGKey(0), (8, 128))  # one row per worker
+        dense_mean = g.mean(0)
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("data", None),),
+                 out_specs=P("data", None))
+        def compressed(gl):
+            e0 = jnp.zeros_like(gl[0])
+            out, _ = topk_allreduce(gl[0], e0, TopKConfig(density=0.5), "data")
+            return out[None]
+
+        approx = compressed(g)[0]
+        cos = float(jnp.sum(approx * dense_mean) /
+                    (jnp.linalg.norm(approx) * jnp.linalg.norm(dense_mean) + 1e-9))
+        print(json.dumps({"cos": cos}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["cos"] > 0.8
+
+
+def test_seqsharded_flash_decode_matches_dense():
+    """The long-context flash-decoding path (sequence-sharded KV + psum)
+    equals dense decode attention."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, json
+        from functools import partial
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.configs import get_config
+        from repro.models.attention import gqa_defs, gqa_decode, gqa_decode_seqsharded
+        from repro.models.common import init_params
+        from repro.launch.mesh import make_debug_mesh
+        import dataclasses
+
+        cfg = dataclasses.replace(get_config("llama3-8b@smoke"), sliding_window=None)
+        defs = {"a": gqa_defs(cfg, 1)}
+        p = jax.tree_util.tree_map(lambda a: a[0],
+                                   init_params(defs, jax.random.PRNGKey(0))["a"])
+        B, T = 2, 64
+        cache = {
+            "k": jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.n_kv_heads, cfg.head_dim)),
+            "v": jax.random.normal(jax.random.PRNGKey(2), (B, T, cfg.n_kv_heads, cfg.head_dim)),
+        }
+        x = jax.random.normal(jax.random.PRNGKey(3), (B, 1, cfg.d_model)) * 0.3
+        pos = jnp.asarray(T - 1, jnp.int32)
+        ref, _ = gqa_decode(p, x, cfg, {k: v.copy() for k, v in cache.items()}, pos)
+
+        mesh = make_debug_mesh(8, 1)
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P(), P(None, None, None), {"k": P(None, "data", None, None),
+                                                      "v": P(None, "data", None, None)}, P()),
+                 out_specs=P(None, None, None), check_rep=False)
+        def sharded(p, x, cache, pos):
+            out, _ = gqa_decode_seqsharded(p, x, cfg, cache, pos, axis_name="data")
+            return out
+
+        got = sharded(p, x, cache, pos)
+        print(json.dumps({"err": float(jnp.abs(got - ref).max())}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["err"] < 2e-3
+
+
+def test_server_end_to_end():
+    from repro.launch.serve import BatchedServer, Request
+    import numpy as np
+
+    server = BatchedServer("stablelm-1.6b@smoke", batch_slots=2, max_ctx=64)
+    rng = np.random.default_rng(0)
+    for rid in range(4):
+        prompt = rng.integers(4, 250, size=12).astype(np.int32)
+        server.submit(Request(rid, prompt, max_new_tokens=6))
+    server.drain()
+    assert len(server.completed) == 4
+    for r in server.completed:
+        assert len(r.tokens_out) == 6
+        assert all(0 <= t < server.cfg.padded_vocab for t in r.tokens_out)

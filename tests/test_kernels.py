@@ -1,0 +1,154 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_reference
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_reference
+from repro.kernels.ssm_scan import ssm_scan, ssm_scan_reference
+
+
+# ------------------------------------------------------------- flash attention
+
+FLASH_SHAPES = [
+    # (B, S, H, KV, hd)
+    (1, 128, 4, 2, 64),
+    (2, 256, 8, 8, 32),
+    (1, 64, 4, 1, 128),
+    (1, 200, 4, 2, 64),    # non-multiple seq
+    (2, 96, 2, 2, 16),
+]
+
+
+@pytest.mark.parametrize("shape", FLASH_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 48])
+def test_flash_attention_matches_oracle(shape, dtype, window):
+    B, S, H, KV, hd = shape
+    ks = jax.random.split(jax.random.PRNGKey(hash((shape, str(dtype))) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    ref = flash_attention_reference(q, k, v, causal=True, window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_attention_is_causal():
+    B, S, H, KV, hd = 1, 128, 2, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    out1 = flash_attention(q, k, v, interpret=True)
+    # perturb the future: outputs at earlier positions must not change
+    k2 = k.at[:, -1].add(1.0)
+    v2 = v.at[:, -1].add(1.0)
+    out2 = flash_attention(q, k2, v2, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, :-1]), np.asarray(out2[:, :-1]), rtol=1e-6, atol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([64, 128, 192]),
+    h=st.sampled_from([2, 4]),
+    g=st.sampled_from([1, 2]),
+    seed=st.integers(0, 1000),
+)
+def test_property_flash_rows_sum_to_convex_combination(s, h, g, seed):
+    """Each output row is a convex combination of V rows: within [min, max]."""
+    kv = h // g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, s, h, 32))
+    k = jax.random.normal(ks[1], (1, s, kv, 32))
+    v = jax.random.normal(ks[2], (1, s, kv, 32))
+    out = np.asarray(flash_attention(q, k, v, interpret=True))
+    vmin = float(np.asarray(v).min()) - 1e-4
+    vmax = float(np.asarray(v).max()) + 1e-4
+    assert out.min() >= vmin and out.max() <= vmax
+
+
+# ------------------------------------------------------------------- ssm scan
+
+SSM_SHAPES = [
+    # (B, S, D, N, chunk, block_d)
+    (2, 64, 32, 8, 16, 16),
+    (1, 128, 64, 16, 32, 32),
+    (2, 100, 48, 4, 32, 16),   # non-multiple seq + D
+    (1, 32, 16, 16, 32, 16),
+]
+
+
+@pytest.mark.parametrize("shape", SSM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_matches_oracle(shape, dtype):
+    B, S, D, N, ch, bd = shape
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, D), dtype)) * 0.1
+    x = jax.random.normal(ks[1], (B, S, D), dtype)
+    bm = jax.random.normal(ks[2], (B, S, N), dtype) * 0.5
+    cm = jax.random.normal(ks[3], (B, S, N), dtype) * 0.5
+    a = -jnp.exp(jax.random.normal(ks[4], (D, N)) * 0.3)
+    h0 = jax.random.normal(ks[5], (B, D, N)) * 0.1
+    y, hT = ssm_scan(dt, x, bm, cm, a, h0, chunk=ch, block_d=bd, interpret=True)
+    yr, hr = ssm_scan_reference(dt, x, bm, cm, a, h0)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hr), rtol=tol, atol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_ssm_state_decays(seed):
+    """With x = 0, the state can only decay (|h_T| <= |h_0| elementwise) since
+    a = exp(dt*A) with A < 0 has gain < 1."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    B, S, D, N = 1, 32, 16, 4
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, D))) * 0.2
+    x = jnp.zeros((B, S, D))
+    bm = jax.random.normal(ks[1], (B, S, N))
+    cm = jax.random.normal(ks[2], (B, S, N))
+    a = -jnp.exp(jax.random.normal(ks[3], (D, N)) * 0.3)
+    h0 = jnp.ones((B, D, N))
+    _, hT = ssm_scan(dt, x, bm, cm, a, h0, chunk=16, block_d=16, interpret=True)
+    assert (np.asarray(jnp.abs(hT)) <= 1.0 + 1e-6).all()
+
+
+# -------------------------------------------------------------------- rmsnorm
+
+
+@pytest.mark.parametrize("shape", [(4, 64, 128), (2, 100, 96), (1, 1, 256), (512, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_oracle(shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    x = jax.random.normal(ks[0], shape, dtype) * 3.0
+    g = jax.random.normal(ks[1], shape[-1:], dtype)
+    out = rmsnorm(x, g, interpret=True)
+    ref = rmsnorm_reference(x, g)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    scale=st.floats(0.5, 100.0),
+    seed=st.integers(0, 1000),
+)
+def test_property_rmsnorm_scale_invariant(scale, seed):
+    """RMSNorm(c*x) == RMSNorm(x) for any c > 0 (up to the eps floor, so we
+    use a tiny eps and keep c away from the eps-dominated regime)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 64))
+    g = jnp.ones((64,))
+    a = rmsnorm(x, g, eps=1e-12, interpret=True)
+    b = rmsnorm(x * scale, g, eps=1e-12, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)

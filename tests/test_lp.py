@@ -1,0 +1,126 @@
+"""LP solver tests: numpy simplex + JAX simplex vs scipy HiGHS, plus
+hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lp
+
+try:
+    from scipy.optimize import linprog as scipy_linprog
+
+    HAVE_SCIPY = True
+except Exception:  # pragma: no cover
+    HAVE_SCIPY = False
+
+
+def _random_problem(rng, n, m_ub, m_eq, feasible=True):
+    c = rng.normal(size=n)
+    A_ub = rng.normal(size=(m_ub, n))
+    b_ub = rng.uniform(0.5, 3.0, size=m_ub)
+    A_eq = rng.normal(size=(m_eq, n)) if m_eq else None
+    b_eq = None
+    if m_eq:
+        x0 = rng.uniform(0, 1, size=n)
+        b_eq = A_eq @ x0
+        if feasible:
+            b_ub = np.maximum(b_ub, A_ub @ x0 + 0.1)
+    return c, A_ub, b_ub, A_eq, b_eq
+
+
+@pytest.mark.skipif(not HAVE_SCIPY, reason="scipy unavailable")
+@pytest.mark.parametrize("seed", range(20))
+def test_numpy_simplex_matches_scipy(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 9))
+    m_ub = int(rng.integers(1, 7))
+    m_eq = int(rng.integers(0, 4))
+    c, A_ub, b_ub, A_eq, b_eq = _random_problem(rng, n, m_ub, m_eq)
+    ref = scipy_linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq, method="highs")
+    mine = lp.linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq)
+    ref_status = {0: 0, 2: 2, 3: 3}.get(ref.status, 2)
+    assert mine.status == ref_status
+    if ref_status == lp.STATUS_OPTIMAL:
+        assert mine.fun == pytest.approx(ref.fun, rel=1e-6, abs=1e-8)
+
+
+@pytest.mark.skipif(not HAVE_SCIPY, reason="scipy unavailable")
+@pytest.mark.parametrize("seed", range(10))
+def test_jax_simplex_matches_scipy(seed):
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(2, 7))
+    m_ub = int(rng.integers(1, 5))
+    m_eq = int(rng.integers(0, 3))
+    c, A_ub, b_ub, A_eq, b_eq = _random_problem(rng, n, m_ub, m_eq)
+    A_eq_ = A_eq if A_eq is not None else np.zeros((0, n))
+    b_eq_ = b_eq if b_eq is not None else np.zeros((0,))
+    ref = scipy_linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq, method="highs")
+    x, fun, status = lp.jax_linprog(c, A_ub, b_ub, A_eq_, b_eq_)
+    ref_status = {0: 0, 2: 2, 3: 3}.get(ref.status, 2)
+    assert int(status) == ref_status
+    if ref_status == lp.STATUS_OPTIMAL:
+        assert float(fun) == pytest.approx(ref.fun, rel=2e-4, abs=1e-5)
+
+
+def test_unbounded_detected():
+    res = lp.linprog(np.array([-1.0]), A_ub=np.array([[-1.0]]), b_ub=np.array([1.0]))
+    assert res.status == lp.STATUS_UNBOUNDED
+
+
+def test_infeasible_detected():
+    # x <= -1 with x >= 0 is infeasible
+    res = lp.linprog(np.array([1.0]), A_ub=np.array([[1.0]]), b_ub=np.array([-1.0]),
+                     A_eq=np.array([[1.0]]), b_eq=np.array([5.0]))
+    # x = 5 required but x <= -1: infeasible
+    assert res.status == lp.STATUS_INFEASIBLE
+
+
+def test_degenerate_rhs_zero():
+    # equality with zero RHS (the flow-conservation pattern): x1 = x2, max x1+x2
+    res = lp.linprog(
+        np.array([-1.0, -1.0]),
+        A_ub=np.array([[1.0, 0.0], [0.0, 1.0]]),
+        b_ub=np.array([2.0, 3.0]),
+        A_eq=np.array([[1.0, -1.0]]),
+        b_eq=np.array([0.0]),
+    )
+    assert res.success
+    assert res.fun == pytest.approx(-4.0)  # x1 = x2 = 2
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(2, 6),
+    m=st.integers(1, 5),
+    seed=st.integers(0, 10_000),
+)
+def test_property_optimal_is_feasible(n, m, seed):
+    """Any reported optimum must satisfy all constraints and x >= 0."""
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=n)
+    A_ub = rng.normal(size=(m, n))
+    b_ub = rng.uniform(0.1, 5.0, size=m)
+    res = lp.linprog(c, A_ub=A_ub, b_ub=b_ub)
+    if res.status == lp.STATUS_OPTIMAL:
+        assert (res.x >= -1e-8).all()
+        assert (A_ub @ res.x <= b_ub + 1e-6).all()
+        # x = 0 is feasible here (b_ub > 0), so optimum must be <= 0
+        assert res.fun <= 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_duality_bound(seed):
+    """Optimal value never better than any feasible point we can construct."""
+    rng = np.random.default_rng(seed)
+    n, m = 4, 3
+    c = rng.normal(size=n)
+    A_ub = np.abs(rng.normal(size=(m, n))) + 0.1
+    b_ub = rng.uniform(1.0, 4.0, size=m)
+    res = lp.linprog(c, A_ub=A_ub, b_ub=b_ub)
+    assert res.status == lp.STATUS_OPTIMAL  # bounded: A >= 0.1, b > 0
+    for _ in range(5):
+        x = rng.uniform(0, 1, size=n)
+        lam = (b_ub / (A_ub @ x)).min()
+        x_feas = x * min(lam, 1.0) * 0.99
+        assert res.fun <= c @ x_feas + 1e-7

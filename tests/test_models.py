@@ -1,0 +1,277 @@
+"""Model zoo tests: per-arch smoke (reduced configs, one forward/train step,
+shape + NaN assertions), decode-vs-prefill numerical consistency, SWA
+masking, MoE dispatch vs dense loop, mamba chunked-vs-sequential scan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, ShapeConfig, get_config, list_archs
+from repro.models import build_model
+
+SMOKE_TRAIN = ShapeConfig("smoke_train", seq_len=64, global_batch=2, kind="train")
+
+
+def _rand_batch(m, cfg, shape, key=0):
+    batch = m.input_specs(shape, abstract=False)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(key), 3)
+    if "tokens" in batch:
+        batch["tokens"] = jax.random.randint(k1, batch["tokens"].shape, 0, cfg.vocab)
+    if "labels" in batch:
+        batch["labels"] = jax.random.randint(k2, batch["labels"].shape, 0, cfg.vocab)
+    if "frontend" in batch:
+        batch["frontend"] = 0.02 * jax.random.normal(k3, batch["frontend"].shape, jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_train_step(arch):
+    """Reduced config: one forward + loss + grad step on CPU; output shapes
+    and no NaNs (assignment requirement f)."""
+    cfg = get_config(arch + "@smoke")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _rand_batch(m, cfg, SMOKE_TRAIN)
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(m.loss_fn, has_aux=True)
+    )(params, batch)
+    assert np.isfinite(float(loss)), arch
+    # a couple of plausibility checks
+    assert float(loss) < 2 * np.log(cfg.vocab) + 1
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat), f"{arch}: NaN grads"
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat), f"{arch}: all-zero grads"
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_forward_shapes(arch):
+    cfg = get_config(arch + "@smoke")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _rand_batch(m, cfg, SMOKE_TRAIN)
+    logits, _ = jax.jit(m.forward_train)(params, batch)
+    B = SMOKE_TRAIN.global_batch
+    S_expect = SMOKE_TRAIN.seq_len if not (cfg.frontend and cfg.is_encdec) else SMOKE_TRAIN.seq_len
+    assert logits.shape[0] == B
+    assert logits.shape[-1] == cfg.vocab
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def _pad_caches_time(caches, n=1):
+    """Grow attention caches by n slots along the time axis (leading axis is
+    the scan period)."""
+
+    def pad(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v", "c_kv", "k_rope") and x.ndim >= 3:
+            pads = [(0, 0)] * x.ndim
+            pads[2] = (0, n)
+            return jnp.pad(x, pads)
+        return x
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: pad([k for k in p], x), caches
+    )
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["llama3-8b", "minicpm3-4b", "xlstm-1.3b", "jamba-1.5-large-398b", "mixtral-8x7b"],
+)
+def test_decode_matches_prefill(arch):
+    """Decoding token S-1 against the cache of tokens 0..S-2 must match the
+    full forward's logits at position S-1 (per-family serving oracle;
+    exercises the MLA absorbed decode and the SSM state-update paths)."""
+    import dataclasses
+
+    cfg = get_config(arch + "@smoke")
+    if cfg.is_moe:
+        # dropless regime so prefill (many tokens) and decode (few tokens)
+        # see identical expert assignment
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab)
+
+    # full forward logits at the last position
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend is not None:
+        batch["frontend"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+    full_logits, _ = jax.jit(m.forward_train)(params, batch)
+    want = np.asarray(full_logits[:, -1, :], np.float32)
+
+    # prefill S-1 tokens, then decode token S-1
+    pre = dict(batch)
+    pre["tokens"] = toks[:, : S - 1]
+    pre.pop("labels")
+    _, caches = jax.jit(m.forward_prefill)(params, pre)
+    caches = _pad_caches_time(caches, 1 + (cfg.frontend_tokens if cfg.frontend and not cfg.is_encdec else 0))
+    offset = cfg.frontend_tokens if (cfg.frontend is not None and not cfg.is_encdec) else 0
+    pos = jnp.asarray(S - 1 + offset, jnp.int32)
+    got_logits, _ = jax.jit(m.forward_decode)(params, toks[:, S - 1 :], caches, pos)
+    got = np.asarray(got_logits[:, 0, :], np.float32)
+
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_masks_distant_tokens():
+    """With window W, positions farther back than the receptive field
+    (n_layers * W for stacked SWA) must not influence the output."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_config("h2o-danube-3-4b@smoke"), name="swa-test", n_layers=1,
+        sliding_window=16,
+    )
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 1, 48  # 1 layer, window 16 << 47 distance
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    toks2 = toks.at[:, 0].set((toks[:, 0] + 7) % cfg.vocab)
+    f = jax.jit(m.forward_train)
+    l1, _ = f(params, {"tokens": toks, "labels": toks})
+    l2, _ = f(params, {"tokens": toks2, "labels": toks2})
+    np.testing.assert_allclose(
+        np.asarray(l1[:, -1]), np.asarray(l2[:, -1]), rtol=1e-5, atol=1e-5
+    )
+    # but a token inside the window DOES influence it
+    toks3 = toks.at[:, S - 2].set((toks[:, S - 2] + 7) % cfg.vocab)
+    l3, _ = f(params, {"tokens": toks3, "labels": toks3})
+    assert np.abs(np.asarray(l3[:, -1]) - np.asarray(l1[:, -1])).max() > 1e-4
+
+
+def test_moe_matches_dense_loop_reference():
+    """Scatter-dispatch MoE == explicit per-token loop over selected experts
+    (with capacity high enough that nothing drops)."""
+    from repro.models.moe import moe_defs, moe_ffn
+    from repro.models.common import init_params
+
+    cfg = get_config("olmoe-1b-7b@smoke")
+    cfg = cfg.__class__(**{**cfg.__dict__, "capacity_factor": 8.0})
+    defs = {"moe": moe_defs(cfg, 1)}
+    params = init_params(defs, jax.random.PRNGKey(0))["moe"]
+    p = jax.tree_util.tree_map(lambda a: a[0], params)  # unstack layer axis
+
+    B, S, d = 2, 8, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.float32)
+    y, aux = moe_ffn(p, x, cfg)
+    assert float(aux["dropped_frac"]) == 0.0
+
+    # dense reference
+    xt = x.reshape(-1, d)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, ids = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / gates.sum(-1, keepdims=True)
+    ref = np.zeros_like(np.asarray(xt))
+    for t in range(xt.shape[0]):
+        for j in range(cfg.experts_per_token):
+            e = int(ids[t, j])
+            h = jax.nn.silu(xt[t] @ p["w1"][e]) * (xt[t] @ p["w3"][e])
+            ref[t] += float(gates[t, j]) * np.asarray(h @ p["w2"][e])
+    np.testing.assert_allclose(
+        np.asarray(y.reshape(-1, d)), ref, rtol=2e-4, atol=2e-4
+    )
+
+
+def test_mamba_chunked_matches_sequential():
+    """Chunked associative scan == naive per-step recurrence."""
+    from repro.models.ssm import mamba_defs, mamba_block, mamba_decode, mamba_state_struct
+    from repro.models.common import init_params
+
+    cfg = get_config("jamba-1.5-large-398b@smoke")
+    defs = {"m": mamba_defs(cfg, 1)}
+    params = init_params(defs, jax.random.PRNGKey(0))["m"]
+    p = jax.tree_util.tree_map(lambda a: a[0], params)
+
+    B, S, d = 2, 32, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.float32) * 0.5
+    y_chunked, st = mamba_block(p, x, cfg, None)
+
+    # sequential reference via repeated decode steps
+    state = mamba_state_struct(cfg, B, dtype=jnp.float32, abstract=False)
+    ys = []
+    for t in range(S):
+        yt, state = mamba_decode(p, x[:, t : t + 1], cfg, state)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_chunked), np.asarray(y_seq), rtol=5e-3, atol=5e-3
+    )
+    np.testing.assert_allclose(
+        np.asarray(st["h"]), np.asarray(state["h"]), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_mlstm_chunked_matches_sequential():
+    from repro.models.ssm import (
+        mlstm_defs, mlstm_block, mlstm_decode, mlstm_state_struct,
+    )
+    from repro.models.common import init_params
+
+    cfg = get_config("xlstm-1.3b@smoke")
+    defs = {"m": mlstm_defs(cfg, 1)}
+    params = init_params(defs, jax.random.PRNGKey(0))["m"]
+    p = jax.tree_util.tree_map(lambda a: a[0], params)
+
+    B, S, d = 2, 32, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.float32) * 0.5
+    y_chunked, st = mlstm_block(p, x, cfg, None)
+
+    state = mlstm_state_struct(cfg, B, abstract=False)
+    ys = []
+    for t in range(S):
+        yt, state = mlstm_decode(p, x[:, t : t + 1], cfg, state)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_chunked), np.asarray(y_seq), rtol=1e-2, atol=1e-2
+    )
+
+
+def test_param_counts_match_defs():
+    """ModelConfig.param_count() (used for the 6ND roofline term) must agree
+    with the actual parameter tree within 2%."""
+    for arch in list_archs():
+        cfg = get_config(arch)
+        m = build_model(cfg)
+        analytic, _ = cfg.param_count()
+        actual = m.n_params()
+        assert abs(analytic - actual) / actual < 0.02, (
+            arch, analytic / 1e9, actual / 1e9,
+        )
+
+
+def test_long500k_eligibility_flags():
+    eligible = {a for a in list_archs() if get_config(a).sub_quadratic}
+    assert eligible == {
+        "h2o-danube-3-4b", "xlstm-1.3b", "mixtral-8x7b", "jamba-1.5-large-398b",
+    }
+
+
+def test_qchunked_attention_matches_unchunked():
+    """The q-chunked prefill core (used for 32k+ sequences) must equal the
+    one-shot core — for GQA (w/ sliding window) and for MLA (v_head_dim !=
+    qk head dim)."""
+    from repro.models import attention as A
+
+    B, S, H, KV, hd = 1, 64, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd + 8))  # different v dim (MLA-like)
+    old_chunk = A.QCHUNK
+    try:
+        A.QCHUNK = 16
+        for window in (None, 24):
+            mask = A.causal_mask(S, S, window=window)
+            ref = A._gqa_core(q, k, v, mask, 0.25)
+            got = A._gqa_core_qchunked(q, k, v, 0.25, window)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)
+    finally:
+        A.QCHUNK = old_chunk

@@ -1,0 +1,145 @@
+"""Streams substrate: simulator physics, metric generation, learned-model
+end-to-end prediction accuracy (the paper's ≤10% claim), real executor."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    STREAM_MANAGER,
+    Configuration,
+    ContainerDim,
+    fit_workload,
+    oracle_models,
+    solve_flow,
+)
+from repro.streams import (
+    SimParams,
+    adanalytics,
+    measure_capacity,
+    mobile_analytics,
+    simulate,
+    training_sweep,
+    wordcount,
+)
+
+DIM = ContainerDim(cpus=3.0, mem_mb=4096.0)
+PARAMS = SimParams()
+
+
+def test_simulator_respects_compute_bound():
+    dag = wordcount()
+    cfg = Configuration(dag, packing=(("W",), ("C",)), dims=(DIM, DIM))
+    cap = measure_capacity(cfg, PARAMS, duration_s=15.0)
+    # min(R_w, R_c, R_sm) = 658; sim within 10%
+    assert cap == pytest.approx(658.0, rel=0.10)
+
+
+def test_simulator_charges_crossing_tuples_twice():
+    dag = wordcount()
+    # all-crossing layout is SM-bound at R_sm = 724
+    cfg = Configuration(dag, packing=(("W", "W"), ("C", "C")), dims=(DIM, DIM))
+    cap = measure_capacity(cfg, PARAMS, duration_s=15.0)
+    assert cap == pytest.approx(724.0, rel=0.10)
+    # co-packed layout localizes half the tuples -> higher rate
+    cfg2 = Configuration(dag, packing=(("W", "C"), ("W", "C")), dims=(DIM, DIM))
+    cap2 = measure_capacity(cfg2, PARAMS, duration_s=15.0)
+    assert cap2 > cap * 1.15
+
+
+def test_simulator_emits_sawtooth_memory():
+    dag = wordcount()
+    cfg = Configuration(dag, packing=(("W",), ("C",)), dims=(DIM, DIM))
+    res = simulate(cfg, 400.0, duration_s=20.0, params=PARAMS)
+    store = res.to_metrics_store()
+    c_samples = store.pooled("C")
+    mem = c_samples.memutil_mb
+    # memory oscillates (GC sawtooth): significant spread, bounded below by live set
+    assert mem.max() > mem.min() * 1.2
+
+
+def test_metrics_store_has_stream_manager_series():
+    dag = wordcount()
+    cfg = Configuration(dag, packing=(("W",), ("C",)), dims=(DIM, DIM))
+    res = simulate(cfg, 300.0, duration_s=10.0, params=PARAMS)
+    store = res.to_metrics_store()
+    assert STREAM_MANAGER in store.nodes()
+    sm = store.pooled(STREAM_MANAGER)
+    # at 300 ktps offered with everything crossing, each SM traverses ~300
+    assert sm.rate_in_ktps[len(sm.rate_in_ktps) // 2 :].mean() == pytest.approx(300.0, rel=0.15)
+
+
+def test_learned_models_recover_gamma_and_costs():
+    dag = adanalytics()
+    par = {n: 1 for n in dag.node_names}
+    from repro.core import round_robin_configuration
+
+    cfg = round_robin_configuration(dag, par, 3, DIM)
+    store = training_sweep(cfg, rates_ktps=np.linspace(30, 240, 6), params=PARAMS,
+                           seconds_per_rate=8.0)
+    models = fit_workload(store)
+    assert models["event_filter"].gamma == pytest.approx(0.32, rel=0.15)
+    assert models["event_projection"].gamma == pytest.approx(1.0, rel=0.1)
+    assert models[STREAM_MANAGER].gamma == pytest.approx(1.0, rel=0.1)
+    # CPU fits should be strong (paper Table 4 reports R^2 ~0.5-0.99)
+    assert models["event_deserializer"].cpu.r2 > 0.5
+
+
+@pytest.mark.parametrize("workload", [wordcount, adanalytics])
+def test_end_to_end_prediction_error_within_paper_bound(workload):
+    """Train models from simulated metrics, predict unseen configurations,
+    compare with simulated ground truth: ≤ ~10% error (fig. 13)."""
+    dag = workload()
+    from repro.core import round_robin_configuration
+
+    train_cfg = round_robin_configuration(dag, {n: 1 for n in dag.node_names},
+                                          max(2, len(dag.node_names) // 2), DIM)
+    store = training_sweep(train_cfg, rates_ktps=np.linspace(40, 280, 6),
+                           params=PARAMS, seconds_per_rate=8.0)
+    models = fit_workload(store)
+
+    test_cfgs = [
+        round_robin_configuration(dag, {n: 2 for n in dag.node_names},
+                                  len(dag.node_names), DIM),
+        round_robin_configuration(dag, {n: 1 for n in dag.node_names},
+                                  len(dag.node_names), DIM),
+    ]
+    errs = []
+    for cfg in test_cfgs:
+        measured = measure_capacity(cfg, PARAMS, duration_s=15.0)
+        predicted = solve_flow(cfg, models).rate_ktps
+        errs.append(abs(predicted - measured) / measured)
+    assert np.mean(errs) < 0.15, errs  # 10% paper + margin for sim noise
+
+
+def test_mobile_dag_simulates_and_solves():
+    dag = mobile_analytics()
+    from repro.core import round_robin_configuration
+
+    cfg = round_robin_configuration(dag, {n: 1 for n in dag.node_names}, 4, DIM)
+    cap = measure_capacity(cfg, PARAMS, duration_s=12.0)
+    models = oracle_models(dag, PARAMS.sm_cost_per_ktuple)
+    sol = solve_flow(cfg, models)
+    assert sol.feasible
+    assert cap > 0
+    # oracle models don't know the simulator's interference physics (runtime
+    # helper threads, fan-out overhead) — learned models do; see the
+    # end-to-end test above for the paper's ≤10% claim.
+    assert sol.rate_ktps == pytest.approx(cap, rel=0.35)
+
+
+def test_executor_runs_real_operators():
+    from repro.streams.executor import run_dag
+
+    report = run_dag(wordcount(), n_batches=5)
+    assert report.tuples_processed > 0
+    assert "W" in report.per_node_us_per_tuple
+    assert "C" in report.per_node_us_per_tuple
+    # counting consumer actually counted: outputs exist
+    assert report.outputs["C"] is not None
+
+
+def test_executor_calibration_produces_positive_costs():
+    from repro.streams.executor import calibrate_dag
+
+    dag2 = calibrate_dag(wordcount(), n_batches=5)
+    for n in dag2.nodes:
+        assert n.cpu_cost_per_ktuple > 0
