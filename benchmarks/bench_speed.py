@@ -1,14 +1,37 @@
 """Paper §4/§5 speed claims: model prediction in 10-100 ms, allocation in
 <1 s (0.78 s avg for AdAnalytics); plus our LP-solver micro-benchmarks
 (numpy simplex vs batched JAX simplex — the TPU-idiomatic 'score thousands
-of configurations at once' path)."""
+of configurations at once' path) and the batched simulator engine: N
+candidate configurations evaluated under one vmapped tick kernel vs N
+sequential runs, and the XLA-compile count of a whole autoscaling trace
+under sticky shape bucketing."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import ContainerDim, allocate, oracle_models, round_robin_configuration, solve_flow
+from repro.core import (
+    AutoScaler,
+    ContainerDim,
+    allocate,
+    oracle_models,
+    round_robin_configuration,
+    run_against_trace,
+    solve_flow,
+)
 from repro.core.lp import jax_linprog, linprog
-from repro.streams import SimParams, adanalytics, mobile_analytics, wordcount
+from repro.streams import (
+    SimParams,
+    SimulatorEvaluator,
+    adanalytics,
+    clear_kernel_cache,
+    deep_pipeline,
+    diamond,
+    kernel_cache_info,
+    mobile_analytics,
+    simulate,
+    simulate_batch,
+    wordcount,
+)
 
 from .common import emit, timed
 
@@ -19,7 +42,8 @@ def run() -> dict:
     params = SimParams()
     out = {}
     # prediction latency per workload (paper: 10-100 ms)
-    for dag in (wordcount(), adanalytics(), mobile_analytics()):
+    for dag in (wordcount(), adanalytics(), mobile_analytics(), diamond(),
+                deep_pipeline()):
         models = oracle_models(dag, params.sm_cost_per_ktuple)
         cfg = round_robin_configuration(dag, {n: 2 for n in dag.node_names},
                                         len(dag.node_names), DIM)
@@ -51,6 +75,50 @@ def run() -> dict:
     emit("lp_jax_batched256", us_jax,
          f"per_lp_us={us_jax/256:.1f};speedup_vs_numpy={us_np/(us_jax/256):.1f}x")
     out["lp"] = (us_np, us_jax)
+
+    # ---- batched candidate evaluation: 16 configs, one vmapped kernel ----
+    # an allocator-style sweep: parallelism roundings around the balanced
+    # point, all landing in one shape bucket
+    dag = wordcount()
+    cands = [
+        round_robin_configuration(
+            dag, {"W": 1 + i % 4, "C": 1 + (i // 4) % 4}, 2 + i % 2, DIM
+        )
+        for i in range(16)
+    ]
+    dur = 8.0
+
+    def run_seq():
+        return [
+            simulate(c, 1e6, duration_s=dur, params=params).achieved_ktps
+            for c in cands
+        ]
+
+    def run_batch():
+        return [
+            r.achieved_ktps
+            for r in simulate_batch(cands, 1e6, duration_s=dur, params=params)
+        ]
+
+    _, us_seq = timed(run_seq, repeats=2, warmup=1)      # warmup = compile
+    _, us_bat = timed(run_batch, repeats=2, warmup=1)
+    emit("sim_sequential_16", us_seq, f"s={us_seq/1e6:.2f}")
+    emit("sim_batched_16", us_bat,
+         f"s={us_bat/1e6:.2f};speedup={us_seq/us_bat:.1f}x_(target>=4x)")
+    out["sim_batch_speedup"] = us_seq / us_bat
+
+    # ---- whole autoscaling trace: tick-kernel compile count --------------
+    clear_kernel_cache()
+    ev = SimulatorEvaluator(params=params, duration_s=dur)
+    models = oracle_models(dag, params.sm_cost_per_ktuple)
+    scaler = AutoScaler(dag, models)
+    trace = np.linspace(300.0, 1800.0, 12)
+    _, us_tr = timed(run_against_trace, scaler, trace, repeats=1, warmup=0,
+                     evaluator=ev)
+    info = kernel_cache_info()
+    emit("trace_autoscale_12steps", us_tr,
+         f"tick_compiles={info['misses']}_(target<=2);cache_hits={info['hits']}")
+    out["trace_tick_compiles"] = info["misses"]
     return out
 
 

@@ -27,11 +27,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Mapping, Sequence
+from typing import TYPE_CHECKING, Mapping, Sequence
 
 from .dag import Configuration, ContainerDim, DagSpec, propagate_rates
 from .metrics import STREAM_MANAGER
 from .node_model import NodeModel
+
+if TYPE_CHECKING:  # engine backends live in streams/; core stays import-free
+    from ..streams.engine import ConfigEvaluator
 
 
 @dataclasses.dataclass
@@ -117,8 +120,14 @@ def compose_balanced_container(
     max_instances_per_node: int = 64,
     mem_headroom: float = 1.1,
     dag: DagSpec | None = None,
+    rounding: str = "ceil",
 ) -> BalancedContainer:
-    """Rate-match the group's nodes to a stream manager at one full CPU."""
+    """Rate-match the group's nodes to a stream manager at one full CPU.
+
+    ``rounding`` picks how fractional instance requirements become counts:
+    ``"ceil"`` (the paper's conservative default) or ``"floor"`` (a leaner
+    candidate whose feasibility an evaluator can check empirically).
+    """
     sm = models[STREAM_MANAGER]
     gammas = [models[n].gamma for n in group]
     u_is_source = False
@@ -137,11 +146,21 @@ def compose_balanced_container(
     if len(group) == 2:
         rel[group[1]] = gammas[0]
 
+    round_up = rounding != "floor"
     counts: dict[str, int] = {}
     for nm in group:
         need = rho * rel[nm] / models[nm].peak_rate_ktps
-        counts[nm] = max(1, min(max_instances_per_node, math.ceil(need - 1e-9)))
+        n = math.ceil(need - 1e-9) if round_up else math.floor(need + 1e-9)
+        counts[nm] = max(1, min(max_instances_per_node, n))
     # If ceil() left headroom on every node, rho is still SM-limited: keep it.
+    # Floored counts may under-provision a node, so the container's
+    # sustainable rate drops to the slowest node's capacity (more replicas
+    # compensate at the allocation level).
+    if not round_up:
+        rho = min(
+            [rho]
+            + [counts[nm] * models[nm].peak_rate_ktps / rel[nm] for nm in group]
+        )
     cpus = sum(
         counts[nm] * models[nm].cpu_at(rho * rel[nm] / counts[nm]) for nm in group
     )
@@ -179,32 +198,15 @@ def _alpha_scale(bc: BalancedContainer, preferred: ContainerDim) -> BalancedCont
     )
 
 
-def allocate(
+def _allocate_one(
     dag: DagSpec,
     models: Mapping[str, NodeModel],
     target_rate_ktps: float,
-    preferred_dim: ContainerDim | None = None,
-    candidate_dims: Sequence[ContainerDim] | None = None,
-    overprovision: float = 1.0,
+    preferred_dim: ContainerDim | None,
+    overprovision: float,
+    rounding: str = "ceil",
 ) -> AllocationResult:
-    """The Trevor allocator: declared target rate -> physical configuration.
-
-    ``overprovision`` is the calibration factor from §4 (e.g. 1.09 when the
-    flow solver over-predicts by 9%); ``candidate_dims`` optionally searches a
-    small set of preferred container dimensions (the paper's policy knob).
-    """
-    if target_rate_ktps <= 0:
-        raise ValueError("target rate must be positive")
-    if candidate_dims:
-        best: AllocationResult | None = None
-        for dim in candidate_dims:
-            res = allocate(dag, models, target_rate_ktps, preferred_dim=dim,
-                           overprovision=overprovision)
-            if best is None or res.total_cpus < best.total_cpus:
-                best = res
-        assert best is not None
-        return best
-
+    """One closed-form allocation for a fixed preferred dim and rounding."""
     rate = target_rate_ktps * overprovision
     gammas = {n: models[n].gamma for n in dag.node_names}
     node_rates = propagate_rates(dag, rate, gammas)
@@ -214,7 +216,9 @@ def allocate(
     packing: list[tuple[str, ...]] = []
     dims: list[ContainerDim] = []
     for group in groups:
-        bc = compose_balanced_container(group, models, node_rates, dag=dag)
+        bc = compose_balanced_container(
+            group, models, node_rates, dag=dag, rounding=rounding
+        )
         if preferred_dim is not None:
             bc = _alpha_scale(bc, preferred_dim)
         required = node_rates[group[0]]
@@ -235,4 +239,73 @@ def allocate(
         predicted_node_rates=node_rates,
         total_cpus=config.total_cpus(),
         total_mem_mb=config.total_mem_mb(),
+    )
+
+
+def allocate(
+    dag: DagSpec,
+    models: Mapping[str, NodeModel],
+    target_rate_ktps: float,
+    preferred_dim: ContainerDim | None = None,
+    candidate_dims: Sequence[ContainerDim] | None = None,
+    overprovision: float = 1.0,
+    evaluator: "ConfigEvaluator | None" = None,
+) -> AllocationResult:
+    """The Trevor allocator: declared target rate -> physical configuration.
+
+    ``overprovision`` is the calibration factor from §4 (e.g. 1.09 when the
+    flow solver over-predicts by 9%); ``candidate_dims`` optionally searches a
+    small set of preferred container dimensions (the paper's policy knob).
+
+    With an ``evaluator`` (any :class:`~repro.streams.engine.ConfigEvaluator`
+    backend), every (dim × rounding) candidate is scored empirically in ONE
+    ``evaluate_batch`` call, and the cheapest configuration whose *measured*
+    capacity meets the target wins — model error can no longer pick an
+    infeasible "optimal".  Without one, the closed-form analytic choice is
+    returned (the paper's behavior).
+    """
+    if target_rate_ktps <= 0:
+        raise ValueError("target rate must be positive")
+
+    if evaluator is not None:
+        dims: list[ContainerDim | None] = (
+            list(candidate_dims) if candidate_dims else [preferred_dim]
+        )
+        candidates: list[AllocationResult] = []
+        seen: set[tuple] = set()
+        for dim in dims:
+            for rounding in ("ceil", "floor"):
+                res = _allocate_one(
+                    dag, models, target_rate_ktps, dim, overprovision, rounding
+                )
+                key = (res.config.packing, res.config.dims)
+                if key not in seen:
+                    seen.add(key)
+                    candidates.append(res)
+        evals = evaluator.evaluate_batch([c.config for c in candidates])
+        feasible = [
+            c for c, e in zip(candidates, evals)
+            if e.achieved_ktps >= target_rate_ktps
+        ]
+        if feasible:
+            return min(feasible, key=lambda c: c.total_cpus)
+        # nothing measured feasible (model error larger than the rounding
+        # slack): return the candidate that got closest to the target
+        return max(
+            zip(candidates, evals), key=lambda ce: ce[1].achieved_ktps
+        )[0]
+
+    if candidate_dims:
+        best: AllocationResult | None = None
+        for dim in candidate_dims:
+            res = _allocate_one(
+                dag, models, target_rate_ktps, dim, overprovision
+            )
+            if best is None or res.total_cpus < best.total_cpus:
+                best = res
+        assert best is not None
+        return best
+
+    return _allocate_one(
+        dag, models, target_rate_ktps, preferred_dim, overprovision
     )

@@ -9,9 +9,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Mapping
+from typing import TYPE_CHECKING, Callable, Mapping, Sequence
 
 from .allocator import AllocationResult, allocate
+
+if TYPE_CHECKING:
+    from ..streams.engine import ConfigEvaluator
 from .calibration import Calibrator
 from .dag import Configuration, ContainerDim, DagSpec
 from .metrics import MetricsStore
@@ -103,6 +106,24 @@ class AutoScaler:
         self.calibrator.observe(config, self.models, measured_ktps)
         return self.calibrator.drift_detected()
 
+    def observe_measurements(
+        self, configs: Sequence[Configuration], measured_ktps: Sequence[float]
+    ) -> bool:
+        """Batch form of :meth:`observe_measurement` — e.g. one
+        ``evaluate_batch`` worth of saturated capacity measurements."""
+        self.calibrator.observe_many(configs, self.models, measured_ktps)
+        return self.calibrator.drift_detected()
+
+    def calibrate_with(
+        self, evaluator: "ConfigEvaluator", configs: Sequence[Configuration]
+    ) -> bool:
+        """Measure ``configs`` at overload through any evaluation engine and
+        feed the capacities into predict-back calibration (§4)."""
+        evals = evaluator.evaluate_batch(configs)
+        return self.observe_measurements(
+            list(configs), [e.achieved_ktps for e in evals]
+        )
+
     def retrain(self, store: MetricsStore) -> None:
         """Refit every node model from pooled metrics and reset calibration."""
         self.models.update(fit_workload(store))
@@ -123,10 +144,19 @@ def run_against_trace(
     scaler: AutoScaler,
     load_trace_ktps,
     measure: Callable[[Configuration, float], float] | None = None,
+    evaluator: "ConfigEvaluator | None" = None,
 ) -> list[tuple[float, float, float]]:
     """Drive the scaler with a load trace.  Returns per-step
     (load, provisioned_cpus, achieved_rate) tuples.  ``measure(config, load)``
-    is typically the simulator; when given, measurements feed calibration."""
+    is typically the simulator; when given, measurements feed calibration.
+
+    Passing an ``evaluator`` instead of a raw callback routes measurements
+    through the engine layer: with the simulator backend's sticky shape
+    buckets, every step of the trace re-uses the same compiled tick kernel
+    (≤ a couple of XLA compilations for a whole autoscaling run)."""
+    if evaluator is not None and measure is None:
+        def measure(cfg: Configuration, load: float) -> float:
+            return evaluator.evaluate(cfg, offered_ktps=load).achieved_ktps
     out = []
     for load in load_trace_ktps:
         load = float(load)

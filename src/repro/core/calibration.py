@@ -61,6 +61,18 @@ class Calibrator:
         self.records.append(rec)
         return rec
 
+    def observe_many(
+        self,
+        configs,
+        models: Mapping[str, NodeModel],
+        measured_ktps,
+    ) -> list[CalibrationRecord]:
+        """Record a batch of predicted-vs-measured pairs in one call — the
+        natural sink for an engine's ``evaluate_batch`` output."""
+        return [
+            self.observe(c, models, float(m)) for c, m in zip(configs, measured_ktps)
+        ]
+
     def observe_prediction(self, predicted_ktps: float, measured_ktps: float) -> None:
         self.records.append(CalibrationRecord("-", predicted_ktps, measured_ktps))
 

@@ -1,17 +1,42 @@
 """Stream-processing substrate: operators, workloads, load sources, the
-discrete-time cluster simulator, and the real JAX executor."""
+batched discrete-time cluster simulator, the real JAX executor, and the
+engine abstraction that lets control layers evaluate configurations without
+knowing which backend answers."""
 
-from .workloads import WORKLOADS, adanalytics, mobile_analytics, wordcount
+from .workloads import (
+    WORKLOADS,
+    adanalytics,
+    deep_pipeline,
+    diamond,
+    mobile_analytics,
+    wordcount,
+)
 from .simulator import (
     SimParams,
     SimResult,
+    bucket_size,
+    clear_kernel_cache,
+    kernel_cache_info,
     measure_capacity,
+    pad_structure,
     simulate,
+    simulate_batch,
     training_sweep,
+)
+from .engine import (
+    OVERLOAD_KTPS,
+    ConfigEvaluator,
+    EvalResult,
+    ExecutorEvaluator,
+    SimulatorEvaluator,
 )
 from . import sources
 
 __all__ = [
-    "WORKLOADS", "SimParams", "SimResult", "adanalytics", "measure_capacity",
-    "mobile_analytics", "simulate", "sources", "training_sweep", "wordcount",
+    "WORKLOADS", "ConfigEvaluator", "EvalResult", "ExecutorEvaluator",
+    "OVERLOAD_KTPS", "SimParams", "SimResult", "SimulatorEvaluator",
+    "adanalytics", "bucket_size", "clear_kernel_cache", "deep_pipeline",
+    "diamond", "kernel_cache_info", "measure_capacity", "mobile_analytics",
+    "pad_structure", "simulate", "simulate_batch", "sources",
+    "training_sweep", "wordcount",
 ]

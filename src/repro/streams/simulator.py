@@ -25,11 +25,22 @@ models do NOT know about, reproducing the paper's observed phenomena:
 Because of these effects, Trevor's learned linear models are *approximations*
 — which is precisely the regime the paper evaluates (≈10 % prediction error,
 over-provisioning calibration, drift).
+
+Batched evaluation
+------------------
+Every configuration is padded to a **shape bucket** (``bucket_size``) with
+instance/container masks threaded through the tick kernel, so that any two
+configurations in the same bucket share one XLA compilation.
+:func:`simulate_batch` stacks N padded structures and evaluates them under
+``jax.vmap`` — the paper's "score many candidate configurations cheaply"
+lever.  Compiled kernels live in a module-level cache keyed on
+``(batch, bucket_shape, n_ticks)``; see :func:`kernel_cache_info`.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -158,7 +169,73 @@ def build_structure(config: Configuration, params: SimParams) -> SimStructure:
 
 
 # ---------------------------------------------------------------------------
-# The tick kernel (pure JAX; scanned)
+# Shape bucketing + padding
+# ---------------------------------------------------------------------------
+
+#: Coarse ladder so that an autoscaling run over a whole load trace lands in
+#: at most a couple of buckets (each bucket = one XLA compilation).
+BUCKET_LADDER = (8, 32, 128, 512)
+
+
+def bucket_size(n: int, floor: int = 0) -> int:
+    """Round ``n`` up to the shape-bucket ladder (``floor`` enforces a sticky
+    lower bound so a caller can pin the bucket it already compiled for)."""
+    n = max(int(n), int(floor), 1)
+    for b in BUCKET_LADDER:
+        if n <= b:
+            return b
+    return -(-n // BUCKET_LADDER[-1]) * BUCKET_LADDER[-1]
+
+
+def pad_structure(st: SimStructure, n_inst_bucket: int, n_cont_bucket: int) -> dict:
+    """Pad a :class:`SimStructure` to static bucket shapes.
+
+    Returns the exact array dict consumed by the tick kernel, with
+    ``inst_mask`` / ``cont_mask`` marking the real (unpadded) entries.  Padded
+    instances have zero routing weight, zero cost and are never sources, so
+    they process nothing; padded containers receive no traffic.  Real entries
+    always occupy the leading positions, so per-config metrics are recovered
+    by slicing ``[: n_inst]`` / ``[: n_cont]``.
+    """
+    I, K = int(n_inst_bucket), int(n_cont_bucket)
+    if I < st.n_inst or K < st.n_cont:
+        raise ValueError(
+            f"bucket ({I},{K}) smaller than structure ({st.n_inst},{st.n_cont})"
+        )
+
+    def pad1(x, n, fill, dtype):
+        out = np.full(n, fill, dtype)
+        out[: x.shape[0]] = x
+        return out
+
+    W = np.zeros((I, I), np.float32)
+    W[: st.n_inst, : st.n_inst] = st.W
+    remote = np.zeros((I, I), bool)
+    remote[: st.n_inst, : st.n_inst] = st.remote
+    sm_pad = float(st.sm_cost_eff.max()) if st.sm_cost_eff.size else 1e-3
+    inst_mask = np.zeros(I, np.float32)
+    inst_mask[: st.n_inst] = 1.0
+    cont_mask = np.zeros(K, np.float32)
+    cont_mask[: st.n_cont] = 1.0
+    return dict(
+        W=W,
+        remote=remote,
+        busy_cost=pad1(st.busy_cost, I, 1.0, np.float32),
+        cpu_cost=pad1(st.cpu_cost, I, 0.0, np.float32),
+        gamma=pad1(st.gamma, I, 0.0, np.float32),
+        is_source=pad1(st.is_source, I, False, bool),
+        cont_of=pad1(st.cont_of, I, K - 1, np.int32),
+        cont_cpus=pad1(st.cont_cpus, K, 1.0, np.float32),
+        sm_cost_eff=pad1(st.sm_cost_eff, K, sm_pad, np.float32),
+        mem_base=pad1(st.mem_base, I, 0.0, np.float32),
+        mem_slope=pad1(st.mem_slope, I, 0.0, np.float32),
+        inst_mask=inst_mask,
+        cont_mask=cont_mask,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The tick kernel (pure JAX; scanned, vmapped over configurations)
 # ---------------------------------------------------------------------------
 
 
@@ -166,12 +243,10 @@ def _one_hot(cont_of: jnp.ndarray, n_cont: int) -> jnp.ndarray:
     return (cont_of[:, None] == jnp.arange(n_cont)[None, :]).astype(jnp.float32)
 
 
-@partial(jax.jit, static_argnames=("n_ticks", "sample_every"))
-def _simulate(
+def _simulate_core(
     arrays: dict,
     offered_per_tick: jnp.ndarray,  # (n_ticks,) total source ktuples per tick
-    n_ticks: int,
-    sample_every: int,
+    seed: jnp.ndarray,              # () int32
     dt: float,
     noise_std: float,
     q_high: float,
@@ -179,8 +254,12 @@ def _simulate(
     gc_heap: float,
     gc_cost: float,
     mem_alloc: float,
-    seed: int,
+    *,
+    n_ticks: int,
+    sample_every: int,
 ):
+    """One padded configuration's trajectory.  Pure function of bucket-shaped
+    arrays — batched via ``jax.vmap`` and compiled once per bucket."""
     W = arrays["W"]
     remote = arrays["remote"]
     busy_cost = arrays["busy_cost"]
@@ -191,6 +270,8 @@ def _simulate(
     sm_cost_eff = arrays["sm_cost_eff"]
     mem_base = arrays["mem_base"]
     mem_slope = arrays["mem_slope"]
+    inst_mask = arrays["inst_mask"]
+    cont_mask = arrays["cont_mask"]
     C = _one_hot(arrays["cont_of"], cont_cpus.shape[0])  # (I, K)
     n_inst = W.shape[0]
     n_src = jnp.maximum(is_source.sum(), 1)
@@ -211,10 +292,12 @@ def _simulate(
         admitted = jnp.minimum(offered, admit)
         src_want = admitted / n_src
 
-        # 2) desired processing, limited by single-thread capacity
+        # 2) desired processing, limited by single-thread capacity; padded
+        #    instances are masked to zero so they never consume or emit.
         cap_tuples = dt / jnp.maximum(busy, 1e-9)
         want = jnp.where(is_source, jnp.minimum(src_want, cap_tuples),
                          jnp.minimum(qin, cap_tuples))
+        want = want * inst_mask
 
         # 3) container CPU contention (incl. last tick's SM CPU)
         demand = C.T @ (want * cpu_cost) + sm_cpu_prev  # (K,) CPU-seconds
@@ -242,8 +325,9 @@ def _simulate(
         qout = qout - delivered_from
         qin = qin + jnp.where(is_source, 0.0, F.sum(axis=0))
 
-        # SM CPU consumed this tick (feeds next tick's contention)
-        trav_c = C.T @ F.sum(axis=1) + (F * remote).sum(axis=0) @ C
+        # SM CPU consumed this tick (feeds next tick's contention); padded
+        # containers are masked out.
+        trav_c = (C.T @ F.sum(axis=1) + (F * remote).sum(axis=0) @ C) * cont_mask
         sm_cpu = trav_c * sm_cost_eff
 
         # 5) memory sawtooth + GC
@@ -300,6 +384,40 @@ def _simulate(
 
 
 # ---------------------------------------------------------------------------
+# Compile cache: one jitted vmapped kernel per (batch, bucket, n_ticks)
+# ---------------------------------------------------------------------------
+
+_KERNEL_CACHE: dict[tuple, object] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _get_batch_kernel(batch: int, n_inst: int, n_cont: int, n_ticks: int,
+                      sample_every: int):
+    key = (batch, n_inst, n_cont, n_ticks, sample_every)
+    fn = _KERNEL_CACHE.get(key)
+    if fn is None:
+        _CACHE_STATS["misses"] += 1
+        core = partial(_simulate_core, n_ticks=n_ticks, sample_every=sample_every)
+        fn = jax.jit(jax.vmap(core, in_axes=(0, 0, 0) + (None,) * 7))
+        _KERNEL_CACHE[key] = fn
+    else:
+        _CACHE_STATS["hits"] += 1
+    return fn
+
+
+def kernel_cache_info() -> dict:
+    """Tick-kernel compile-cache statistics.  ``misses`` counts distinct
+    ``(batch, bucket_shape, n_ticks)`` traces — i.e. XLA compilations."""
+    return {"size": len(_KERNEL_CACHE), **_CACHE_STATS}
+
+
+def clear_kernel_cache() -> None:
+    _KERNEL_CACHE.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+
+
+# ---------------------------------------------------------------------------
 # Host-side API
 # ---------------------------------------------------------------------------
 
@@ -321,8 +439,9 @@ class SimResult:
         return float(half.mean() / self.params.dt)
 
     def bottleneck_node(self) -> str | None:
-        """Most saturated node (by mean caputil over the last half); the
-        stream manager is reported when it dominates."""
+        """Most saturated node (by mean caputil over the last half), or the
+        stream manager when it dominates; ``None`` when nothing exceeds the
+        saturation threshold (no bottleneck observed)."""
         cap = np.asarray(self.samples["caputil"])
         half = cap[cap.shape[0] // 2 :].mean(axis=0)
         node_names = self.structure.node_names
@@ -335,7 +454,7 @@ class SimResult:
         name, val = max(per_node.items(), key=lambda kv: kv[1])
         if sm_busy > val and sm_busy > 0.9:
             return STREAM_MANAGER
-        return name if val > 0.8 else name
+        return name if val > 0.8 else None
 
     def to_metrics_store(self) -> MetricsStore:
         """Package the trajectory as Heron-style metric timeseries."""
@@ -385,55 +504,114 @@ class SimResult:
         return store
 
 
+def _per_tick_trace(offered_ktps, n_ticks: int, dt: float) -> np.ndarray:
+    """Expand a scalar rate or a piecewise-constant trace to per-tick loads."""
+    offered = np.asarray(offered_ktps, np.float64)
+    if offered.ndim == 0:
+        return np.full(n_ticks, float(offered) * dt)
+    reps = int(np.ceil(n_ticks / offered.shape[0]))
+    return np.repeat(offered, reps)[:n_ticks] * dt
+
+
+def simulate_batch(
+    configs: Sequence[Configuration],
+    offered_ktps,
+    duration_s: float = 20.0,
+    params: SimParams = SimParams(),
+    seeds: Sequence[int] | None = None,
+    min_inst_bucket: int = 0,
+    min_cont_bucket: int = 0,
+) -> list[SimResult]:
+    """Evaluate N configurations in one vmapped kernel call.
+
+    ``offered_ktps`` is either one load shared by every configuration or a
+    sequence of per-configuration loads (each a scalar or a per-sample
+    trace).  All configurations are padded to a common shape bucket; the
+    ``min_*_bucket`` floors let a caller pin the bucket it already compiled
+    (sticky bucketing — see :class:`repro.streams.engine.SimulatorEvaluator`).
+    """
+    configs = list(configs)
+    if not configs:
+        return []
+    B = len(configs)
+    structures = [build_structure(c, params) for c in configs]
+    n_inst_b = bucket_size(max(st.n_inst for st in structures), min_inst_bucket)
+    n_cont_b = bucket_size(max(st.n_cont for st in structures), min_cont_bucket)
+
+    n_ticks = int(duration_s / params.dt)
+    n_ticks = (n_ticks // params.sample_every) * params.sample_every
+
+    if np.ndim(offered_ktps) == 0:
+        offered_list = [offered_ktps] * B
+    else:
+        offered_list = list(offered_ktps)
+        if len(offered_list) != B:
+            raise ValueError(
+                f"offered_ktps has {len(offered_list)} entries for {B} configs"
+            )
+    per_tick = np.stack([_per_tick_trace(o, n_ticks, params.dt) for o in offered_list])
+
+    if seeds is None:
+        seeds = [params.seed] * B
+    if len(seeds) != B:
+        raise ValueError("seeds must match configs")
+
+    padded = [pad_structure(st, n_inst_b, n_cont_b) for st in structures]
+    arrays = {k: jnp.asarray(np.stack([p[k] for p in padded])) for k in padded[0]}
+
+    kernel = _get_batch_kernel(B, n_inst_b, n_cont_b, n_ticks, params.sample_every)
+    samples = kernel(
+        arrays,
+        jnp.asarray(per_tick, jnp.float32),
+        jnp.asarray(np.asarray(seeds, np.int32)),
+        params.dt,
+        params.noise_std,
+        params.queue_high_ktuples,
+        params.queue_low_ktuples,
+        params.gc_heap_mb,
+        params.gc_cost_frac,
+        params.mem_alloc_mb_per_ktuple,
+    )
+    samples = {k: np.asarray(v) for k, v in samples.items()}
+
+    n_samples = n_ticks // params.sample_every
+    results: list[SimResult] = []
+    for i, st in enumerate(structures):
+        si: dict = {}
+        for k, v in samples.items():
+            vi = v[i]
+            if vi.ndim == 1:                      # per-run scalar series (gate)
+                si[k] = vi
+            elif k in ("sm_trav", "sm_cpu"):      # per-container series
+                si[k] = vi[:, : st.n_cont]
+            else:                                 # per-instance series
+                si[k] = vi[:, : st.n_inst]
+        off = (
+            per_tick[i, : n_samples * params.sample_every]
+            .reshape(n_samples, -1)
+            .mean(1)
+            / params.dt
+        )
+        results.append(
+            SimResult(structure=st, params=params, samples=si, offered_ktps=off)
+        )
+    return results
+
+
 def simulate(
     config: Configuration,
     offered_ktps,
     duration_s: float = 20.0,
     params: SimParams = SimParams(),
 ) -> SimResult:
-    """Run ``config`` under ``offered_ktps`` (scalar or per-sample array)."""
-    st = build_structure(config, params)
-    n_ticks = int(duration_s / params.dt)
-    n_ticks = (n_ticks // params.sample_every) * params.sample_every
-    offered = np.asarray(offered_ktps, np.float64)
-    if offered.ndim == 0:
-        per_tick = np.full(n_ticks, float(offered) * params.dt)
-    else:
-        # piecewise-constant load trace stretched over the run
-        reps = int(np.ceil(n_ticks / offered.shape[0]))
-        per_tick = np.repeat(offered, reps)[:n_ticks] * params.dt
+    """Run ``config`` under ``offered_ktps`` (scalar or per-sample array).
 
-    arrays = dict(
-        W=jnp.asarray(st.W, jnp.float32),
-        remote=jnp.asarray(st.remote),
-        busy_cost=jnp.asarray(st.busy_cost, jnp.float32),
-        cpu_cost=jnp.asarray(st.cpu_cost, jnp.float32),
-        gamma=jnp.asarray(st.gamma, jnp.float32),
-        is_source=jnp.asarray(st.is_source),
-        cont_of=jnp.asarray(st.cont_of),
-        cont_cpus=jnp.asarray(st.cont_cpus, jnp.float32),
-        sm_cost_eff=jnp.asarray(st.sm_cost_eff, jnp.float32),
-        mem_base=jnp.asarray(st.mem_base, jnp.float32),
-        mem_slope=jnp.asarray(st.mem_slope, jnp.float32),
-    )
-    samples = _simulate(
-        arrays,
-        jnp.asarray(per_tick, jnp.float32),
-        n_ticks=n_ticks,
-        sample_every=params.sample_every,
-        dt=params.dt,
-        noise_std=params.noise_std,
-        q_high=params.queue_high_ktuples,
-        q_low=params.queue_low_ktuples,
-        gc_heap=params.gc_heap_mb,
-        gc_cost=params.gc_cost_frac,
-        mem_alloc=params.mem_alloc_mb_per_ktuple,
-        seed=params.seed,
-    )
-    samples = {k: np.asarray(v) for k, v in samples.items()}
-    n_samples = n_ticks // params.sample_every
-    off = per_tick[: n_samples * params.sample_every].reshape(n_samples, -1).mean(1) / params.dt
-    return SimResult(structure=st, params=params, samples=samples, offered_ktps=off)
+    Routed through the batched, shape-bucketed kernel (batch of one), so
+    repeated calls in the same bucket share a single XLA compilation.
+    """
+    return simulate_batch(
+        [config], [offered_ktps], duration_s, params, seeds=[params.seed]
+    )[0]
 
 
 def measure_capacity(
@@ -454,10 +632,19 @@ def training_sweep(
     seconds_per_rate: float = 10.0,
 ) -> MetricsStore:
     """The paper's profiling procedure (§5.1): sweep a throttled producer over
-    a range of rates with hold times, collect metrics at each level."""
+    a range of rates with hold times, collect metrics at each level.
+
+    The whole rate ladder is evaluated as ONE batched kernel call (the
+    structure is identical at every rung, so it shares a single compilation
+    and the rungs run data-parallel under ``vmap``).
+    """
+    rates = [float(r) for r in rates_ktps]
+    seeds = [params.seed + 1000 + i for i in range(len(rates))]
+    results = simulate_batch(
+        [config] * len(rates), rates, duration_s=seconds_per_rate,
+        params=params, seeds=seeds,
+    )
     store = MetricsStore()
-    for i, r in enumerate(rates_ktps):
-        p = dataclasses.replace(params, seed=params.seed + 1000 + i)
-        res = simulate(config, float(r), seconds_per_rate, p)
+    for res in results:
         store.extend(res.to_metrics_store())
     return store

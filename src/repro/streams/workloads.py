@@ -1,11 +1,32 @@
-"""The paper's three evaluation workloads as DagSpecs (§5.1).
+"""The paper's three evaluation workloads as DagSpecs (§5.1), plus two
+synthetic topologies that stress the batched evaluation engine.
 
 Ground-truth per-ktuple costs are chosen to land the same peak rates the
 paper measured on its 4-CPU-VM cluster (WordCount: R_w ≈ 839 ktps,
 R_c ≈ 658 ktps, SM ≈ 724 ktps traversals), so that Table 2 and the figures
-reproduce quantitatively, not just in shape.  Each node also carries its real
-operator body (:mod:`repro.streams.operators`) so the executor can run the
-DAG on actual data and re-calibrate these costs on the host it runs on.
+reproduce quantitatively, not just in shape.  Each paper node also carries
+its real operator body (:mod:`repro.streams.operators`) so the executor can
+run the DAG on actual data and re-calibrate these costs on the host it runs
+on.
+
+The two additional workloads exercise topology classes the paper's three do
+not:
+
+* :func:`diamond` — a fan-out/fan-in **join** topology (``clicks`` splits
+  into two enrichment branches that re-converge on a keyed join).  The join
+  ingests the *sum* of both branch rates (1.9× the source rate), so the
+  allocator's rate propagation and the simulator's multi-in-edge queueing
+  both get a workout, and cross-container traffic concentrates on the
+  fan-in edge.
+* :func:`deep_pipeline` — a **deep 8-stage** linear pipeline with heavily
+  skewed per-stage costs (two hot stages at ~4–6× the cost of their
+  neighbours) and rate-shrinking gammas.  Depth stresses backpressure
+  propagation (slow-start admission must travel 8 hops) and skew makes the
+  bottleneck move as parallelism changes — the regime where speculative
+  batched evaluation pays off.
+
+Both are simulator-first workloads (``fn=None``): the executor treats their
+nodes as pass-through.
 """
 from __future__ import annotations
 
@@ -155,8 +176,87 @@ def mobile_analytics() -> DagSpec:
     )
 
 
+def diamond() -> DagSpec:
+    """Diamond fan-out/fan-in join topology (see module docstring).
+
+        clicks -> { enrich_user, enrich_geo } -> click_join -> sink
+
+    The join receives both branches keyed on the same field (FIELDS
+    grouping), so its input rate is the sum of the branch outputs.
+    """
+    return DagSpec(
+        "diamond",
+        nodes=(
+            NodeSpec(
+                "clicks", 1.0 / 1000.0, gamma=1.0, io_fraction=0.5,
+                mem_mb_base=128.0, tuple_bytes=150.0, is_source=True,
+            ),
+            NodeSpec(
+                "enrich_user", 1.0 / 750.0, gamma=1.0,
+                mem_mb_base=160.0, mem_mb_per_ktps=0.3, tuple_bytes=180.0,
+            ),
+            NodeSpec(
+                "enrich_geo", 1.0 / 1300.0, gamma=0.9,
+                mem_mb_base=96.0, tuple_bytes=120.0,
+            ),
+            NodeSpec(
+                "click_join", 1.0 / 550.0, gamma=0.5, io_fraction=0.2,
+                mem_mb_base=256.0, mem_mb_per_ktps=0.6, tuple_bytes=96.0,
+            ),
+            NodeSpec(
+                "sink", 1.0 / 1500.0, gamma=0.0,
+                mem_mb_base=96.0, tuple_bytes=48.0,
+            ),
+        ),
+        edges=(
+            EdgeSpec("clicks", "enrich_user", Grouping.SHUFFLE),
+            EdgeSpec("clicks", "enrich_geo", Grouping.SHUFFLE),
+            EdgeSpec("enrich_user", "click_join", Grouping.FIELDS),
+            EdgeSpec("enrich_geo", "click_join", Grouping.FIELDS),
+            EdgeSpec("click_join", "sink", Grouping.SHUFFLE),
+        ),
+    )
+
+
+def deep_pipeline() -> DagSpec:
+    """Deep 8-stage ETL pipeline with skewed per-stage costs (see module
+    docstring).  ``transform`` (~1/260) and ``aggregate`` (~1/340) are the
+    hot stages; gammas shrink the stream by ~70% end to end."""
+    stages = (
+        # (name, peak_ktps, gamma, io_fraction, mem_base, mem_per_ktps)
+        ("ingest", 1600.0, 1.0, 0.5, 128.0, 0.0),
+        ("decode", 800.0, 1.0, 0.0, 96.0, 0.0),
+        ("validate", 1400.0, 0.85, 0.0, 64.0, 0.0),
+        ("transform", 260.0, 1.0, 0.0, 160.0, 0.3),
+        ("enrich", 900.0, 1.0, 0.15, 128.0, 0.0),
+        ("aggregate", 340.0, 0.4, 0.0, 256.0, 0.7),
+        ("compress", 1200.0, 0.8, 0.0, 96.0, 0.0),
+        ("store", 1800.0, 0.0, 0.35, 128.0, 0.0),
+    )
+    nodes = tuple(
+        NodeSpec(
+            name,
+            cpu_cost_per_ktuple=1.0 / peak,
+            gamma=g,
+            io_fraction=io,
+            mem_mb_base=mb,
+            mem_mb_per_ktps=mk,
+            tuple_bytes=120.0,
+            is_source=(i == 0),
+        )
+        for i, (name, peak, g, io, mb, mk) in enumerate(stages)
+    )
+    edges = tuple(
+        EdgeSpec(stages[i][0], stages[i + 1][0], Grouping.SHUFFLE)
+        for i in range(len(stages) - 1)
+    )
+    return DagSpec("deep_pipeline", nodes=nodes, edges=edges)
+
+
 WORKLOADS = {
     "wordcount": wordcount,
     "adanalytics": adanalytics,
     "mobile_analytics": mobile_analytics,
+    "diamond": diamond,
+    "deep_pipeline": deep_pipeline,
 }

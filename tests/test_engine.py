@@ -1,0 +1,177 @@
+"""Batched evaluation engine: padded/bucketed simulator, compile cache,
+ConfigEvaluator backends, and the engine-driven control layers."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ContainerDim,
+    allocate,
+    oracle_models,
+    reactive_scale,
+    round_robin_configuration,
+)
+from repro.streams import (
+    ConfigEvaluator,
+    ExecutorEvaluator,
+    SimParams,
+    SimulatorEvaluator,
+    adanalytics,
+    bucket_size,
+    clear_kernel_cache,
+    deep_pipeline,
+    diamond,
+    kernel_cache_info,
+    simulate,
+    simulate_batch,
+    wordcount,
+)
+
+DIM = ContainerDim(cpus=3.0, mem_mb=4096.0)
+PARAMS = SimParams()
+
+
+def test_bucket_size_ladder_and_floor():
+    assert bucket_size(1) == 8
+    assert bucket_size(8) == 8
+    assert bucket_size(9) == 32
+    assert bucket_size(200) == 512
+    assert bucket_size(700) == 1024          # past the ladder: 512-multiples
+    assert bucket_size(3, floor=32) == 32    # sticky floor pins the bucket
+
+
+@pytest.mark.parametrize("workload", [wordcount, adanalytics, diamond, deep_pipeline])
+def test_batched_matches_sequential(workload):
+    """simulate_batch on N configs agrees with N sequential simulate calls
+    (same seeds) within noise tolerance — the 5% acceptance bound."""
+    dag = workload()
+    cfgs = [
+        round_robin_configuration(
+            dag, {n: 1 + (i + j) % 2 for j, n in enumerate(dag.node_names)},
+            2 + i, DIM,
+        )
+        for i in range(3)
+    ]
+    seq = [
+        simulate(c, 1e6, duration_s=6.0, params=PARAMS).achieved_ktps for c in cfgs
+    ]
+    bat = [
+        r.achieved_ktps
+        for r in simulate_batch(cfgs, 1e6, duration_s=6.0, params=PARAMS)
+    ]
+    for s, b in zip(seq, bat):
+        assert b == pytest.approx(s, rel=0.05)
+
+
+def test_batched_per_config_offered_loads():
+    dag = wordcount()
+    cfg = round_robin_configuration(dag, {"W": 2, "C": 2}, 2, DIM)
+    lo, hi = 100.0, 400.0
+    r_lo, r_hi = simulate_batch([cfg, cfg], [lo, hi], duration_s=6.0, params=PARAMS)
+    assert r_lo.achieved_ktps == pytest.approx(lo, rel=0.1)
+    assert r_hi.achieved_ktps == pytest.approx(hi, rel=0.1)
+
+
+def test_compile_cache_hit_on_second_call_at_same_bucket():
+    clear_kernel_cache()
+    dag = wordcount()
+    a = round_robin_configuration(dag, {"W": 1, "C": 1}, 2, DIM)
+    b = round_robin_configuration(dag, {"W": 2, "C": 2}, 2, DIM)
+    simulate_batch([a, b], 300.0, duration_s=2.0, params=PARAMS)
+    misses = kernel_cache_info()["misses"]
+    assert misses == 1
+    # same bucket, different configs and load: no re-trace
+    simulate_batch([b, a], 500.0, duration_s=2.0, params=PARAMS)
+    info = kernel_cache_info()
+    assert info["misses"] == misses
+    assert info["hits"] >= 1
+
+
+def test_sticky_buckets_bound_compiles_across_config_growth():
+    clear_kernel_cache()
+    ev = SimulatorEvaluator(params=PARAMS, duration_s=2.0)
+    dag = wordcount()
+    small = round_robin_configuration(dag, {"W": 1, "C": 1}, 2, DIM)
+    big = round_robin_configuration(dag, {"W": 6, "C": 6}, 6, DIM)
+    ev.evaluate(small)
+    ev.evaluate(big)       # bucket grows: second (and last) compile
+    ev.evaluate(small)     # pads up to the grown bucket: cache hit
+    ev.evaluate(big)
+    assert kernel_cache_info()["misses"] <= 2
+
+
+def test_evaluator_protocol_conformance():
+    """Both backends satisfy ConfigEvaluator: evaluate and evaluate_batch
+    return consistent EvalResults."""
+    dag = wordcount()
+    cfg = round_robin_configuration(dag, {"W": 1, "C": 1}, 2, DIM)
+    sim_ev = SimulatorEvaluator(params=PARAMS, duration_s=4.0)
+    ex_ev = ExecutorEvaluator(n_batches=3)
+    for ev in (sim_ev, ex_ev):
+        assert isinstance(ev, ConfigEvaluator)
+        r = ev.evaluate(cfg)
+        assert r.achieved_ktps > 0
+        assert r.bottleneck is None or isinstance(r.bottleneck, str)
+        rs = ev.evaluate_batch([cfg, cfg])
+        assert len(rs) == 2
+        for x in rs:
+            assert x.achieved_ktps == pytest.approx(r.achieved_ktps, rel=0.10)
+
+
+def test_bottleneck_none_when_unsaturated():
+    dag = wordcount()
+    cfg = round_robin_configuration(dag, {"W": 1, "C": 1}, 2, DIM)
+    res = simulate(cfg, 50.0, duration_s=6.0, params=PARAMS)  # ~8% utilization
+    assert res.bottleneck_node() is None
+    # at overload the saturated node is reported again
+    sat = simulate(cfg, 1e6, duration_s=6.0, params=PARAMS)
+    assert sat.bottleneck_node() is not None
+
+
+def test_allocate_with_evaluator_meets_target_measured():
+    dag = wordcount()
+    models = oracle_models(dag, PARAMS.sm_cost_per_ktuple)
+    ev = SimulatorEvaluator(params=PARAMS, duration_s=6.0)
+    res = allocate(
+        dag, models, 800.0, evaluator=ev,
+        candidate_dims=[DIM, ContainerDim(cpus=6.0, mem_mb=8192.0)],
+    )
+    assert ev.evaluate(res.config).achieved_ktps >= 800.0 * 0.85
+
+
+def test_speculative_reactive_converges_in_no_more_cycles():
+    dag = wordcount()
+    target = 1200.0
+    ev = SimulatorEvaluator(params=PARAMS, duration_s=6.0)
+
+    def measure(cfg):
+        r = simulate(cfg, 1e6, duration_s=6.0, params=PARAMS)
+        return r.achieved_ktps, r.bottleneck_node()
+
+    classic = reactive_scale(dag, target, measure, dim=DIM, max_iterations=24)
+    spec = reactive_scale(
+        dag, target, dim=DIM, max_iterations=24, evaluator=ev, speculative_k=4
+    )
+    assert spec.converged
+    assert spec.iterations <= classic.iterations
+
+
+def test_reactive_requires_measure_or_evaluator():
+    with pytest.raises(ValueError):
+        reactive_scale(wordcount(), 100.0)
+
+
+@pytest.mark.parametrize("workload", [diamond, deep_pipeline])
+def test_new_workloads_simulate_and_allocate(workload):
+    dag = workload()
+    models = oracle_models(dag, PARAMS.sm_cost_per_ktuple)
+    res = allocate(dag, models, 200.0, preferred_dim=DIM)
+    assert res.config.n_containers >= 1
+    cap = simulate(res.config, 1e6, duration_s=6.0, params=PARAMS).achieved_ktps
+    assert cap > 0
+
+
+def test_diamond_join_sees_summed_branch_rates():
+    dag = diamond()
+    rates = dag.gamma_rates(100.0)
+    # enrich_user emits 1.0x, enrich_geo 0.9x -> join ingests 1.9x source
+    assert rates["click_join"] == pytest.approx(190.0)

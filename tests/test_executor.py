@@ -1,0 +1,42 @@
+"""Real-JAX executor: per-node timing collection and cost calibration."""
+import pytest
+
+from repro.streams import wordcount, adanalytics
+from repro.streams.executor import calibrate_dag, run_dag
+
+
+def test_run_dag_populates_per_node_timings():
+    report = run_dag(wordcount(), n_batches=4)
+    assert report.tuples_processed > 0
+    for name in ("W", "C"):
+        assert name in report.per_node_us_per_tuple
+        assert report.per_node_us_per_tuple[name] > 0
+    costs = report.cost_per_ktuple_seconds()
+    assert costs["W"] == pytest.approx(
+        report.per_node_us_per_tuple["W"] * 1e-3
+    )
+
+
+def test_run_dag_times_every_operator_of_adanalytics():
+    report = run_dag(adanalytics(), n_batches=3)
+    timed = set(report.per_node_us_per_tuple)
+    assert {"ads", "event_deserializer", "event_filter"} <= timed
+
+
+def test_calibrate_dag_clamps_costs_to_floor():
+    floor = 50.0
+    dag2 = calibrate_dag(wordcount(), n_batches=3, floor_ktps=floor)
+    for n in dag2.nodes:
+        # cost is clamped so the implied peak rate never drops below floor
+        assert 0.0 < n.cpu_cost_per_ktuple <= 1.0 / floor + 1e-12
+
+
+def test_calibrate_dag_preserves_topology_and_metadata():
+    dag = wordcount()
+    dag2 = calibrate_dag(dag, n_batches=3)
+    assert dag2.name == dag.name
+    assert dag2.node_names == dag.node_names
+    assert dag2.edges == dag.edges
+    for a, b in zip(dag.nodes, dag2.nodes):
+        assert a.gamma == b.gamma
+        assert a.mem_mb_base == b.mem_mb_base
