@@ -1,16 +1,25 @@
-"""Paper §2.3/§6 comparison: Dhalion-style reactive scaling vs Trevor's
-one-shot allocation — convergence time (deploy cycles) and final efficiency.
-The paper reports >30 min for reactive WordCount 1→4 Mtpm; Trevor <1 s.
-Also benchmarks the speculative reactive variant: K candidate
-point-modifications scored per cycle in one batched engine call."""
+"""Paper §2.3/§6 comparison through the unified control plane: the scaling
+brains — Dhalion-style reactive (classic and speculative-K), Trevor's
+declarative one-shot, and the new hybrid (model target + reactive trim) —
+all drive the same :class:`repro.control.ControlLoop`, so deploy cycles and
+final efficiency are comparable row-for-row.  The paper reports >30 min for
+reactive WordCount 1→4 Mtpm; Trevor <1 s."""
 from __future__ import annotations
 
-from repro.core import AutoScaler, ContainerDim, oracle_models, reactive_scale, solve_flow
+from repro.control import (
+    ControlLoop,
+    DeclarativePolicy,
+    HybridPolicy,
+    ModelStore,
+    ReactivePolicy,
+)
+from repro.core import ContainerDim, oracle_models, reactive_scale, solve_flow
 from repro.streams import SimParams, SimulatorEvaluator, simulate, wordcount
 
 from .common import emit, timed
 
 DIM = ContainerDim(cpus=3.0, mem_mb=4096.0)
+DEPLOY_CYCLE_S = 120.0
 
 
 def run(target_ktps: float = 1500.0) -> dict:
@@ -22,12 +31,20 @@ def run(target_ktps: float = 1500.0) -> dict:
         res = simulate(cfg, 1e6, duration_s=8.0, params=params)
         return res.achieved_ktps, res.bottleneck_node()
 
+    # classic Dhalion: one real deployment per iteration
     reactive, us_r = timed(
         reactive_scale, dag, target_ktps, measure, repeats=1, warmup=0,
-        dim=DIM, max_iterations=32,
+        dim=DIM, max_iterations=32, deploy_cycle_seconds=DEPLOY_CYCLE_S,
     )
-    scaler = AutoScaler(dag, models)
-    res, us_t = timed(scaler.configure_for, target_ktps, repeats=3)
+
+    # Trevor one-shot through the control loop (plan only, no evaluator)
+    def one_shot():
+        loop = ControlLoop(DeclarativePolicy(dag, ModelStore(models)))
+        loop.declare(target_ktps)
+        return loop
+
+    loop_d, us_t = timed(one_shot, repeats=3)
+    res = loop_d.action.detail
 
     print(f"# reactive: {reactive.iterations} deploy cycles, "
           f"{reactive.convergence_seconds/60:.1f} min wall (at 2 min/deploy), "
@@ -43,19 +60,40 @@ def run(target_ktps: float = 1500.0) -> dict:
          f"speedup={reactive.convergence_seconds/(us_t/1e6):.0f}x;"
          f"cpu_ratio={res.total_cpus/max(reactive.final_config.total_cpus(),1):.2f}")
 
-    # speculative Dhalion: batch-evaluate K candidate modifications per cycle
+    # speculative Dhalion as a control-plane policy: K candidate
+    # modifications scored per deploy cycle in one batched engine call
     ev = SimulatorEvaluator(params=params, duration_s=8.0)
-    spec, us_s = timed(
-        reactive_scale, dag, target_ktps, None, repeats=1, warmup=0,
-        dim=DIM, max_iterations=32, evaluator=ev, speculative_k=4,
-    )
-    print(f"# speculative: {spec.iterations} deploy cycles "
-          f"(vs {reactive.iterations} classic), converged={spec.converged}, "
-          f"final CPUs={spec.final_config.total_cpus():.0f}")
+    spec_policy = ReactivePolicy(dag, dim=DIM, speculative_k=4,
+                                 max_cycles_per_plan=32)
+    loop_r = ControlLoop(spec_policy, evaluator=ev)
+    _, us_s = timed(loop_r.declare, target_ktps, repeats=1, warmup=0)
+    spec_cycles = spec_policy.cycles
+    print(f"# speculative: {spec_cycles} deploy cycles "
+          f"(vs {reactive.iterations} classic), "
+          f"capacity={loop_r.action.predicted_capacity:.0f} ktps, "
+          f"final CPUs={loop_r.action.provisioned:.0f}")
     emit("reactive_speculative_k4", us_s,
-         f"cycles={spec.iterations};collapsed={reactive.iterations - spec.iterations}"
-         f";wall_min={spec.convergence_seconds/60:.0f}")
-    return {"reactive": reactive, "trevor": res, "speculative": spec}
+         f"cycles={spec_cycles};collapsed={reactive.iterations - spec_cycles}"
+         f";wall_min={spec_cycles * DEPLOY_CYCLE_S / 60:.0f}")
+
+    # hybrid: model-based jump + measured trim — deploy cycles after the
+    # one-shot are only paid when the model under-provisioned
+    hybrid_policy = HybridPolicy(dag, ModelStore(models), preferred_dim=DIM)
+    loop_h = ControlLoop(hybrid_policy, evaluator=ev)
+    _, us_h = timed(loop_h.declare, target_ktps, repeats=1, warmup=0)
+    print(f"# hybrid: {hybrid_policy.trims} trim cycles after the one-shot, "
+          f"capacity={loop_h.action.predicted_capacity:.0f} ktps, "
+          f"CPUs={loop_h.action.provisioned:.0f}")
+    emit("hybrid_model_plus_trim", us_h,
+         f"trims={hybrid_policy.trims};"
+         f"wall_min={(1 + hybrid_policy.trims) * DEPLOY_CYCLE_S / 60:.0f};"
+         f"capacity={loop_h.action.predicted_capacity:.0f}")
+    return {
+        "reactive": reactive,
+        "trevor": res,
+        "speculative": loop_r,
+        "hybrid": loop_h,
+    }
 
 
 if __name__ == "__main__":

@@ -123,4 +123,7 @@ def run() -> dict:
 
 
 if __name__ == "__main__":
+    from .common import dump_json
+
     run()
+    dump_json()

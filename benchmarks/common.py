@@ -1,7 +1,14 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, and the BENCH JSON
+artifact (every emitted row is also collected so a run can be dumped as one
+machine-readable file — the perf-trajectory record CI uploads)."""
 from __future__ import annotations
 
+import json
+import os
 import time
+
+#: Every emit() row of the current process, in order.
+RESULTS: list[dict] = []
 
 
 def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
@@ -15,4 +22,24 @@ def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
+    RESULTS.append(
+        {"name": name, "us_per_call": round(us_per_call, 1), "derived": derived}
+    )
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def dump_json(path: str | None = None) -> str | None:
+    """Write the collected rows as BENCH JSON.  ``path`` defaults to the
+    ``BENCH_JSON`` environment variable; no-op when neither is set."""
+    path = path or os.environ.get("BENCH_JSON")
+    if not path:
+        return None
+    payload = {
+        "schema": "bench.v1",
+        "generated_unix": int(time.time()),
+        "results": RESULTS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# BENCH JSON -> {path} ({len(RESULTS)} rows)")
+    return path

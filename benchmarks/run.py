@@ -10,6 +10,8 @@ from __future__ import annotations
 import sys
 import time
 
+from .common import dump_json
+
 BENCHES = [
     ("table2", "bench_table2", "Paper Table 2 — WordCount sensitivity + prediction"),
     ("fig4", "bench_fig4", "Paper Fig. 4 — AdAnalytics heatmap / efficiency gap"),
@@ -37,6 +39,7 @@ def main() -> None:
             print(f"{key}_FAILED,0,{type(e).__name__}:{e}")
             raise
     print(f"# total wall time: {time.perf_counter() - t0:.1f}s")
+    dump_json()  # BENCH JSON artifact when $BENCH_JSON is set
 
 
 if __name__ == "__main__":

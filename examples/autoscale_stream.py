@@ -1,18 +1,28 @@
-"""Auto-scaling under a diurnal load with a World-Cup spike (§2.3).
+"""Auto-scaling a flash-crowd day through the unified control plane (§2.3).
 
-Compares three operating modes over the same 2-day load trace:
+One :class:`repro.control.ControlLoop` hosts every scaling brain: the loop
+senses the load, applies the shared ``GuardBands`` (headroom, deadband,
+anti-thrash hysteresis), asks the plugged-in policy to plan, and logs one
+uniform event per step.  This example drives the same 2-day
+diurnal+World-Cup-spike trace (``repro.control.scenarios.flash_crowd``)
+through three operating modes:
+
   * static peak provisioning (the paper's status quo),
-  * Trevor auto-scaling (model-based, one-shot per change),
-  * a Dhalion-style reactive scaler (for convergence-lag comparison).
+  * ``DeclarativePolicy`` — Trevor's model-based one-shot allocation,
+  * a Dhalion-style reactive scaler modeled as capacity lagging load by
+    30 min (for the convergence-lag comparison).
 
-Prints provisioned CPU-hours and SLA violations for each.
+Prints provisioned CPU-hours, SLA violations and the guard-band decision
+mix for each.
 
 Run:  PYTHONPATH=src python examples/autoscale_stream.py
 """
-import numpy as np
+from collections import Counter
 
-from repro.core import AutoScaler, ContainerDim, allocate, oracle_models, solve_flow
-from repro.streams import SimParams, adanalytics, sources
+from repro.control import ControlLoop, DeclarativePolicy, GuardBands, ModelStore
+from repro.control.scenarios import flash_crowd
+from repro.core import ContainerDim, allocate, oracle_models, solve_flow
+from repro.streams import SimParams, adanalytics
 
 DIM = ContainerDim(cpus=3.0, mem_mb=4096.0)
 
@@ -22,27 +32,32 @@ def main() -> None:
     params = SimParams()
     models = oracle_models(dag, params.sm_cost_per_ktuple)
 
-    # 2 days at 5-min resolution, diurnal 3x + a 25x spike on day 2
+    # 2 days at 5-min resolution, diurnal 3x + a ~12x flash crowd on day 2
     n = 2 * 288
-    trace = sources.diurnal(n, base_ktps=150.0, peak_ratio=3.0, seed=1)
-    trace = np.maximum(trace, sources.spike(n, base_ktps=150.0, spike_ratio=12.0,
-                                            spike_start=288 + 144, spike_len=8, seed=2))
+    trace = flash_crowd(n, base_ktps=150.0, seed=1, peak_ratio=3.0,
+                        spike_ratio=12.0, spike_start=288 + 144, spike_len=8)
 
     # --- static peak provisioning (with the paper's typical headroom) ---
     peak = float(trace.max()) * 1.3
     static = allocate(dag, models, peak)
     static_cpu_hours = static.total_cpus * n * 5 / 60
 
-    # --- Trevor auto-scaler ---
-    scaler = AutoScaler(dag, models, headroom=1.25, deadband=0.15)
+    # --- Trevor declarative policy through the control loop ---
+    loop = ControlLoop(
+        DeclarativePolicy(dag, ModelStore(models)),
+        guards=GuardBands(headroom=1.25, deadband=0.15),
+    )
     cpu_hours = 0.0
     violations = 0
     for load in trace:
-        scaler.observe_load(float(load))
-        cap = solve_flow(scaler.current.config, models).rate_ktps
+        loop.step(float(load))
+        assert loop.action is not None and loop.action.config is not None
+        cap = solve_flow(loop.action.config, models).rate_ktps
         if cap < load:
             violations += 1
-        cpu_hours += scaler.current.total_cpus * 5 / 60
+        cpu_hours += loop.action.provisioned * 5 / 60
+    reconfigs = sum(e.acted for e in loop.events)
+    guard_mix = Counter(e.guard for e in loop.events)
 
     # --- reactive lag model: capacity follows load with a 30-min lag ---
     reactive_cpu_hours = 0.0
@@ -60,15 +75,19 @@ def main() -> None:
     print(f"{'mode':24s} {'CPU-hours':>10s} {'SLA misses':>11s} {'reconfigs':>10s}")
     print(f"{'static-peak':24s} {static_cpu_hours:10.0f} {0:11d} {1:10d}")
     print(f"{'trevor-autoscale':24s} {cpu_hours:10.0f} {violations:11d} "
-          f"{scaler.reconfigurations:10d}")
+          f"{reconfigs:10d}")
     print(f"{'reactive (30min lag)':24s} {reactive_cpu_hours:10.0f} "
           f"{reactive_violations:11d} {'n/a':>10s}")
     save = (1 - cpu_hours / static_cpu_hours) * 100
     print(f"\nTrevor saves {save:.0f}% of CPU-hours vs static peak provisioning "
           f"(paper: 2-3x over-provisioning is typical), with "
           f"{violations} SLA misses vs {reactive_violations} for the laggy reactive loop.")
-    print(f"mean allocation latency: {scaler.mean_alloc_seconds()*1e3:.1f} ms "
-          f"(paper: <1 s)")
+    mean_plan = sum(e.plan_seconds for e in loop.events if e.acted) / max(reconfigs, 1)
+    print(f"mean allocation latency: {mean_plan*1e3:.1f} ms (paper: <1 s)")
+    held = guard_mix.get("deadband", 0) + guard_mix.get("anti-thrash", 0)
+    print(f"guard bands held {held}/{n} steps "
+          f"(deadband {guard_mix.get('deadband', 0)}, "
+          f"anti-thrash {guard_mix.get('anti-thrash', 0)})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,30 @@
+"""Unified control plane: one sense→predict→plan→act→learn loop for every
+scaling policy (declarative one-shot, Dhalion-style reactive, hybrid, LM
+chip planning), with shared guard bands, a uniform event log, pooled
+learning/drift/retraining, and a scenario-diverse load-trace library."""
+
+from .loop import (
+    Action,
+    ControlContext,
+    ControlEvent,
+    ControlLoop,
+    GuardBands,
+    LoadSource,
+    Policy,
+    StepRecord,
+)
+from .learning import ModelStore, fold_executor_timings
+from .policies import (
+    DeclarativePolicy,
+    ElasticLMPolicy,
+    HybridPolicy,
+    ReactivePolicy,
+)
+from .scenarios import SCENARIOS, make_trace, replay
+
+__all__ = [
+    "Action", "ControlContext", "ControlEvent", "ControlLoop",
+    "DeclarativePolicy", "ElasticLMPolicy", "GuardBands", "HybridPolicy",
+    "LoadSource", "ModelStore", "Policy", "ReactivePolicy", "SCENARIOS",
+    "StepRecord", "fold_executor_timings", "make_trace", "replay",
+]

@@ -1,0 +1,140 @@
+"""Unified learning layer of the control plane (Trevor §4).
+
+Calibration, drift detection and retraining used to be spread across
+``AutoScaler`` (observe/retrain), ``Calibrator`` (records + factor) and the
+benchmarks (ad-hoc pooling).  :class:`ModelStore` is the single owner now:
+it pools measurements from *any* evaluation engine, exposes the
+over-provisioning factor to every policy, and — on drift — refits the node
+models from the pooled Heron-style metrics.
+
+:func:`fold_executor_timings` closes the standing ROADMAP loop between the
+two evaluation backends: operator timings measured by the real-JAX executor
+are folded back into the simulator's physical truth (calibrated per-node
+costs + a host-speed-scaled stream-manager cost in :class:`SimParams`), so
+drift experiments can replay "the same pipeline, on this machine" through
+the batched simulator.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Mapping, Sequence
+
+import numpy as np
+
+from ..core.calibration import Calibrator
+from ..core.dag import Configuration, DagSpec
+from ..core.metrics import MetricsStore
+from ..core.node_model import NodeModel, fit_workload
+
+if TYPE_CHECKING:
+    from ..streams.engine import ExecutorEvaluator
+    from ..streams.simulator import SimParams
+
+
+class ModelStore:
+    """Pools measurements, owns the node models and the calibration state.
+
+    Every policy reads ``models`` and ``overprovision_factor`` from here;
+    every evaluator's measurements come back through ``observe`` /
+    ``observe_many`` (predict-back calibration) and ``pool`` (raw metric
+    timeseries for retraining).  When the calibrator declares drift,
+    :meth:`retrain` refits every node model from the pooled metrics — the
+    paper's "keep pooling metrics and improve model performance" loop.
+    """
+
+    def __init__(
+        self,
+        models: Mapping[str, NodeModel],
+        calibrator: Calibrator | None = None,
+        max_pooled_samples: int = 4096,
+    ) -> None:
+        self.models = dict(models)
+        self.calibrator = calibrator or Calibrator()
+        self.metrics = MetricsStore()
+        self.max_pooled_samples = max_pooled_samples
+
+    # -- calibration (predict-back, §4) -------------------------------------
+    @property
+    def overprovision_factor(self) -> float:
+        return self.calibrator.overprovision_factor
+
+    def observe(self, config: Configuration, measured_ktps: float) -> bool:
+        """Record one predicted-vs-measured pair; returns the drift flag."""
+        self.calibrator.observe(config, self.models, measured_ktps)
+        return self.drift_detected()
+
+    def observe_many(
+        self, configs: Sequence[Configuration], measured_ktps: Sequence[float]
+    ) -> bool:
+        """Batch form — the natural sink for ``evaluate_batch`` output and
+        for the control loop's buffered saturated measurements."""
+        self.calibrator.observe_many(configs, self.models, measured_ktps)
+        return self.drift_detected()
+
+    def drift_detected(self) -> bool:
+        return self.calibrator.drift_detected()
+
+    @property
+    def retrain_count(self) -> int:
+        return self.calibrator.retrain_count
+
+    # -- metric pooling + retraining ----------------------------------------
+    def pool(self, store: MetricsStore) -> None:
+        """Accumulate Heron-style metric timeseries (bounded: oldest samples
+        are dropped once ``max_pooled_samples`` instance-series are held)."""
+        self.metrics.extend(store)
+        excess = len(self.metrics) - self.max_pooled_samples
+        if excess > 0:
+            self.metrics.samples = self.metrics.samples[excess:]
+
+    def retrain(self, store: MetricsStore | None = None) -> dict[str, NodeModel] | None:
+        """Refit every node model from ``store`` (default: the pooled
+        metrics) and reset the calibration window.  Returns the refit models,
+        or None when there is nothing to fit from."""
+        src = store if store is not None else self.metrics
+        if len(src) == 0:
+            return None
+        fitted = fit_workload(src)
+        self.models.update(fitted)
+        self.calibrator.mark_retrained()
+        return fitted
+
+
+def fold_executor_timings(
+    dag: DagSpec,
+    evaluator: "ExecutorEvaluator | None" = None,
+    params: "SimParams | None" = None,
+    n_batches: int = 5,
+    floor_ktps: float = 50.0,
+) -> tuple[DagSpec, "SimParams"]:
+    """Fold real-executor operator timings into the simulator's physics.
+
+    Returns ``(calibrated_dag, calibrated_params)``: the DAG's ground-truth
+    per-ktuple costs become the wall-clock costs measured on this host, and
+    ``SimParams.sm_cost_per_ktuple`` is rescaled by the median host-speed
+    ratio (measured/spec cost over the timed operators) so the simulated
+    stream managers slow down (or speed up) with the node bodies.  Feeding
+    the result to a :class:`~repro.streams.engine.SimulatorEvaluator` yields
+    a simulator that drifts exactly as this host drifts — the missing link
+    for executor-in-the-loop drift experiments.
+    """
+    from ..streams.simulator import SimParams
+    import dataclasses
+
+    if params is None:
+        params = SimParams()
+    if evaluator is not None:
+        cal = evaluator.calibrated_dag(dag)
+    else:
+        from ..streams.executor import calibrate_dag
+
+        cal = calibrate_dag(dag, n_batches=n_batches, floor_ktps=floor_ktps)
+    ratios = [
+        b.cpu_cost_per_ktuple / a.cpu_cost_per_ktuple
+        for a, b in zip(dag.nodes, cal.nodes)
+        if a.cpu_cost_per_ktuple > 0 and b.cpu_cost_per_ktuple != a.cpu_cost_per_ktuple
+    ]
+    scale = float(np.median(ratios)) if ratios else 1.0
+    new_params = dataclasses.replace(
+        params, sm_cost_per_ktuple=params.sm_cost_per_ktuple * scale
+    )
+    return cal, new_params

@@ -1,0 +1,372 @@
+"""Unified control plane: one sense→predict→plan→act→learn loop.
+
+Trevor's core claim (§3–§4) is that one learned performance model can drive
+*all* control decisions — one-shot configuration, load-following
+auto-scaling, and online refinement under drift.  Before this module the
+repo had four near-duplicate control loops (the declarative auto-scaler, the
+Dhalion-style reactive iterator, the elastic LM chip planner and the bench
+harness around them), each re-implementing headroom/deadband guards and
+measurement feedback with subtly different semantics.
+
+:class:`ControlLoop` is the one driver they all share now:
+
+* **sense** — pull the next load sample from any iterable
+  (:data:`LoadSource`); derive the provisioning target through the shared
+  :class:`GuardBands` headroom,
+* **predict** — consult the deployed action's predicted capacity and the
+  last measurement to spot an SLA breach,
+* **plan** — ask the plugged-in :class:`Policy` for a new
+  :class:`Action` when (and only when) the guards allow it — deadband holds
+  and anti-thrash hysteresis are enforced *here*, identically for every
+  policy,
+* **act** — "deploy" the planned configuration and measure it through any
+  :class:`~repro.streams.engine.ConfigEvaluator` backend (or a raw
+  ``measure`` callback),
+* **learn** — feed saturated measurements to the :class:`ModelStore` in
+  batches (predict-back calibration, §4), pool trajectory metrics, and
+  retrain the node models when drift is declared.
+
+Every step emits one uniform :class:`ControlEvent`, so policies are
+comparable row-for-row in benchmarks and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Callable, Iterable, Protocol, runtime_checkable
+
+from ..core.dag import Configuration
+
+if TYPE_CHECKING:
+    from ..streams.engine import ConfigEvaluator
+    from .learning import ModelStore
+
+#: Anything that yields load samples (ktps for stream policies, tokens/s for
+#: LM policies): a list, a numpy array, a generator over live telemetry...
+LoadSource = Iterable[float]
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardBands:
+    """Shared scaling guards: headroom, deadband, anti-thrash hysteresis.
+
+    ``AutoScaler.observe_load`` and ``ElasticController.observe`` used to
+    hand-roll subtly different versions of these rules (symmetric deadband
+    on the last target vs. capacity-referenced hysteresis).  Every policy now
+    gets one semantics from this one place:
+
+    * the provisioning target is ``load * headroom``,
+    * a relative target change below ``deadband`` holds (no flapping),
+    * scale-*down* additionally requires the target to clear a wider
+      hysteresis band (``down_hysteresis`` deadbands below the reference) —
+      capacity is released reluctantly, acquired eagerly,
+    * a measured SLA breach overrides both holds.
+    """
+
+    headroom: float = 1.2
+    deadband: float = 0.15
+    down_hysteresis: float = 2.0   # scale-down band, in multiples of deadband
+
+    def target_for(self, load: float) -> float:
+        return load * self.headroom
+
+    def decide(
+        self, target: float, reference: float, breached: bool = False
+    ) -> tuple[bool, str]:
+        """Should the loop replan for ``target``, given the last planned
+        ``reference`` target?  Returns ``(act?, reason)``; ``breached`` is
+        the measured-shortfall override."""
+        if reference <= 0:
+            return True, "bootstrap"
+        if breached:
+            return True, "breach"
+        rel = abs(target - reference) / reference
+        if rel < self.deadband:
+            return False, "deadband"
+        if target < reference:
+            if target > reference / (1.0 + self.down_hysteresis * self.deadband):
+                return False, "anti-thrash"
+            return True, "scale-down"
+        return True, "scale-up"
+
+
+@dataclasses.dataclass
+class Action:
+    """What a policy decided to deploy."""
+
+    provisioned: float                  # capacity units: CPUs (stream) / chips (LM)
+    predicted_capacity: float           # sustainable rate the policy expects
+    config: Configuration | None = None  # stream configuration (None for LM policies)
+    detail: object = None               # AllocationResult / LMAllocation / policy dict
+    reason: str = ""
+    # the policy's own capacity probe of ``config`` taken while planning (an
+    # EvalResult from candidate scoring); the loop then derives the delivered
+    # rate — and pools the probe's metrics — instead of re-measuring
+    measurement: object = None
+
+
+@dataclasses.dataclass
+class ControlContext:
+    """What a policy may consult while planning."""
+
+    load: float
+    target: float
+    evaluator: "ConfigEvaluator | None"
+    action: Action | None               # currently deployed action, if any
+    achieved: float | None              # last measurement of the deployed action
+    bottleneck: str | None
+
+
+@runtime_checkable
+class Policy(Protocol):
+    """A scaling brain: maps a provisioning target to an :class:`Action`.
+
+    Policies own *what* to deploy; the loop owns *when* (guards), *how it is
+    scored* (evaluator) and *what is learned* (calibration, drift, retrain).
+    """
+
+    name: str
+
+    def plan(self, target: float, ctx: ControlContext) -> Action: ...
+
+
+@dataclasses.dataclass
+class ControlEvent:
+    """One uniform log row per control step, identical across policies."""
+
+    step: int
+    load: float
+    target: float
+    acted: bool
+    guard: str                 # bootstrap / breach / scale-up / scale-down / deadband / anti-thrash / declared
+    policy: str
+    provisioned: float
+    predicted_capacity: float
+    containers: int = 0        # containers (stream) / chips (LM) deployed
+    achieved: float = float("nan")
+    bottleneck: str | None = None
+    drift: bool = False
+    retrained: bool = False
+    plan_seconds: float = 0.0
+
+
+@dataclasses.dataclass
+class StepRecord:
+    """Per-step trace record — the tuple ``run_against_trace`` always returned."""
+
+    load: float
+    provisioned: float
+    achieved: float
+
+
+class ControlLoop:
+    """The sense→predict→plan→act→learn driver, generic over policies.
+
+    Parameters
+    ----------
+    policy: the scaling brain (declarative, reactive, hybrid, elastic-LM...).
+    guards: shared :class:`GuardBands`; identical semantics for every policy.
+    evaluator: any :class:`~repro.streams.engine.ConfigEvaluator` used to
+        measure deployed configurations (the act phase).  Saturated simulator
+        runs additionally pool their trajectory metrics into the learner —
+        the raw material for drift retraining.
+    measure: raw ``(config, load) -> achieved`` (or ``(achieved, bottleneck)``)
+        callback, used when no evaluator is given.
+    learner: a :class:`~repro.control.learning.ModelStore` receiving
+        saturated measurements (batched through ``observe_many``) and, on
+        drift, retraining node models from its pooled metrics.
+    saturation_threshold: a measurement below ``threshold * load`` means the
+        deployment could not keep up — it reveals true capacity (feeds
+        calibration) and flags an SLA breach for the guards.
+    calibration_batch: measurements are buffered and flushed to the learner
+        in batches of this size (plus a final flush in :meth:`run`).
+    """
+
+    def __init__(
+        self,
+        policy: Policy,
+        guards: GuardBands = GuardBands(),
+        evaluator: "ConfigEvaluator | None" = None,
+        measure: Callable | None = None,
+        learner: "ModelStore | None" = None,
+        saturation_threshold: float = 0.98,
+        calibration_batch: int = 8,
+        auto_retrain: bool = True,
+    ) -> None:
+        self.policy = policy
+        self.guards = guards
+        self.evaluator = evaluator
+        self.measure = measure
+        self.learner = learner
+        self.saturation_threshold = saturation_threshold
+        self.calibration_batch = max(1, int(calibration_batch))
+        self.auto_retrain = auto_retrain
+        self.action: Action | None = None
+        self.events: list[ControlEvent] = []
+        self.records: list[StepRecord] = []
+        self._last_target = 0.0
+        self._last_achieved: float | None = None
+        self._last_bottleneck: str | None = None
+        self._breached = False
+        self._pending_configs: list[Configuration] = []
+        self._pending_measured: list[float] = []
+
+    # -- load-following interface -------------------------------------------
+    def step(self, load: float) -> ControlEvent:
+        """One sense→predict→plan→act→learn iteration for one load sample."""
+        load = float(load)
+        target = self.guards.target_for(load)                       # sense
+        # predict: _breached was set when the deployment was last measured —
+        # it could not keep up with the load offered to it.  Capacity-model
+        # deployments (no measurement channel, config is None) have no such
+        # signal; there the model itself is the sensor, and a predicted
+        # shortfall against the *new* target is actionable immediately.
+        breached = self._breached
+        if not breached and self.action is not None and self.action.config is None:
+            breached = self.action.predicted_capacity < target
+        act, guard = self.guards.decide(target, self._last_target, breached)
+        if self.action is None:
+            act, guard = True, "bootstrap"
+        return self._execute(load, target, act, guard)
+
+    def run(self, loads: LoadSource) -> list[StepRecord]:
+        """Drive the loop over a whole load trace; returns per-step records.
+        Buffered calibration measurements are flushed at the end."""
+        start = len(self.records)
+        for load in loads:
+            self.step(load)
+        drift = self.flush_calibration()
+        if drift and self.auto_retrain and self.learner is not None:
+            self.learner.retrain()
+        return self.records[start:]
+
+    # -- one-shot declarative interface (fig. 2b) ---------------------------
+    def declare(self, target: float, reason: str = "declared") -> ControlEvent:
+        """Plan for ``target`` unconditionally, bypassing sensing and guards
+        — the paper's declarative workflow (operator states the rate)."""
+        return self._execute(target, float(target), True, reason)
+
+    # -- internals ----------------------------------------------------------
+    def _execute(
+        self, load: float, target: float, act: bool, guard: str
+    ) -> ControlEvent:
+        plan_s = 0.0
+        if act:                                                     # plan
+            ctx = ControlContext(
+                load=load,
+                target=target,
+                evaluator=self.evaluator,
+                action=self.action,
+                achieved=self._last_achieved,
+                bottleneck=self._last_bottleneck,
+            )
+            t0 = time.perf_counter()
+            self.action = self.policy.plan(target, ctx)
+            plan_s = time.perf_counter() - t0
+            self._last_target = target
+            # the breach verdict belonged to the replaced deployment; it
+            # re-arms only from a fresh measurement of the new one
+            self._breached = False
+        assert self.action is not None, "policy returned no action"
+
+        achieved = float("nan")                                     # act
+        drift = retrained = False
+        probe = self.action.measurement
+        if act and probe is not None:
+            # the policy already measured this configuration's capacity while
+            # planning (reactive/hybrid candidate scoring): deriving the
+            # delivered rate saves a second deploy+measure cycle per step
+            achieved = min(probe.achieved_ktps, load)
+            self._last_bottleneck = probe.bottleneck
+            self._last_achieved = achieved
+            self._breached = achieved < self.saturation_threshold * load
+            if self.action.config is not None:
+                drift, retrained = self._learn(
+                    self.action.config, load, achieved, getattr(probe, "sim", None)
+                )
+        elif self.action.config is not None:
+            m = self._measure(self.action.config, load)
+            if m is not None:
+                achieved, self._last_bottleneck, sim = m
+                self._last_achieved = achieved
+                self._breached = achieved < self.saturation_threshold * load
+                drift, retrained = self._learn(
+                    self.action.config, load, achieved, sim
+                )
+        else:
+            # capacity-model policies (LM): the model is the only sensor; the
+            # predicted-shortfall check happens at sense time in step()
+            self._last_achieved = self.action.predicted_capacity
+
+        ev = ControlEvent(
+            step=len(self.events),
+            load=load,
+            target=target,
+            acted=act,
+            guard=guard,
+            policy=self.policy.name,
+            provisioned=self.action.provisioned,
+            predicted_capacity=self.action.predicted_capacity,
+            containers=(
+                self.action.config.n_containers
+                if self.action.config is not None
+                else int(self.action.provisioned)
+            ),
+            achieved=achieved,
+            bottleneck=self._last_bottleneck,
+            drift=drift,
+            retrained=retrained,
+            plan_seconds=plan_s,
+        )
+        self.events.append(ev)
+        self.records.append(StepRecord(load, self.action.provisioned, achieved))
+        return ev
+
+    def _measure(
+        self, config: Configuration, load: float
+    ) -> tuple[float, str | None, object] | None:
+        if self.measure is not None:
+            m = self.measure(config, load)
+            if isinstance(m, tuple):
+                return float(m[0]), m[1], None
+            return float(m), None, None
+        if self.evaluator is not None:
+            r = self.evaluator.evaluate(config, offered_ktps=load)
+            return r.achieved_ktps, r.bottleneck, r.sim
+        return None
+
+    def _learn(
+        self, config: Configuration, load: float, achieved: float, sim=None
+    ) -> tuple[bool, bool]:
+        if self.learner is None:
+            return False, False
+        drift = retrained = False
+        if achieved < self.saturation_threshold * load:
+            # Only a saturated measurement reveals true capacity; feeding an
+            # unsaturated rate would miscalibrate the predictor (§4).  The
+            # same runs donate their metric trajectories to the retrain pool:
+            # they describe the world as it is *now* (post-drift), at the
+            # high-utilization operating points that sharpen the fits.
+            self._pending_configs.append(config)
+            self._pending_measured.append(achieved)
+            if sim is not None:
+                self.learner.pool(sim.to_metrics_store())
+        if len(self._pending_configs) >= self.calibration_batch:
+            drift = self.flush_calibration()
+        if drift and self.auto_retrain:
+            retrained = self.learner.retrain() is not None
+        return drift, retrained
+
+    def flush_calibration(self) -> bool:
+        """Push buffered measurements to the learner through the batch API
+        (``observe_many``); returns the learner's drift verdict."""
+        if self.learner is None:
+            return False
+        if self._pending_configs:
+            drift = self.learner.observe_many(
+                self._pending_configs, self._pending_measured
+            )
+            self._pending_configs = []
+            self._pending_measured = []
+            return drift
+        return self.learner.drift_detected()

@@ -1,0 +1,106 @@
+"""Load-scenario library: diverse traffic shapes for every policy (§2.3).
+
+Phoebe's lesson (PAPERS.md) is that anticipating dynamic load needs
+scenario-*diverse* traces, not one canonical curve.  This module is the
+control plane's trace library: every generator takes ``(n, base_ktps,
+seed, **kw)`` and returns a ktps array, and the :data:`SCENARIOS` registry
+lets tests/benchmarks sweep policies over every shape by name.
+
+The primitives build on :mod:`repro.streams.sources` (diurnal, spike,
+weekly — the paper's LinkedIn/Netflix/World-Cup patterns) and add the
+shapes an autoscaler must also survive: flash crowds on top of a daily
+curve, sustained ramps, step changes, and replay of recorded traces.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from ..streams import sources
+
+
+def diurnal(n: int, base_ktps: float = 400.0, seed: int = 0,
+            peak_ratio: float = 3.0, period: int | None = None) -> np.ndarray:
+    """The paper's daily 3-5x curve (LinkedIn 12.7→18 M ev/s)."""
+    period = period if period is not None else max(n // 2, 4)
+    return sources.diurnal(n, base_ktps=base_ktps, peak_ratio=peak_ratio,
+                           period=period, seed=seed)
+
+
+def flash_crowd(n: int, base_ktps: float = 400.0, seed: int = 0,
+                peak_ratio: float = 3.0, spike_ratio: float = 12.0,
+                spike_start: int | None = None,
+                spike_len: int | None = None) -> np.ndarray:
+    """A World-Cup-goal transient riding on the daily curve: the hardest
+    realistic shape (§2.3's 20-25x-for-minutes events)."""
+    spike_len = spike_len if spike_len is not None else max(n // 8, 2)
+    day = diurnal(n, base_ktps=base_ktps, seed=seed, peak_ratio=peak_ratio)
+    burst = sources.spike(n, base_ktps=base_ktps, spike_ratio=spike_ratio,
+                          spike_start=spike_start, spike_len=spike_len,
+                          seed=seed + 1)
+    return np.maximum(day, burst)
+
+
+def ramp(n: int, base_ktps: float = 400.0, seed: int = 0,
+         ratio: float = 4.0, jitter: float = 0.03) -> np.ndarray:
+    """Sustained organic growth: load climbs ``ratio``x over the window."""
+    rng = np.random.default_rng(seed)
+    trace = np.linspace(base_ktps, base_ktps * ratio, n)
+    return trace * (1.0 + jitter * rng.standard_normal(n))
+
+
+def step(n: int, base_ktps: float = 400.0, seed: int = 0,
+         levels: tuple[float, ...] = (1.0, 2.5, 1.5, 4.0),
+         jitter: float = 0.02) -> np.ndarray:
+    """Piecewise-constant level shifts (feature launches, failovers)."""
+    rng = np.random.default_rng(seed)
+    reps = -(-n // len(levels))
+    trace = base_ktps * np.repeat(np.asarray(levels, np.float64), reps)[:n]
+    return trace * (1.0 + jitter * rng.standard_normal(n))
+
+
+def weekly(n: int, base_ktps: float = 400.0, seed: int = 0,
+           day_period: int | None = None) -> np.ndarray:
+    """Seven-day pattern with weekend dips."""
+    day_period = day_period if day_period is not None else max(n // 7, 4)
+    return sources.weekly(n, base_ktps=base_ktps, day_period=day_period, seed=seed)
+
+
+def replay(trace, n: int | None = None, base_ktps: float | None = None) -> np.ndarray:
+    """Replay a recorded trace: resampled to ``n`` points (linear
+    interpolation) and rescaled so its mean is ``base_ktps`` — lets any
+    production recording drive every policy at a comparable operating
+    point."""
+    src = np.asarray(trace, np.float64)
+    if src.ndim != 1 or src.size < 2:
+        raise ValueError("replay needs a 1-D trace with >= 2 samples")
+    if n is not None and n != src.size:
+        x_new = np.linspace(0.0, 1.0, n)
+        x_old = np.linspace(0.0, 1.0, src.size)
+        src = np.interp(x_new, x_old, src)
+    if base_ktps is not None:
+        mean = float(src.mean())
+        if mean > 0:
+            src = src * (base_ktps / mean)
+    return src
+
+
+#: Name → generator registry: every entry takes (n, base_ktps=..., seed=...).
+SCENARIOS: dict[str, Callable[..., np.ndarray]] = {
+    "diurnal": diurnal,
+    "flash_crowd": flash_crowd,
+    "ramp": ramp,
+    "step": step,
+    "weekly": weekly,
+}
+
+
+def make_trace(name: str, n: int, base_ktps: float = 400.0, seed: int = 0,
+               **kw) -> np.ndarray:
+    """Build a named scenario trace; raises ``KeyError`` for unknown names."""
+    if name not in SCENARIOS:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {sorted(SCENARIOS)}"
+        )
+    return SCENARIOS[name](n, base_ktps=base_ktps, seed=seed, **kw)

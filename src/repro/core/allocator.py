@@ -159,7 +159,11 @@ def compose_balanced_container(
     if not round_up:
         rho = min(
             [rho]
-            + [counts[nm] * models[nm].peak_rate_ktps / rel[nm] for nm in group]
+            + [
+                counts[nm] * models[nm].peak_rate_ktps / rel[nm]
+                for nm in group
+                if rel[nm] > 0  # a zero-gamma-fed node absorbs no rate
+            ]
         )
     cpus = sum(
         counts[nm] * models[nm].cpu_at(rho * rel[nm] / counts[nm]) for nm in group

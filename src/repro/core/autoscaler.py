@@ -1,9 +1,13 @@
-"""Declarative auto-scaling agent (Trevor fig. 2b, §3).
+"""Declarative auto-scaling agent (Trevor fig. 2b, §3) — back-compat shim.
 
-The operator declares a target tuple-rate (or the agent derives one from
-observed load); the agent calls the allocator for a fresh configuration in a
-single shot — no reactive iteration.  The agent also owns the online loop:
-pool metrics, recalibrate the over-provisioning factor, retrain on drift.
+The control logic lives in :mod:`repro.control` now: :class:`AutoScaler` is
+a thin wrapper over a :class:`~repro.control.loop.ControlLoop` driving a
+:class:`~repro.control.policies.DeclarativePolicy`, with headroom/deadband
+enforced by the shared :class:`~repro.control.loop.GuardBands` and the
+online loop (pool metrics, recalibrate, retrain on drift) owned by a
+:class:`~repro.control.learning.ModelStore`.  The public surface
+(`configure_for`, `observe_load`, `observe_measurement(s)`,
+`calibrate_with`, `retrain`, `events`, `run_against_trace`) is unchanged.
 """
 from __future__ import annotations
 
@@ -11,14 +15,14 @@ import dataclasses
 import time
 from typing import TYPE_CHECKING, Callable, Mapping, Sequence
 
-from .allocator import AllocationResult, allocate
+from .allocator import AllocationResult
 
 if TYPE_CHECKING:
     from ..streams.engine import ConfigEvaluator
 from .calibration import Calibrator
 from .dag import Configuration, ContainerDim, DagSpec
 from .metrics import MetricsStore
-from .node_model import NodeModel, fit_workload
+from .node_model import NodeModel
 
 
 @dataclasses.dataclass
@@ -33,7 +37,7 @@ class ScalingEvent:
 
 
 class AutoScaler:
-    """Model-based auto-scaler.
+    """Model-based auto-scaler (thin shim over the unified control loop).
 
     Parameters
     ----------
@@ -52,67 +56,109 @@ class AutoScaler:
         preferred_dim: ContainerDim | None = None,
         calibrator: Calibrator | None = None,
     ) -> None:
-        self.dag = dag
-        self.models = dict(models)
-        self.headroom = headroom
-        self.deadband = deadband
-        self.preferred_dim = preferred_dim
-        self.calibrator = calibrator or Calibrator()
-        self.current: AllocationResult | None = None
-        self.events: list[ScalingEvent] = []
-        self._last_target = 0.0
+        from ..control.learning import ModelStore
+        from ..control.loop import ControlLoop, GuardBands
+        from ..control.policies import DeclarativePolicy
 
-    # -- one-shot declarative interface (fig. 2b) --------------------------
-    def configure_for(self, target_ktps: float, reason: str = "declared") -> AllocationResult:
-        t0 = time.perf_counter()
-        res = allocate(
-            self.dag,
-            self.models,
-            target_ktps,
-            preferred_dim=self.preferred_dim,
-            overprovision=self.calibrator.overprovision_factor,
+        self.dag = dag
+        self.store = ModelStore(models, calibrator)
+        self.loop = ControlLoop(
+            DeclarativePolicy(dag, self.store, preferred_dim=preferred_dim),
+            guards=GuardBands(headroom=headroom, deadband=deadband),
+            learner=self.store,
+            auto_retrain=False,   # back-compat: the caller decides when to retrain
         )
-        dt = time.perf_counter() - t0
-        self.current = res
-        self._last_target = target_ktps
+        self.events: list[ScalingEvent] = []
+
+    # -- tunables forwarded live to the loop/policy (not captured copies) ---
+    @property
+    def headroom(self) -> float:
+        return self.loop.guards.headroom
+
+    @headroom.setter
+    def headroom(self, v: float) -> None:
+        self.loop.guards = dataclasses.replace(self.loop.guards, headroom=float(v))
+
+    @property
+    def deadband(self) -> float:
+        return self.loop.guards.deadband
+
+    @deadband.setter
+    def deadband(self, v: float) -> None:
+        self.loop.guards = dataclasses.replace(self.loop.guards, deadband=float(v))
+
+    @property
+    def preferred_dim(self) -> ContainerDim | None:
+        return self.loop.policy.preferred_dim
+
+    @preferred_dim.setter
+    def preferred_dim(self, dim: ContainerDim | None) -> None:
+        self.loop.policy.preferred_dim = dim
+
+    @property
+    def models(self) -> dict[str, NodeModel]:
+        return self.store.models
+
+    @models.setter
+    def models(self, models: Mapping[str, NodeModel]) -> None:
+        if models is not self.store.models:
+            self.store.models.clear()
+            self.store.models.update(models)
+
+    @property
+    def calibrator(self) -> Calibrator:
+        return self.store.calibrator
+
+    @property
+    def current(self) -> AllocationResult | None:
+        return self.loop.action.detail if self.loop.action is not None else None
+
+    def _record_event(self, ev, reason: str) -> None:
+        """Map one acted ControlEvent to the legacy ScalingEvent shape."""
         self.events.append(
             ScalingEvent(
                 t=time.time(),
-                load_ktps=target_ktps,
-                target_ktps=target_ktps,
-                n_containers=res.config.n_containers,
-                total_cpus=res.total_cpus,
+                load_ktps=ev.load,
+                target_ktps=ev.target,
+                n_containers=ev.containers,
+                total_cpus=ev.provisioned,
                 reason=reason,
-                alloc_seconds=dt,
+                alloc_seconds=ev.plan_seconds,
             )
         )
+
+    # -- one-shot declarative interface (fig. 2b) --------------------------
+    def configure_for(self, target_ktps: float, reason: str = "declared") -> AllocationResult:
+        ev = self.loop.declare(target_ktps, reason=reason)
+        res = self.current
+        assert res is not None
+        self._record_event(ev, reason)
         return res
 
     # -- load-following loop ------------------------------------------------
     def observe_load(self, load_ktps: float) -> AllocationResult | None:
         """Called with the current observed load; returns a new allocation
-        when the deadband is exceeded (else None = keep current config)."""
-        target = load_ktps * self.headroom
-        if self.current is not None and self._last_target > 0:
-            rel = abs(target - self._last_target) / self._last_target
-            if rel < self.deadband:
-                return None
-        return self.configure_for(target, reason=f"load={load_ktps:.0f}ktps")
+        when the guard bands allow replanning (else None = keep current)."""
+        ev = self.loop.step(load_ktps)
+        if not ev.acted:
+            return None
+        res = self.current
+        assert res is not None
+        self._record_event(ev, f"load={load_ktps:.0f}ktps")
+        return res
 
     # -- online refinement (§4) ----------------------------------------------
     def observe_measurement(self, config: Configuration, measured_ktps: float) -> bool:
         """Record predicted-vs-measured; returns True if drift was declared
         (caller should retrain via :meth:`retrain`)."""
-        self.calibrator.observe(config, self.models, measured_ktps)
-        return self.calibrator.drift_detected()
+        return self.store.observe(config, measured_ktps)
 
     def observe_measurements(
         self, configs: Sequence[Configuration], measured_ktps: Sequence[float]
     ) -> bool:
         """Batch form of :meth:`observe_measurement` — e.g. one
         ``evaluate_batch`` worth of saturated capacity measurements."""
-        self.calibrator.observe_many(configs, self.models, measured_ktps)
-        return self.calibrator.drift_detected()
+        return self.store.observe_many(configs, measured_ktps)
 
     def calibrate_with(
         self, evaluator: "ConfigEvaluator", configs: Sequence[Configuration]
@@ -126,8 +172,7 @@ class AutoScaler:
 
     def retrain(self, store: MetricsStore) -> None:
         """Refit every node model from pooled metrics and reset calibration."""
-        self.models.update(fit_workload(store))
-        self.calibrator.mark_retrained()
+        self.store.retrain(store)
 
     # -- reporting ------------------------------------------------------------
     @property
@@ -145,6 +190,7 @@ def run_against_trace(
     load_trace_ktps,
     measure: Callable[[Configuration, float], float] | None = None,
     evaluator: "ConfigEvaluator | None" = None,
+    saturation_threshold: float = 0.98,
 ) -> list[tuple[float, float, float]]:
     """Drive the scaler with a load trace.  Returns per-step
     (load, provisioned_cpus, achieved_rate) tuples.  ``measure(config, load)``
@@ -153,22 +199,24 @@ def run_against_trace(
     Passing an ``evaluator`` instead of a raw callback routes measurements
     through the engine layer: with the simulator backend's sticky shape
     buckets, every step of the trace re-uses the same compiled tick kernel
-    (≤ a couple of XLA compilations for a whole autoscaling run)."""
-    if evaluator is not None and measure is None:
-        def measure(cfg: Configuration, load: float) -> float:
-            return evaluator.evaluate(cfg, offered_ktps=load).achieved_ktps
-    out = []
-    for load in load_trace_ktps:
-        load = float(load)
-        scaler.observe_load(load)
-        assert scaler.current is not None
-        cfg = scaler.current.config
-        achieved = float("nan")
-        if measure is not None:
-            achieved = measure(cfg, load)
-            # Only a saturated measurement reveals true capacity; feeding an
-            # unsaturated rate would miscalibrate the predictor.
-            if achieved < 0.98 * load:
-                scaler.observe_measurement(cfg, achieved)
-        out.append((load, scaler.current.total_cpus, achieved))
-    return out
+    (≤ a couple of XLA compilations for a whole autoscaling run), and the
+    saturated measurements reach the calibrator in batches through the
+    ``observe_measurements`` API rather than one call per step.
+
+    A measurement below ``saturation_threshold * load`` is treated as
+    saturated: only those reveal true capacity (an unsaturated rate would
+    miscalibrate the predictor, §4).
+    """
+    loop = scaler.loop
+    prev = (loop.evaluator, loop.measure, loop.saturation_threshold)
+    loop.evaluator = evaluator
+    loop.measure = measure
+    loop.saturation_threshold = saturation_threshold
+    try:
+        records = loop.run([float(x) for x in load_trace_ktps])
+    finally:
+        loop.evaluator, loop.measure, loop.saturation_threshold = prev
+    for ev in loop.events[len(loop.events) - len(records):]:
+        if ev.acted:
+            scaler._record_event(ev, f"load={ev.load:.0f}ktps")
+    return [(r.load, r.provisioned, r.achieved) for r in records]

@@ -75,6 +75,31 @@ def _candidate_modifications(
     return cands[: max(1, k)]
 
 
+def speculative_step(
+    dag: DagSpec,
+    par: Mapping[str, int],
+    bottleneck: str | None,
+    evaluator: "ConfigEvaluator",
+    k: int,
+    dim: ContainerDim,
+    instances_per_container: int,
+):
+    """One speculative Dhalion deploy cycle: score the K most likely point
+    modifications in a single ``evaluate_batch`` and deploy the winner
+    (ties broken toward the smaller total parallelism).  Returns
+    ``(parallelism, config, eval_result)`` of the winner.  Shared by
+    :func:`reactive_scale` and the control plane's ``ReactivePolicy`` so
+    their resolvers cannot diverge."""
+    cands = _candidate_modifications(par, bottleneck, k)
+    cfgs = [_pack(dag, c, dim, instances_per_container) for c in cands]
+    evals = evaluator.evaluate_batch(cfgs)
+    best = max(
+        range(len(cands)),
+        key=lambda i: (evals[i].achieved_ktps, -sum(cands[i].values())),
+    )
+    return dict(cands[best]), cfgs[best], evals[best]
+
+
 def reactive_scale(
     dag: DagSpec,
     target_ktps: float,
@@ -125,16 +150,11 @@ def reactive_scale(
             converged = True
             break
         if evaluator is not None and speculative_k > 1:
-            cands = _candidate_modifications(par, bottleneck, speculative_k)
-            cfgs = [_pack(dag, c, dim, instances_per_container) for c in cands]
-            evals = evaluator.evaluate_batch(cfgs)
-            best = max(
-                range(len(cands)),
-                key=lambda i: (evals[i].achieved_ktps, -sum(cands[i].values())),
+            par, cfg, ev_best = speculative_step(
+                dag, par, bottleneck, evaluator, speculative_k, dim,
+                instances_per_container,
             )
-            par = cands[best]
-            cfg = cfgs[best]
-            pending = (evals[best].achieved_ktps, evals[best].bottleneck)
+            pending = (ev_best.achieved_ktps, ev_best.bottleneck)
             continue
         # point modification: bump the bottleneck (or everything, if unknown)
         if bottleneck is not None and bottleneck in par:

@@ -1,3 +1,7 @@
+from .elastic import ElasticController, ElasticEvent
 from .fault import FailurePlan, InjectedFailure, StragglerMonitor, run_with_restarts
 
-__all__ = ["FailurePlan", "InjectedFailure", "StragglerMonitor", "run_with_restarts"]
+__all__ = [
+    "ElasticController", "ElasticEvent", "FailurePlan", "InjectedFailure",
+    "StragglerMonitor", "run_with_restarts",
+]

@@ -1,17 +1,20 @@
-"""Elastic scaling: Trevor's declarative allocator driving TPU capacity.
+"""Elastic scaling: Trevor's declarative allocator driving TPU capacity —
+back-compat shim over the unified control plane.
 
-The controller watches the serving/training load (tokens/sec), and — exactly
-like the paper's auto-scaler, but with ``lm_bridge`` cost models instead of
-cputil fits — emits re-mesh decisions in closed form.  Consolidated
-checkpoints (``repro.checkpoint``) make the re-mesh executable: restart with
-the new chip count and restore.
+The controller watches the serving/training load (tokens/sec) and emits
+re-mesh decisions in closed form.  The brain is
+:class:`~repro.control.policies.ElasticLMPolicy` (``lm_bridge`` cost models
+instead of cputil fits) and the deadband/hysteresis guards are the shared
+:class:`~repro.control.loop.GuardBands` — the same semantics every other
+policy gets.  Consolidated checkpoints (``repro.checkpoint``) make the
+re-mesh executable: restart with the new chip count and restore.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable
 
-from ..core.lm_bridge import LMAllocation, LMWorkloadModel, allocate_chips
+from ..core.lm_bridge import LMAllocation, LMWorkloadModel
 
 
 @dataclasses.dataclass
@@ -35,15 +38,67 @@ class ElasticController:
         max_chips: int = 4096,
         on_remesh: Callable[[ElasticEvent], None] | None = None,
     ):
-        self.model = model
-        self.tokens_per_step = tokens_per_step
-        self.headroom = headroom
-        self.deadband = deadband
-        self.min_chips = min_chips
-        self.max_chips = max_chips
+        from ..control.loop import ControlLoop, GuardBands
+        from ..control.policies import ElasticLMPolicy
+
         self.chips = min_chips
         self.events: list[ElasticEvent] = []
         self.on_remesh = on_remesh
+        self.loop = ControlLoop(
+            ElasticLMPolicy(
+                model, tokens_per_step, min_chips=min_chips, max_chips=max_chips
+            ),
+            guards=GuardBands(headroom=headroom, deadband=deadband),
+        )
+
+    # -- tunables forwarded live to the loop/policy (not captured copies) ---
+    @property
+    def model(self) -> LMWorkloadModel:
+        return self.loop.policy.model
+
+    @model.setter
+    def model(self, m: LMWorkloadModel) -> None:
+        self.loop.policy.model = m
+
+    @property
+    def tokens_per_step(self) -> int:
+        return self.loop.policy.tokens_per_step
+
+    @tokens_per_step.setter
+    def tokens_per_step(self, n: int) -> None:
+        self.loop.policy.tokens_per_step = n
+
+    @property
+    def headroom(self) -> float:
+        return self.loop.guards.headroom
+
+    @headroom.setter
+    def headroom(self, v: float) -> None:
+        self.loop.guards = dataclasses.replace(self.loop.guards, headroom=float(v))
+
+    @property
+    def deadband(self) -> float:
+        return self.loop.guards.deadband
+
+    @deadband.setter
+    def deadband(self, v: float) -> None:
+        self.loop.guards = dataclasses.replace(self.loop.guards, deadband=float(v))
+
+    @property
+    def min_chips(self) -> int:
+        return self.loop.policy.min_chips
+
+    @min_chips.setter
+    def min_chips(self, n: int) -> None:
+        self.loop.policy.min_chips = n
+
+    @property
+    def max_chips(self) -> int:
+        return self.loop.policy.max_chips
+
+    @max_chips.setter
+    def max_chips(self, n: int) -> None:
+        self.loop.policy.max_chips = n
 
     def capacity_tokens_per_s(self, chips: int | None = None) -> float:
         return self.model.tokens_per_second(
@@ -52,25 +107,20 @@ class ElasticController:
 
     def observe(self, load_tokens_per_s: float) -> LMAllocation | None:
         """Returns a new allocation when a re-mesh is warranted, else None."""
-        target = load_tokens_per_s * self.headroom
-        cap = self.capacity_tokens_per_s()
-        if cap > 0:
-            rel = abs(target - cap) / cap
-            scale_up_needed = target > cap
-            if rel < self.deadband and not scale_up_needed:
-                return None
-            if not scale_up_needed and target > cap / (1 + 2 * self.deadband):
-                return None  # avoid thrashing on the way down
-        alloc = allocate_chips(
-            self.model, target, self.tokens_per_step, max_chips=self.max_chips
-        )
-        chips = max(self.min_chips, min(alloc.chips, self.max_chips))
+        ev = self.loop.step(load_tokens_per_s)
+        if not ev.acted:
+            return None
+        action = self.loop.action
+        assert action is not None
+        alloc: LMAllocation = action.detail
+        chips = int(action.provisioned)
         if chips == self.chips:
             return None
-        ev = ElasticEvent(load_tokens_per_s, self.chips, chips,
-                          f"target={target:.0f}tok/s")
+        event = ElasticEvent(
+            load_tokens_per_s, self.chips, chips, f"target={ev.target:.0f}tok/s"
+        )
         self.chips = chips
-        self.events.append(ev)
+        self.events.append(event)
         if self.on_remesh is not None:
-            self.on_remesh(ev)
+            self.on_remesh(event)
         return alloc

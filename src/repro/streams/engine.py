@@ -151,6 +151,12 @@ class ExecutorEvaluator:
             )
         return self._calibrated[dag.name]
 
+    def calibrated_dag(self, dag: DagSpec) -> DagSpec:
+        """The DAG with this host's measured per-ktuple costs (cached) —
+        consumed by :func:`repro.control.learning.fold_executor_timings` to
+        re-parameterize the simulator's physical truth."""
+        return self._dag_for(dag)
+
     def evaluate(
         self, config: Configuration, offered_ktps: float = OVERLOAD_KTPS
     ) -> EvalResult:

@@ -398,7 +398,16 @@ def _get_batch_kernel(batch: int, n_inst: int, n_cont: int, n_ticks: int,
     if fn is None:
         _CACHE_STATS["misses"] += 1
         core = partial(_simulate_core, n_ticks=n_ticks, sample_every=sample_every)
-        fn = jax.jit(jax.vmap(core, in_axes=(0, 0, 0) + (None,) * 7))
+        # Donate the padded batch buffers (stacked structure arrays, per-tick
+        # loads, seeds): they are rebuilt from host numpy on every call, so
+        # XLA may reuse their memory for outputs — on 100+-candidate sweeps
+        # that halves peak device memory.  CPU XLA cannot donate (it would
+        # only warn), so donation is enabled on accelerators only.
+        donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+        fn = jax.jit(
+            jax.vmap(core, in_axes=(0, 0, 0) + (None,) * 7),
+            donate_argnums=donate,
+        )
         _KERNEL_CACHE[key] = fn
     else:
         _CACHE_STATS["hits"] += 1
@@ -524,9 +533,12 @@ def simulate_batch(
 ) -> list[SimResult]:
     """Evaluate N configurations in one vmapped kernel call.
 
-    ``offered_ktps`` is either one load shared by every configuration or a
-    sequence of per-configuration loads (each a scalar or a per-sample
-    trace).  All configurations are padded to a common shape bucket; the
+    ``offered_ktps`` is either one *scalar* load shared by every
+    configuration or a sequence of per-configuration loads (each a scalar or
+    a per-sample trace).  A bare 1-D array is always interpreted as
+    per-configuration loads — to share one trace across every configuration
+    pass ``[trace] * len(configs)``.  All configurations are padded to a
+    common shape bucket; the
     ``min_*_bucket`` floors let a caller pin the bucket it already compiled
     (sticky bucketing — see :class:`repro.streams.engine.SimulatorEvaluator`).
     """

@@ -1,9 +1,9 @@
-"""Auto-scaler + reactive (Dhalion-style) baseline behaviour."""
+"""Auto-scaling behaviour through the unified control plane, plus the
+Dhalion-style reactive baseline (classic entry point)."""
 import numpy as np
-import pytest
 
+from repro.control import ControlLoop, DeclarativePolicy, GuardBands, ModelStore
 from repro.core import (
-    AutoScaler,
     Configuration,
     ContainerDim,
     oracle_models,
@@ -20,38 +20,43 @@ def _models(dag):
     return oracle_models(dag, PARAMS.sm_cost_per_ktuple)
 
 
-def test_autoscaler_single_shot_configures_for_target():
+def _declarative_loop(dag, headroom=1.2, deadband=0.15):
+    return ControlLoop(
+        DeclarativePolicy(dag, ModelStore(_models(dag))),
+        guards=GuardBands(headroom=headroom, deadband=deadband),
+    )
+
+
+def test_declarative_single_shot_configures_for_target():
     dag = wordcount()
-    scaler = AutoScaler(dag, _models(dag))
-    res = scaler.configure_for(2000.0)
-    sol = solve_flow(res.config, _models(dag))
+    loop = _declarative_loop(dag)
+    ev = loop.declare(2000.0)
+    sol = solve_flow(loop.action.config, _models(dag))
     assert sol.rate_ktps >= 2000.0 * 0.999
-    assert scaler.mean_alloc_seconds() < 1.0  # the paper's sub-second claim
+    assert ev.plan_seconds < 1.0  # the paper's sub-second claim
 
 
-def test_autoscaler_deadband_prevents_flapping():
+def test_guard_bands_prevent_flapping():
     dag = wordcount()
-    scaler = AutoScaler(dag, _models(dag), deadband=0.15)
-    scaler.configure_for(1000.0)
-    n0 = scaler.reconfigurations
-    assert scaler.observe_load(1000.0 / scaler.headroom * 1.02) is None
-    assert scaler.reconfigurations == n0
-    assert scaler.observe_load(3000.0) is not None
-    assert scaler.reconfigurations == n0 + 1
+    loop = _declarative_loop(dag, deadband=0.15)
+    loop.declare(1000.0)
+    # a within-deadband wobble holds; a 3x change replans
+    ev = loop.step(1000.0 / loop.guards.headroom * 1.02)
+    assert not ev.acted and ev.guard == "deadband"
+    ev = loop.step(3000.0)
+    assert ev.acted and ev.guard == "scale-up"
 
 
-def test_autoscaler_follows_spike_trace():
+def test_declarative_loop_follows_spike_trace():
     dag = wordcount()
-    scaler = AutoScaler(dag, _models(dag))
+    loop = _declarative_loop(dag)
     trace = sources.spike(20, base_ktps=400.0, spike_ratio=8.0, seed=1)
-    cpus = []
-    for load in trace:
-        scaler.observe_load(float(load))
-        cpus.append(scaler.current.total_cpus)
-    cpus = np.asarray(cpus)
+    recs = loop.run(trace)
+    cpus = np.asarray([r.provisioned for r in recs])
     # provisioning scales up through the spike and back down after
     assert cpus.max() > cpus[0] * 2
     assert cpus[-1] < cpus.max() * 0.7
+    assert len(loop.events) == len(trace)
 
 
 def test_reactive_baseline_converges_slower_than_one_shot():
@@ -70,10 +75,10 @@ def test_reactive_baseline_converges_slower_than_one_shot():
     # 2 min per deploy cycle -> tens of minutes, vs sub-second for Trevor
     assert reactive.convergence_seconds >= 3 * 120
 
-    scaler = AutoScaler(dag, _models(dag))
-    res = scaler.configure_for(target)
-    assert scaler.mean_alloc_seconds() < 1.0
-    achieved = measure_capacity(res.config, PARAMS, duration_s=10.0)
+    loop = _declarative_loop(dag)
+    ev = loop.declare(target)
+    assert ev.plan_seconds < 1.0
+    achieved = measure_capacity(loop.action.config, PARAMS, duration_s=10.0)
     assert achieved >= target * 0.85  # models are approximate; calibration closes the rest
 
 
@@ -86,7 +91,7 @@ def test_trevor_allocation_is_not_less_efficient_than_reactive():
         return res.achieved_ktps, res.bottleneck_node()
 
     reactive = reactive_scale(dag, target, measure, dim=DIM, max_iterations=24)
-    scaler = AutoScaler(dag, _models(dag))
-    trevor = scaler.configure_for(target)
+    loop = _declarative_loop(dag)
+    loop.declare(target)
     if reactive.converged:
-        assert trevor.total_cpus <= reactive.final_config.total_cpus() * 1.25
+        assert loop.action.provisioned <= reactive.final_config.total_cpus() * 1.25
