@@ -1,0 +1,144 @@
+"""Fleet layer: device-sharded candidate sweeps + joint scheduling latency.
+
+Two questions:
+
+* does sharding ``simulate_batch`` across devices pay on a wide candidate
+  sweep (the fleet scheduler's joint-scoring shape)?  A 128-candidate
+  sweep is timed on the single-device vmap path and the pmap-sharded path.
+  Sharding needs >1 device, so when the current process sees a single
+  device the measurement re-execs itself in a subprocess with
+  ``--xla_force_host_platform_device_count=8`` (the multi-device-smoke CI
+  pattern);
+* what does one joint 3-tenant scheduling round cost end to end
+  (budget-constrained allocation + bin-packing + one batched scoring
+  call)?
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit, timed
+
+N_CANDIDATES = 128
+DURATION_S = 2.0
+_SWEEP_ENV = "BENCH_FLEET_SWEEP_CHILD"
+
+
+def _sweep_times() -> dict:
+    """Time the 128-candidate sweep unsharded vs sharded (current process)."""
+    import jax
+
+    from repro.core import ContainerDim, round_robin_configuration
+    from repro.streams import SimParams, simulate_batch, deep_pipeline
+
+    # the fleet sweep shape: a wide candidate batch over a DAG big enough to
+    # land in the 32-instance bucket (real per-candidate compute)
+    dag = deep_pipeline()
+    dim = ContainerDim(cpus=3.0, mem_mb=4096.0)
+    cfgs = [
+        round_robin_configuration(
+            dag,
+            {n: 1 + (i + j) % 3 for j, n in enumerate(dag.node_names)},
+            3 + i % 5,
+            dim,
+        )
+        for i in range(N_CANDIDATES)
+    ]
+    params = SimParams()
+
+    def run(devices):
+        return simulate_batch(
+            cfgs, 1e6, duration_s=DURATION_S, params=params, devices=devices
+        )
+
+    _, us_single = timed(run, 1, repeats=3, warmup=1)
+    _, us_sharded = timed(run, None, repeats=3, warmup=1)
+    return {
+        "devices": jax.local_device_count(),
+        "us_single": us_single,
+        "us_sharded": us_sharded,
+    }
+
+
+def _sweep_times_forced_multidevice() -> dict:
+    """Re-exec the sweep with 8 fake host devices (subprocess: XLA device
+    count is fixed at backend init, so it cannot change in-process)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    env[_SWEEP_ENV] = "1"
+    env.setdefault("PYTHONPATH", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_fleet"],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"forced-multidevice sweep failed:\n{out.stderr}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run() -> dict:
+    import jax
+
+    if jax.local_device_count() > 1:
+        sweep = _sweep_times()
+    else:
+        sweep = _sweep_times_forced_multidevice()
+    speedup = sweep["us_single"] / max(sweep["us_sharded"], 1e-9)
+    emit(
+        f"simulate_batch_{N_CANDIDATES}cand_single_device",
+        sweep["us_single"],
+        f"devices=1;candidates={N_CANDIDATES}",
+    )
+    emit(
+        f"simulate_batch_{N_CANDIDATES}cand_sharded",
+        sweep["us_sharded"],
+        f"devices={sweep['devices']};speedup={speedup:.2f}x_vs_vmap",
+    )
+
+    # one joint 3-tenant scheduling round, end to end
+    from repro.control import GuardBands
+    from repro.core import ContainerDim, oracle_models
+    from repro.fleet import Cluster, FleetScheduler, MachineClass, QosTier, TenantSpec
+    from repro.streams import (
+        SimParams, SimulatorEvaluator, adanalytics, diamond, wordcount,
+    )
+
+    params = SimParams()
+    dim = ContainerDim(cpus=3.0, mem_mb=4096.0)
+
+    def tenant(name, dag, qos, target):
+        return TenantSpec(
+            name=name, dag=dag, target_ktps=target, qos=qos,
+            models=oracle_models(dag, params.sm_cost_per_ktuple),
+            guards=GuardBands(), preferred_dim=dim,
+        )
+
+    tenants = [
+        (tenant("ads", adanalytics(), QosTier.GUARANTEED, 400.0), 480.0),
+        (tenant("clicks", diamond(), QosTier.STANDARD, 250.0), 300.0),
+        (tenant("wc", wordcount(), QosTier.BEST_EFFORT, 800.0), 960.0),
+    ]
+    cluster = Cluster([MachineClass("std", count=8, cores=4.0, mem_mb=16384.0)])
+    sched = FleetScheduler(
+        cluster, SimulatorEvaluator(params=params, duration_s=2.0)
+    )
+    plan, us_sched = timed(sched.schedule, tenants, repeats=3, warmup=1)
+    emit(
+        "fleet_schedule_3tenants",
+        us_sched,
+        f"cores_used={plan.cores_used:.0f}of{plan.cores_total:.0f};"
+        f"degraded={sum(a.degraded for a in plan.allocations)}",
+    )
+    return {"sweep": sweep, "plan": plan}
+
+
+if __name__ == "__main__":
+    if os.environ.get(_SWEEP_ENV):
+        print(json.dumps(_sweep_times()))
+    else:
+        run()

@@ -28,6 +28,17 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def _kernel_cache_snapshot() -> dict | None:
+    """Tick-kernel compile/hit counts for the run, so the perf trajectory
+    tracks recompiles (a perf regression can hide behind warm wall time)."""
+    try:
+        from repro.streams import kernel_cache_info
+
+        return dict(kernel_cache_info())
+    except Exception:
+        return None
+
+
 def dump_json(path: str | None = None) -> str | None:
     """Write the collected rows as BENCH JSON.  ``path`` defaults to the
     ``BENCH_JSON`` environment variable; no-op when neither is set."""
@@ -38,6 +49,7 @@ def dump_json(path: str | None = None) -> str | None:
         "schema": "bench.v1",
         "generated_unix": int(time.time()),
         "results": RESULTS,
+        "kernel_cache": _kernel_cache_snapshot(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)

@@ -1,0 +1,103 @@
+"""Three tenants, one finite cluster: QoS-aware fleet scheduling end to end.
+
+A guaranteed ad-analytics pipeline, a standard diamond-join pipeline and a
+best-effort wordcount batch job share one 28-core cluster.  Each tenant
+follows its own traffic shape (diurnal / sawtooth / bursty — heterogeneous
+per-tenant scenarios from ``repro.control.scenarios``), and the
+:class:`~repro.fleet.FleetLoop` re-schedules the whole fleet jointly
+whenever any tenant's guard bands fire.
+
+Mid-run, the guaranteed tenant's diurnal peak triples its demand — the
+budget squeeze.  The event log shows the scheduler shedding the
+best-effort tenant's capacity first (degraded, then shut out) while the
+guaranteed tenant keeps meeting its SLA throughout.
+
+Run:  PYTHONPATH=src python examples/fleet_demo.py
+"""
+from repro.control import GuardBands
+from repro.control.scenarios import make_trace
+from repro.core import ContainerDim, oracle_models
+from repro.fleet import Cluster, FleetLoop, MachineClass, QosTier, TenantSpec
+from repro.streams import SimParams, SimulatorEvaluator, adanalytics, diamond, wordcount
+
+DIM = ContainerDim(cpus=3.0, mem_mb=4096.0)
+N_STEPS = 24
+
+
+def main() -> None:
+    params = SimParams()
+
+    def tenant(name, dag, qos, target):
+        return TenantSpec(
+            name=name,
+            dag=dag,
+            target_ktps=target,
+            qos=qos,
+            models=oracle_models(dag, params.sm_cost_per_ktuple),
+            guards=GuardBands(headroom=1.2, deadband=0.15),
+            preferred_dim=DIM,
+        )
+
+    tenants = [
+        tenant("ads", adanalytics(), QosTier.GUARANTEED, 400.0),
+        tenant("clicks", diamond(), QosTier.STANDARD, 250.0),
+        tenant("wordcount", wordcount(), QosTier.BEST_EFFORT, 1000.0),
+    ]
+
+    # a pool sized for the off-peak mix: the diurnal peak makes it bind
+    cluster = Cluster(
+        [
+            MachineClass("std", count=5, cores=4.0, mem_mb=16384.0),
+            MachineClass("big", count=1, cores=8.0, mem_mb=32768.0, speed=1.05),
+        ]
+    )
+
+    traces = {
+        "ads": make_trace("diurnal", N_STEPS, base_ktps=260.0, seed=3,
+                          peak_ratio=3.0),
+        "clicks": make_trace("sawtooth", N_STEPS, base_ktps=140.0, seed=5,
+                             ratio=2.0),
+        "wordcount": make_trace("bursty", N_STEPS, base_ktps=900.0, seed=7,
+                                burst_ratio=3.0),
+    }
+
+    loop = FleetLoop(
+        tenants, cluster, SimulatorEvaluator(params=params, duration_s=4.0)
+    )
+    events = loop.run(traces)
+
+    print(cluster.describe())
+    print(f"{'step':>4} {'replan':>6} {'used':>6}  " + "  ".join(
+        f"{t.name:>22}" for t in tenants))
+    for ev in events:
+        cells = []
+        for t in ev.tenants:
+            state = "OUT" if not t.admitted else ("DEG" if t.degraded else "ok ")
+            sla = "sla+" if t.sla_met else "SLA-"
+            cells.append(
+                f"{t.load:6.0f}->{t.achieved_ktps:6.0f} {state} {sla}"
+            )
+        print(f"{ev.step:>4} {str(ev.replanned):>6} {ev.cores_used:6.1f}  "
+              + "  ".join(f"{c:>22}" for c in cells))
+
+    # --- summary: the QoS contract, as measured --------------------------
+    squeeze = [ev for ev in events if any(t.degraded for t in ev.tenants)]
+    print(f"\nbudget bound on {len(squeeze)}/{len(events)} steps")
+    for spec in tenants:
+        rows = [ev.tenant(spec.name) for ev in events]
+        sla = sum(r.sla_met for r in rows)
+        degraded = sum(r.degraded for r in rows)
+        shut = sum(not r.admitted for r in rows)
+        print(f"  {spec.name:10s} [{spec.qos.name.lower():11s}] "
+              f"SLA {sla}/{len(rows)} steps, degraded {degraded}, shut out {shut}")
+    gold = [ev.tenant("ads") for ev in squeeze]
+    be = [ev.tenant("wordcount") for ev in squeeze]
+    if squeeze:
+        print(f"\nduring the squeeze: guaranteed tenant met its SLA on "
+              f"{sum(r.sla_met for r in gold)}/{len(gold)} bound steps; "
+              f"best-effort was degraded/shed on "
+              f"{sum(r.degraded for r in be)}/{len(be)}.")
+
+
+if __name__ == "__main__":
+    main()

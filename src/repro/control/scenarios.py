@@ -9,7 +9,10 @@ lets tests/benchmarks sweep policies over every shape by name.
 The primitives build on :mod:`repro.streams.sources` (diurnal, spike,
 weekly — the paper's LinkedIn/Netflix/World-Cup patterns) and add the
 shapes an autoscaler must also survive: flash crowds on top of a daily
-curve, sustained ramps, step changes, and replay of recorded traces.
+curve, sustained ramps, step changes, sawtooth catch-up cycles, seeded
+random bursts, and replay of recorded traces.  The fleet layer draws
+*heterogeneous* per-tenant scenarios from this registry to exercise
+multi-tenant arbitration.
 """
 from __future__ import annotations
 
@@ -67,6 +70,39 @@ def weekly(n: int, base_ktps: float = 400.0, seed: int = 0,
     return sources.weekly(n, base_ktps=base_ktps, day_period=day_period, seed=seed)
 
 
+def sawtooth(n: int, base_ktps: float = 400.0, seed: int = 0,
+             ratio: float = 3.0, period: int | None = None,
+             jitter: float = 0.02) -> np.ndarray:
+    """Linear climb to ``ratio``x then an instant reset, repeating — the
+    queue-drain / batch-ingest shape (a backlog consumer catches up, the
+    feed resets).  Stresses the anti-thrash guards: the slow rise wants
+    scale-ups, the cliff wants an immediate scale-down every period."""
+    rng = np.random.default_rng(seed)
+    period = period if period is not None else max(n // 4, 2)
+    phase = (np.arange(n) % period) / max(period - 1, 1)
+    trace = base_ktps * (1.0 + (ratio - 1.0) * phase)
+    return trace * (1.0 + jitter * rng.standard_normal(n))
+
+
+def bursty(n: int, base_ktps: float = 400.0, seed: int = 0,
+           burst_ratio: float = 6.0, burst_prob: float = 0.05,
+           burst_len: int | None = None, jitter: float = 0.05) -> np.ndarray:
+    """Seeded-noise bursts: short high-rate events arrive at random (one
+    seeded draw per step) on a noisy floor and decay geometrically — spiky,
+    unpredictable traffic with no diurnal structure (the adversarial case
+    for predictive policies; a best-effort tenant's natural shape)."""
+    rng = np.random.default_rng(seed)
+    burst_len = burst_len if burst_len is not None else max(n // 32, 2)
+    trace = base_ktps * (1.0 + jitter * rng.standard_normal(n))
+    envelope = np.zeros(n)
+    decay = np.exp(-np.arange(n) / max(burst_len, 1))
+    for start in np.flatnonzero(rng.random(n) < burst_prob):
+        tail = n - start
+        height = base_ktps * burst_ratio * (0.5 + 0.5 * rng.random())
+        envelope[start:] = np.maximum(envelope[start:], height * decay[:tail])
+    return np.maximum(trace, envelope)
+
+
 def replay(trace, n: int | None = None, base_ktps: float | None = None) -> np.ndarray:
     """Replay a recorded trace: resampled to ``n`` points (linear
     interpolation) and rescaled so its mean is ``base_ktps`` — lets any
@@ -93,6 +129,8 @@ SCENARIOS: dict[str, Callable[..., np.ndarray]] = {
     "ramp": ramp,
     "step": step,
     "weekly": weekly,
+    "sawtooth": sawtooth,
+    "bursty": bursty,
 }
 
 

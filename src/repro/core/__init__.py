@@ -23,18 +23,26 @@ from .node_model import (
     oracle_models,
 )
 from .flow_solver import FlowSolution, build_flow_problem, classify_bound, solve_flow
-from .allocator import AllocationResult, BalancedContainer, allocate
+from .allocator import (
+    AllocationResult,
+    BalancedContainer,
+    BudgetedAllocation,
+    ResourceBudget,
+    allocate,
+    allocate_under_budget,
+)
 from .calibration import Calibrator
 from .autoscaler import AutoScaler, run_against_trace
 from .reactive import ReactiveResult, reactive_scale
 
 __all__ = [
-    "AllocationResult", "AutoScaler", "BalancedContainer", "Calibrator",
-    "Configuration", "ContainerDim", "DagSpec", "EdgeSpec", "FlowSolution",
-    "Grouping", "InstanceSamples", "LinearFit", "MetricsStore", "NodeModel",
-    "NodeSpec", "ReactiveResult", "ResourceClass", "STREAM_MANAGER",
-    "allocate", "build_flow_problem", "classify_bound", "fit_node",
-    "fit_workload", "linear_fit", "oracle_models", "propagate_rates",
-    "reactive_scale", "round_robin_configuration", "run_against_trace",
+    "AllocationResult", "AutoScaler", "BalancedContainer", "BudgetedAllocation",
+    "Calibrator", "Configuration", "ContainerDim", "DagSpec", "EdgeSpec",
+    "FlowSolution", "Grouping", "InstanceSamples", "LinearFit", "MetricsStore",
+    "NodeModel", "NodeSpec", "ReactiveResult", "ResourceBudget",
+    "ResourceClass", "STREAM_MANAGER", "allocate", "allocate_under_budget",
+    "build_flow_problem", "classify_bound", "fit_node", "fit_workload",
+    "linear_fit", "oracle_models", "propagate_rates", "reactive_scale",
+    "round_robin_configuration", "run_against_trace",
     "single_container_configuration", "solve_flow",
 ]

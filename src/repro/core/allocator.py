@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import TYPE_CHECKING, Mapping, Sequence
+from typing import TYPE_CHECKING, Callable, Mapping, Sequence
 
 from .dag import Configuration, ContainerDim, DagSpec, propagate_rates
 from .metrics import STREAM_MANAGER
@@ -312,4 +312,128 @@ def allocate(
 
     return _allocate_one(
         dag, models, target_rate_ktps, preferred_dim, overprovision
+    )
+
+
+# ---------------------------------------------------------------------------
+# Budget-constrained allocation (the fleet scheduler's per-tenant primitive)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceBudget:
+    """A cap on what one allocation may consume: CPUs, memory, containers."""
+
+    cpus: float = float("inf")
+    mem_mb: float = float("inf")
+    containers: int | None = None
+
+    def admits(self, config: Configuration) -> bool:
+        if config.total_cpus() > self.cpus + 1e-9:
+            return False
+        if config.total_mem_mb() > self.mem_mb + 1e-6:
+            return False
+        if self.containers is not None and config.n_containers > self.containers:
+            return False
+        return True
+
+
+@dataclasses.dataclass
+class BudgetedAllocation:
+    """The best feasible point under a budget, and how far it falls short.
+
+    ``fits`` is False only when even the *minimal* allocation (one container
+    per group at near-zero rate) violates the budget — the tenant cannot be
+    admitted at all.  Otherwise ``result`` allocates for
+    ``feasible_rate_ktps`` (= the target when the budget does not bind) and
+    ``shortfall_ktps`` is the demanded rate the budget could not buy.
+    """
+
+    result: AllocationResult
+    target_rate_ktps: float
+    feasible_rate_ktps: float
+    shortfall_ktps: float
+    fits: bool
+
+    @property
+    def degraded(self) -> bool:
+        return self.shortfall_ktps > 1e-9 or not self.fits
+
+
+def allocate_under_budget(
+    dag: DagSpec,
+    models: Mapping[str, NodeModel],
+    target_rate_ktps: float,
+    budget: ResourceBudget,
+    preferred_dim: ContainerDim | None = None,
+    overprovision: float = 1.0,
+    rounding: str = "ceil",
+    fits: "Callable[[Configuration], bool] | None" = None,
+    rate_tol: float = 0.01,
+    max_bisections: int = 32,
+) -> BudgetedAllocation:
+    """Closed-form allocation under a resource cap (fleet scheduling mode).
+
+    When the unconstrained allocation for the target fits the budget it is
+    returned with zero shortfall.  Otherwise the rate is bisected to the
+    largest value whose allocation the budget admits — allocation cost is a
+    monotone step function of rate, so bisection lands on the best feasible
+    point within ``rate_tol`` relative to the feasible rate itself (not the
+    demanded target, so an extravagant ask still resolves its small feasible
+    point precisely).  ``fits`` adds an arbitrary extra
+    feasibility predicate on the produced configuration (the fleet scheduler
+    passes a trial bin-packing against the remaining host inventory, so
+    fragmentation — not just aggregate capacity — binds the allocation).
+    """
+    if target_rate_ktps <= 0:
+        raise ValueError("target rate must be positive")
+
+    def admitted(res: AllocationResult) -> bool:
+        return budget.admits(res.config) and (fits is None or fits(res.config))
+
+    def alloc(rate: float) -> AllocationResult:
+        return _allocate_one(dag, models, rate, preferred_dim, overprovision, rounding)
+
+    full = alloc(target_rate_ktps)
+    if admitted(full):
+        return BudgetedAllocation(
+            result=full,
+            target_rate_ktps=target_rate_ktps,
+            feasible_rate_ktps=target_rate_ktps,
+            shortfall_ktps=0.0,
+            fits=True,
+        )
+
+    # the smallest allocation this DAG admits: one container per group with
+    # one instance of each node (rate -> 0 collapses every count to 1).
+    # The probe rate is target-independent: whether a tenant fits *at all*
+    # must not depend on how much it asked for.
+    floor_rate = min(1e-3, target_rate_ktps)
+    floor = alloc(floor_rate)
+    if not admitted(floor):
+        return BudgetedAllocation(
+            result=floor,
+            target_rate_ktps=target_rate_ktps,
+            feasible_rate_ktps=0.0,
+            shortfall_ktps=target_rate_ktps,
+            fits=False,
+        )
+
+    lo, best = floor_rate, floor
+    hi = target_rate_ktps
+    for _ in range(max_bisections):
+        if hi - lo <= rate_tol * hi:
+            break
+        mid = 0.5 * (lo + hi)
+        res = alloc(mid)
+        if admitted(res):
+            lo, best = mid, res
+        else:
+            hi = mid
+    return BudgetedAllocation(
+        result=best,
+        target_rate_ktps=target_rate_ktps,
+        feasible_rate_ktps=lo,
+        shortfall_ktps=max(target_rate_ktps - lo, 0.0),
+        fits=True,
     )

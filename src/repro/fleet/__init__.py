@@ -1,0 +1,26 @@
+"""Fleet layer: multi-job cluster scheduling over a shared hardware model.
+
+``Cluster`` models the finite physical pool (machine classes with per-host
+core/memory capacity and relative speed); ``FleetScheduler`` places N
+independent jobs — each a DagSpec + declared rate + QoS tier — onto it by
+scoring joint candidate allocations through the batched, device-sharded
+evaluation engine; ``FleetLoop`` runs one sense→plan→act→learn cycle across
+all tenants, shedding best-effort capacity before guaranteed capacity when
+the budget binds.
+"""
+
+from .cluster import Cluster, Host, MachineClass, Placement
+from .scheduler import (
+    FleetPlan,
+    FleetScheduler,
+    QosTier,
+    TenantAllocation,
+    TenantSpec,
+)
+from .loop import FleetEvent, FleetLoop, TenantStep
+
+__all__ = [
+    "Cluster", "FleetEvent", "FleetLoop", "FleetPlan", "FleetScheduler",
+    "Host", "MachineClass", "Placement", "QosTier", "TenantAllocation",
+    "TenantSpec", "TenantStep",
+]

@@ -1,0 +1,168 @@
+"""Physical cluster model for the fleet layer.
+
+Everything below the fleet scheduler so far assumed an implicit, infinite
+cluster: ``allocate`` would happily return 400 containers.  A
+:class:`Cluster` is the *finite* resource pool Trevor's "available physical
+hardware" phrase refers to — a set of :class:`MachineClass` entries (count,
+per-host cores/memory, relative host speed), flattened into a host
+inventory that containers are bin-packed onto.
+
+Speed semantics: the learned node models describe a reference host
+(``speed = 1.0``).  A container placed on a ``speed = 0.8`` host sustains
+80% of its modeled rate, so a tenant's predicted capacity is derated by the
+*slowest* host its containers landed on (conservative — the slowest
+container backpressures the whole pipeline).  The scheduler hands out fast
+hosts first, so guaranteed tenants get the premium hardware when the pool
+is heterogeneous.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from ..core.dag import ContainerDim
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineClass:
+    """``count`` identical hosts with per-host capacity and relative speed."""
+
+    name: str
+    count: int
+    cores: float
+    mem_mb: float
+    speed: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.count < 0:
+            raise ValueError(f"machine class {self.name}: negative count")
+        if self.cores <= 0 or self.mem_mb <= 0 or self.speed <= 0:
+            raise ValueError(
+                f"machine class {self.name}: cores/mem/speed must be positive"
+            )
+
+
+@dataclasses.dataclass
+class Host:
+    """One physical machine with its remaining capacity (mutable inventory)."""
+
+    name: str
+    cores: float
+    mem_mb: float
+    speed: float
+    cores_free: float
+    mem_free: float
+
+    def can_fit(self, dim: ContainerDim) -> bool:
+        return (
+            self.cores_free >= dim.cpus - _EPS
+            and self.mem_free >= dim.mem_mb - _EPS
+        )
+
+    def place(self, dim: ContainerDim) -> None:
+        self.cores_free -= dim.cpus
+        self.mem_free -= dim.mem_mb
+
+    def clone(self) -> "Host":
+        return dataclasses.replace(self)
+
+
+@dataclasses.dataclass
+class Placement:
+    """Where one configuration's containers landed.
+
+    ``host_of[c]`` is the index (into the inventory this placement was packed
+    against) of the host carrying container ``c``; ``-1`` marks an unplaced
+    container (the packing failed).
+    """
+
+    host_of: tuple[int, ...]
+    host_names: tuple[str, ...]
+    min_speed: float
+
+    @property
+    def feasible(self) -> bool:
+        return all(h >= 0 for h in self.host_of)
+
+    @property
+    def n_unplaced(self) -> int:
+        return sum(1 for h in self.host_of if h < 0)
+
+
+class Cluster:
+    """A finite pool of hosts built from machine classes."""
+
+    def __init__(self, machines: Sequence[MachineClass]) -> None:
+        self.machines = tuple(machines)
+        if not any(m.count > 0 for m in self.machines):
+            raise ValueError("cluster has no hosts")
+
+    # -- aggregate capacity -------------------------------------------------
+    @property
+    def n_hosts(self) -> int:
+        return sum(m.count for m in self.machines)
+
+    def total_cores(self) -> float:
+        return float(sum(m.count * m.cores for m in self.machines))
+
+    def total_mem_mb(self) -> float:
+        return float(sum(m.count * m.mem_mb for m in self.machines))
+
+    # -- host inventory -----------------------------------------------------
+    def inventory(self) -> list[Host]:
+        """A fresh full-capacity host list, fastest (then biggest) hosts
+        first — the order :meth:`pack` fills them in, so earlier (higher
+        priority) tenants get the premium hardware."""
+        hosts: list[Host] = []
+        for m in sorted(self.machines, key=lambda m: (-m.speed, -m.cores, m.name)):
+            for i in range(m.count):
+                hosts.append(
+                    Host(
+                        name=f"{m.name}/{i}",
+                        cores=m.cores,
+                        mem_mb=m.mem_mb,
+                        speed=m.speed,
+                        cores_free=m.cores,
+                        mem_free=m.mem_mb,
+                    )
+                )
+        return hosts
+
+    @staticmethod
+    def pack(dims: Sequence[ContainerDim], hosts: list[Host]) -> Placement:
+        """First-fit-decreasing bin-packing of containers onto ``hosts``.
+
+        Mutates ``hosts`` (successive tenants share one shrinking
+        inventory); callers wanting a *trial* pack pass cloned hosts (see
+        :func:`trial_pack`).  Containers are placed largest-CPU-first; each
+        goes to the first host with room, and hosts are ordered fastest
+        first by :meth:`inventory`.
+        """
+        order = sorted(range(len(dims)), key=lambda i: -dims[i].cpus)
+        host_of = [-1] * len(dims)
+        for ci in order:
+            for hi, h in enumerate(hosts):
+                if h.can_fit(dims[ci]):
+                    h.place(dims[ci])
+                    host_of[ci] = hi
+                    break
+        used_speeds = [hosts[h].speed for h in host_of if h >= 0]
+        return Placement(
+            host_of=tuple(host_of),
+            host_names=tuple(hosts[h].name if h >= 0 else "" for h in host_of),
+            min_speed=min(used_speeds) if used_speeds else 1.0,
+        )
+
+    @staticmethod
+    def trial_pack(dims: Sequence[ContainerDim], hosts: list[Host]) -> bool:
+        """Would these containers fit, without consuming the inventory?"""
+        return Cluster.pack(dims, [h.clone() for h in hosts]).feasible
+
+    def describe(self) -> str:
+        parts = [
+            f"{m.count}x{m.name}({m.cores}c/{m.mem_mb:.0f}MB@{m.speed:g})"
+            for m in self.machines
+        ]
+        return f"Cluster[{' '.join(parts)}: {self.total_cores():.0f} cores]"

@@ -1,0 +1,223 @@
+"""QoS-aware multi-job scheduling over a shared :class:`Cluster`.
+
+Trevor's central claim is that learned performance models let you
+"optimally schedule logically specified jobs onto available physical
+hardware".  One job against an infinite cluster (PRs 1-2) only exercises
+half of that sentence; the interesting regime — per Phoebe and Daedalus
+(PAPERS.md) — is N independent jobs with distinct QoS tiers contending for
+one finite pool.  :class:`FleetScheduler` is that arbiter:
+
+* tenants are served in QoS order (guaranteed → standard → best-effort,
+  ties broken by declared rate then name, so the outcome is deterministic),
+* each tenant's allocation is the budget-constrained closed form
+  (:func:`repro.core.allocator.allocate_under_budget`) against the
+  *remaining* host inventory — the feasibility predicate is a trial
+  bin-packing, so fragmentation binds, not just aggregate cores,
+* when the budget binds, lower tiers are degraded (allocated for the
+  largest feasible rate) or shut out entirely — best-effort capacity is
+  shed first by construction,
+* every tenant's final configuration is scored in ONE batched, device-
+  sharded evaluation (:meth:`ConfigEvaluator.evaluate_jobs`), and the
+  predicted capacity is derated by the slowest host speed in its placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import TYPE_CHECKING, Mapping, Sequence
+
+from ..core.allocator import ResourceBudget, allocate_under_budget
+from ..core.dag import Configuration, ContainerDim, DagSpec
+from ..core.node_model import NodeModel
+from ..control.loop import GuardBands
+from ..streams.engine import evaluate_jobs_with
+from .cluster import Cluster, Placement
+
+if TYPE_CHECKING:
+    from ..control.learning import ModelStore
+    from ..streams.engine import ConfigEvaluator
+
+
+class QosTier(enum.IntEnum):
+    """Service tiers, in shedding order: best-effort capacity goes first."""
+
+    BEST_EFFORT = 0
+    STANDARD = 1
+    GUARANTEED = 2
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """One logically-specified job: a DAG, a declared rate, and a QoS tier.
+
+    ``models`` may be a plain mapping or a :class:`ModelStore` (the fleet
+    loop feeds saturated measurements back into a store).  ``guards`` are
+    per-tenant :class:`GuardBands` — a best-effort tenant can run wider
+    deadbands than a guaranteed one.
+    """
+
+    name: str
+    dag: DagSpec
+    target_ktps: float
+    qos: QosTier = QosTier.STANDARD
+    models: "ModelStore | Mapping[str, NodeModel] | None" = None
+    guards: GuardBands = dataclasses.field(default_factory=GuardBands)
+    preferred_dim: ContainerDim | None = None
+
+    def node_models(self) -> Mapping[str, NodeModel]:
+        if self.models is None:
+            raise ValueError(f"tenant {self.name} has no node models")
+        models = getattr(self.models, "models", self.models)
+        return models
+
+    @property
+    def overprovision(self) -> float:
+        return float(getattr(self.models, "overprovision_factor", 1.0))
+
+
+@dataclasses.dataclass
+class TenantAllocation:
+    """What one tenant got from a scheduling round."""
+
+    tenant: str
+    qos: QosTier
+    requested_ktps: float              # the tenant's provisioning target
+    planned_ktps: float                # rate the budget actually bought
+    config: Configuration | None      # None: not admitted at all
+    placement: Placement | None
+    cpus: float
+    predicted_ktps: float             # evaluator-scored capacity (speed-derated)
+    bottleneck: str | None
+    shortfall_ktps: float             # requested - planned (budget shed)
+    degraded: bool                    # budget bound this tenant
+
+    @property
+    def admitted(self) -> bool:
+        return self.config is not None
+
+
+@dataclasses.dataclass
+class FleetPlan:
+    """One joint placement of every tenant onto the cluster."""
+
+    allocations: list[TenantAllocation]
+    cores_total: float
+    cores_used: float
+
+    @property
+    def cores_free(self) -> float:
+        return self.cores_total - self.cores_used
+
+    def allocation(self, tenant: str) -> TenantAllocation:
+        for a in self.allocations:
+            if a.tenant == tenant:
+                return a
+        raise KeyError(tenant)
+
+    def describe(self) -> str:
+        rows = []
+        for a in self.allocations:
+            state = "shut-out" if not a.admitted else (
+                "degraded" if a.degraded else "full"
+            )
+            rows.append(
+                f"{a.tenant}[{a.qos.name.lower()}]: {state} "
+                f"{a.planned_ktps:.0f}/{a.requested_ktps:.0f} ktps "
+                f"on {a.cpus:.1f} cpus"
+            )
+        return "; ".join(rows)
+
+
+class FleetScheduler:
+    """Places N tenants onto one cluster through the evaluation engine."""
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        evaluator: "ConfigEvaluator | None" = None,
+    ) -> None:
+        self.cluster = cluster
+        self.evaluator = evaluator
+
+    @staticmethod
+    def _priority_order(
+        demands: Sequence[tuple[TenantSpec, float]]
+    ) -> list[tuple[TenantSpec, float]]:
+        return sorted(
+            demands, key=lambda d: (-int(d[0].qos), -d[1], d[0].name)
+        )
+
+    def schedule(
+        self, demands: Sequence[tuple[TenantSpec, float]]
+    ) -> FleetPlan:
+        """One joint scheduling round: ``demands`` pairs each tenant with
+        its current provisioning target (ktps).  Returns the fleet plan in
+        the original demand order."""
+        names = [spec.name for spec, _t in demands]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names in demands: {names}")
+        hosts = self.cluster.inventory()
+        by_tenant: dict[str, TenantAllocation] = {}
+
+        for spec, target in self._priority_order(demands):
+            # the shrinking host inventory is the single source of truth:
+            # the trial-pack predicate is strictly stronger than any
+            # aggregate cpu/mem budget (fragmentation binds too)
+            ba = allocate_under_budget(
+                spec.dag,
+                spec.node_models(),
+                max(target, 1e-6),
+                ResourceBudget(),
+                preferred_dim=spec.preferred_dim,
+                overprovision=spec.overprovision,
+                fits=lambda cfg: Cluster.trial_pack(cfg.dims, hosts),
+            )
+            if not ba.fits:
+                by_tenant[spec.name] = TenantAllocation(
+                    tenant=spec.name,
+                    qos=spec.qos,
+                    requested_ktps=target,
+                    planned_ktps=0.0,
+                    config=None,
+                    placement=None,
+                    cpus=0.0,
+                    predicted_ktps=0.0,
+                    bottleneck=None,
+                    shortfall_ktps=target,
+                    degraded=True,
+                )
+                continue
+            config = ba.result.config
+            placement = Cluster.pack(config.dims, hosts)   # consume inventory
+            by_tenant[spec.name] = TenantAllocation(
+                tenant=spec.name,
+                qos=spec.qos,
+                requested_ktps=target,
+                planned_ktps=ba.feasible_rate_ktps,
+                config=config,
+                placement=placement,
+                cpus=config.total_cpus(),
+                predicted_ktps=ba.feasible_rate_ktps * placement.min_speed,
+                bottleneck=None,
+                shortfall_ktps=ba.shortfall_ktps,
+                degraded=ba.degraded,
+            )
+
+        # joint capacity scoring: every admitted tenant's configuration in
+        # one batched (device-sharded) evaluation
+        if self.evaluator is not None:
+            admitted = [a for a in by_tenant.values() if a.config is not None]
+            groups = [[a.config] for a in admitted]
+            if groups:
+                evals = evaluate_jobs_with(self.evaluator, groups)
+                for a, (ev,) in zip(admitted, evals):
+                    speed = a.placement.min_speed if a.placement else 1.0
+                    a.predicted_ktps = ev.achieved_ktps * speed
+                    a.bottleneck = ev.bottleneck
+
+        allocations = [by_tenant[spec.name] for spec, _t in demands]
+        return FleetPlan(
+            allocations=allocations,
+            cores_total=self.cluster.total_cores(),
+            cores_used=float(sum(a.cpus for a in allocations)),
+        )

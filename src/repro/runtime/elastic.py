@@ -8,13 +8,21 @@ instead of cputil fits) and the deadband/hysteresis guards are the shared
 :class:`~repro.control.loop.GuardBands` — the same semantics every other
 policy gets.  Consolidated checkpoints (``repro.checkpoint``) make the
 re-mesh executable: restart with the new chip count and restore.
+
+:class:`FleetElasticController` extends the same observe() idiom to many
+stream tenants sharing one finite cluster (the fleet layer,
+``repro.fleet``): a re-mesh becomes a fleet reschedule.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import TYPE_CHECKING, Callable, Mapping, Sequence
 
 from ..core.lm_bridge import LMAllocation, LMWorkloadModel
+
+if TYPE_CHECKING:
+    from ..fleet import Cluster, FleetEvent, FleetPlan, TenantSpec
+    from ..streams.engine import ConfigEvaluator
 
 
 @dataclasses.dataclass
@@ -124,3 +132,50 @@ class ElasticController:
         if self.on_remesh is not None:
             self.on_remesh(event)
         return alloc
+
+
+class FleetElasticController:
+    """Fleet-aware sibling of :class:`ElasticController`: the same
+    observe-and-maybe-react idiom, but over N stream tenants sharing one
+    finite cluster.
+
+    ``observe`` feeds one load sample per tenant to a
+    :class:`~repro.fleet.FleetLoop` and returns the new
+    :class:`~repro.fleet.FleetPlan` when the fleet was rescheduled (any
+    tenant's guards fired), else ``None`` — mirroring
+    :meth:`ElasticController.observe` returning an allocation only on a
+    re-mesh.  ``on_reschedule`` fires with the fleet event on every replan.
+    """
+
+    def __init__(
+        self,
+        tenants: "Sequence[TenantSpec]",
+        cluster: "Cluster",
+        evaluator: "ConfigEvaluator | None" = None,
+        saturation_threshold: float = 0.95,
+        on_reschedule: "Callable[[FleetEvent], None] | None" = None,
+    ) -> None:
+        from ..fleet import FleetLoop
+
+        self.loop = FleetLoop(
+            tenants, cluster, evaluator,
+            saturation_threshold=saturation_threshold,
+        )
+        self.on_reschedule = on_reschedule
+
+    @property
+    def events(self) -> "list[FleetEvent]":
+        return self.loop.events
+
+    @property
+    def plan(self) -> "FleetPlan | None":
+        return self.loop.plan
+
+    def observe(self, loads: Mapping[str, float]) -> "FleetPlan | None":
+        """Returns the new plan when the fleet was rescheduled, else None."""
+        ev = self.loop.step(loads)
+        if not ev.replanned:
+            return None
+        if self.on_reschedule is not None:
+            self.on_reschedule(ev)
+        return self.loop.plan

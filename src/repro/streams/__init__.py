@@ -19,6 +19,7 @@ from .simulator import (
     kernel_cache_info,
     measure_capacity,
     pad_structure,
+    shard_count,
     simulate,
     simulate_batch,
     training_sweep,
@@ -29,6 +30,7 @@ from .engine import (
     EvalResult,
     ExecutorEvaluator,
     SimulatorEvaluator,
+    evaluate_jobs_with,
 )
 from . import sources
 
@@ -36,7 +38,7 @@ __all__ = [
     "WORKLOADS", "ConfigEvaluator", "EvalResult", "ExecutorEvaluator",
     "OVERLOAD_KTPS", "SimParams", "SimResult", "SimulatorEvaluator",
     "adanalytics", "bucket_size", "clear_kernel_cache", "deep_pipeline",
-    "diamond", "kernel_cache_info", "measure_capacity", "mobile_analytics",
-    "pad_structure", "simulate", "simulate_batch", "sources",
-    "training_sweep", "wordcount",
+    "diamond", "evaluate_jobs_with", "kernel_cache_info", "measure_capacity",
+    "mobile_analytics", "pad_structure", "shard_count", "simulate",
+    "simulate_batch", "sources", "training_sweep", "wordcount",
 ]

@@ -28,7 +28,16 @@ from ..core.dag import Configuration, DagSpec
 from ..core.flow_solver import solve_flow
 from ..core.metrics import STREAM_MANAGER
 from ..core.node_model import oracle_models
-from .simulator import SimParams, SimResult, bucket_size, simulate_batch
+from .simulator import (
+    SimParams,
+    SimResult,
+    bucket_size,
+    is_scalar_load,
+    simulate_batch,
+)
+
+#: A multi-job evaluation request: one candidate-configuration list per job.
+JobGroups = Sequence[Sequence[Configuration]]
 
 #: Offered load far above any realistic capacity: backpressure gating
 #: throttles the spouts and the achieved rate *is* the capacity.
@@ -57,6 +66,51 @@ class ConfigEvaluator(Protocol):
         self, configs: Sequence[Configuration], offered_ktps=OVERLOAD_KTPS
     ) -> list[EvalResult]: ...
 
+    def evaluate_jobs(
+        self, groups: JobGroups, offered_ktps=OVERLOAD_KTPS
+    ) -> list[list[EvalResult]]: ...
+
+
+def _expand_job_loads(groups: list[list[Configuration]], offered_ktps):
+    """Per-job offered loads → one per-config flat list (scalar = shared)."""
+    if is_scalar_load(offered_ktps):
+        return [offered_ktps for g in groups for _ in g]
+    loads = list(offered_ktps)
+    if len(loads) != len(groups):
+        raise ValueError(
+            f"offered_ktps has {len(loads)} entries for {len(groups)} jobs"
+        )
+    return [o for g, o in zip(groups, loads) for _ in g]
+
+
+def _regroup(flat: list, groups: list[list]) -> list[list]:
+    """Undo the flattening: slice per-config results back into job groups."""
+    out: list[list] = []
+    i = 0
+    for g in groups:
+        out.append(flat[i : i + len(g)])
+        i += len(g)
+    return out
+
+
+def evaluate_jobs_with(
+    evaluator, groups: JobGroups, offered_ktps=OVERLOAD_KTPS
+) -> list["list[EvalResult]"]:
+    """``evaluate_jobs`` on *any* evaluator, including backends written
+    against the pre-multi-job protocol (``evaluate``/``evaluate_batch``
+    only, e.g. counting/caching wrappers): those fall back to one flattened
+    ``evaluate_batch`` call with the same grouping semantics.  The fleet
+    layer calls through this shim so old evaluators keep working."""
+    fn = getattr(evaluator, "evaluate_jobs", None)
+    if fn is not None:
+        return fn(groups, offered_ktps)
+    groups = [list(g) for g in groups]
+    flat = [c for g in groups for c in g]
+    if not flat:
+        return [[] for _ in groups]
+    loads = _expand_job_loads(groups, offered_ktps)
+    return _regroup(evaluator.evaluate_batch(flat, loads), groups)
+
 
 class SimulatorEvaluator:
     """Batched simulator backend with sticky shape buckets.
@@ -64,7 +118,9 @@ class SimulatorEvaluator:
     ``duration_s`` trades fidelity for speed (8 s reaches steady state for
     the bundled workloads).  With ``sticky_buckets`` every call pads at least
     to the largest bucket seen so far, so bucket growth — not call count —
-    determines the number of XLA compilations.
+    determines the number of XLA compilations.  ``devices`` is forwarded to
+    :func:`~repro.streams.simulator.simulate_batch`: ``None`` (auto) shards
+    large batches across every local device, ``1`` pins single-device vmap.
     """
 
     def __init__(
@@ -72,10 +128,12 @@ class SimulatorEvaluator:
         params: SimParams = SimParams(),
         duration_s: float = 8.0,
         sticky_buckets: bool = True,
+        devices: int | None = None,
     ) -> None:
         self.params = params
         self.duration_s = duration_s
         self.sticky_buckets = sticky_buckets
+        self.devices = devices
         self._inst_floor = 0
         self._cont_floor = 0
 
@@ -108,6 +166,7 @@ class SimulatorEvaluator:
             params=self.params,
             min_inst_bucket=self._inst_floor,
             min_cont_bucket=self._cont_floor,
+            devices=self.devices,
         )
         return [
             EvalResult(
@@ -118,6 +177,26 @@ class SimulatorEvaluator:
             )
             for c, r in zip(configs, results)
         ]
+
+    def evaluate_jobs(
+        self, groups: JobGroups, offered_ktps=OVERLOAD_KTPS
+    ) -> list[list[EvalResult]]:
+        """Score candidate sets for N independent jobs in ONE sharded kernel
+        call.
+
+        ``groups[j]`` holds job ``j``'s candidate configurations (the jobs
+        may be entirely different DAGs — padding buckets them together);
+        ``offered_ktps`` is a shared scalar or one load per *job* (scalar or
+        per-sample trace, applied to every candidate of that job).  This is
+        the fleet scheduler's joint-scoring primitive: all tenants' candidate
+        allocations cost one batched (device-sharded) evaluation.
+        """
+        groups = [list(g) for g in groups]
+        flat = [c for g in groups for c in g]
+        if not flat:
+            return [[] for _ in groups]
+        loads = _expand_job_loads(groups, offered_ktps)
+        return _regroup(self.evaluate_batch(flat, loads), groups)
 
 
 class ExecutorEvaluator:
@@ -140,16 +219,37 @@ class ExecutorEvaluator:
         self.floor_ktps = floor_ktps
         self.sm_cost_per_ktuple = sm_cost_per_ktuple
         self.saturation_threshold = saturation_threshold
-        self._calibrated: dict[str, DagSpec] = {}
+        # keyed by the DagSpec *value* plus its operator-body identities:
+        # DagSpec equality excludes NodeSpec.fn (compare=False), but fn is
+        # exactly what this backend times — two DAGs with identical declared
+        # specs and different real operators must not alias each other's
+        # measured costs (nor may a spec and its recalibrated namesake)
+        self._calibrated: dict[tuple, DagSpec] = {}
+
+    @staticmethod
+    def _cache_key(dag: DagSpec) -> tuple:
+        # id() of each fn is stable while the dag (kept alive in the cache
+        # key) holds a reference to it
+        return (dag, tuple(id(n.fn) for n in dag.nodes))
 
     def _dag_for(self, dag: DagSpec) -> DagSpec:
-        if dag.name not in self._calibrated:
+        key = self._cache_key(dag)
+        cal = self._calibrated.get(key)
+        if cal is None:
             from .executor import calibrate_dag
 
-            self._calibrated[dag.name] = calibrate_dag(
+            cal = calibrate_dag(
                 dag, n_batches=self.n_batches, floor_ktps=self.floor_ktps
             )
-        return self._calibrated[dag.name]
+            self._calibrated[key] = cal
+        return cal
+
+    def precalibrate(self, dags: Sequence[DagSpec]) -> None:
+        """Time each *distinct* DAG's operator bodies exactly once — called
+        up front by the batch entry points so a batch over N configurations
+        of k DAGs costs k timing runs, not N."""
+        for dag in dags:
+            self._dag_for(dag)
 
     def calibrated_dag(self, dag: DagSpec) -> DagSpec:
         """The DAG with this host's measured per-ktuple costs (cached) —
@@ -188,13 +288,31 @@ class ExecutorEvaluator:
     def evaluate_batch(
         self, configs: Sequence[Configuration], offered_ktps=OVERLOAD_KTPS
     ) -> list[EvalResult]:
-        if np.ndim(offered_ktps) == 0:
+        if is_scalar_load(offered_ktps):
             offered = [float(offered_ktps)] * len(configs)
         else:
-            offered = [float(o) for o in offered_ktps]
+            offered = [float(np.max(o)) for o in offered_ktps]
             if len(offered) != len(configs):
                 raise ValueError(
                     f"offered_ktps has {len(offered)} entries for "
                     f"{len(configs)} configs"
                 )
+        self.precalibrate([c.dag for c in configs])
         return [self.evaluate(c, o) for c, o in zip(configs, offered)]
+
+    def evaluate_jobs(
+        self, groups: JobGroups, offered_ktps=OVERLOAD_KTPS
+    ) -> list[list[EvalResult]]:
+        """Multi-job scoring on the real-executor backend: every distinct
+        DAG across all jobs is timed once, then candidates score serially
+        through the calibrated LP flow solver."""
+        groups = [list(g) for g in groups]
+        loads = _expand_job_loads(groups, offered_ktps)
+        self.precalibrate([c.dag for g in groups for c in g])
+        # the flow solver answers a single-rate question: a per-sample trace
+        # reduces to its peak (the capacity the job must sustain)
+        flat = [
+            self.evaluate(c, float(np.max(o)))
+            for c, o in zip((c for g in groups for c in g), loads)
+        ]
+        return _regroup(flat, groups)

@@ -35,6 +35,13 @@ configurations in the same bucket share one XLA compilation.
 ``jax.vmap`` — the paper's "score many candidate configurations cheaply"
 lever.  Compiled kernels live in a module-level cache keyed on
 ``(batch, bucket_shape, n_ticks)``; see :func:`kernel_cache_info`.
+
+On a multi-device host, large candidate batches are additionally **sharded
+across devices**: the batch is padded to a multiple of the device count and
+the vmapped kernel runs under ``jax.pmap``, one shard per device (the fleet
+scheduler's joint multi-tenant sweeps are exactly this shape).  Per-shard
+computation is the same vmapped kernel, so sharded and unsharded evaluation
+agree bitwise; a single-device host falls back to plain vmap.
 """
 from __future__ import annotations
 
@@ -391,23 +398,55 @@ _KERNEL_CACHE: dict[tuple, object] = {}
 _CACHE_STATS = {"hits": 0, "misses": 0}
 
 
+def shard_count(batch: int, devices: int | None = None) -> int:
+    """How many devices :func:`simulate_batch` shards a batch over.
+
+    ``devices=None`` means auto: shard over local devices only while every
+    shard keeps at least two configurations (small per-step batches stay on
+    the single-device vmap path — pmap dispatch and one compile per batch
+    shape are not worth paying for a 3-config measurement).  An explicit
+    count overrides the threshold; ``devices=1`` forces the vmap path, and
+    asking for more devices than the host has fails here, at the call
+    site, rather than as a replica-count error deep inside ``pmap``.
+    """
+    available = jax.local_device_count()
+    if devices is None:
+        n = min(available, int(batch) // 2)
+    else:
+        n = int(devices)
+        if n > available:
+            raise ValueError(
+                f"devices={n} requested but only {available} local "
+                f"device(s) are available"
+            )
+    return max(1, min(n, int(batch)))
+
+
 def _get_batch_kernel(batch: int, n_inst: int, n_cont: int, n_ticks: int,
-                      sample_every: int):
-    key = (batch, n_inst, n_cont, n_ticks, sample_every)
+                      sample_every: int, n_devices: int = 1):
+    """``batch`` is the per-device batch when ``n_devices > 1``."""
+    key = (batch, n_inst, n_cont, n_ticks, sample_every, n_devices)
     fn = _KERNEL_CACHE.get(key)
     if fn is None:
         _CACHE_STATS["misses"] += 1
         core = partial(_simulate_core, n_ticks=n_ticks, sample_every=sample_every)
-        # Donate the padded batch buffers (stacked structure arrays, per-tick
-        # loads, seeds): they are rebuilt from host numpy on every call, so
-        # XLA may reuse their memory for outputs — on 100+-candidate sweeps
-        # that halves peak device memory.  CPU XLA cannot donate (it would
-        # only warn), so donation is enabled on accelerators only.
+        vmapped = jax.vmap(core, in_axes=(0, 0, 0) + (None,) * 7)
+        # Donate the padded batch buffers (stacked structure arrays,
+        # per-tick loads, seeds): they are rebuilt from host numpy on every
+        # call, so XLA may reuse their memory for outputs — on
+        # 100+-candidate sweeps that halves peak device memory.  CPU XLA
+        # cannot donate (it would only warn), so donation is enabled on
+        # accelerators only.
         donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
-        fn = jax.jit(
-            jax.vmap(core, in_axes=(0, 0, 0) + (None,) * 7),
-            donate_argnums=donate,
-        )
+        if n_devices > 1:
+            # one shard of the batch per device; scalars are broadcast
+            fn = jax.pmap(
+                vmapped,
+                in_axes=(0, 0, 0) + (None,) * 7,
+                donate_argnums=donate,
+            )
+        else:
+            fn = jax.jit(vmapped, donate_argnums=donate)
         _KERNEL_CACHE[key] = fn
     else:
         _CACHE_STATS["hits"] += 1
@@ -513,6 +552,13 @@ class SimResult:
         return store
 
 
+def is_scalar_load(x) -> bool:
+    """True for a plain/0-d scalar offered load.  np.ndim would choke on a
+    ragged list of mixed scalar and per-sample-trace loads (a supported
+    shape), so never call it on the container."""
+    return np.isscalar(x) or getattr(x, "ndim", None) == 0
+
+
 def _per_tick_trace(offered_ktps, n_ticks: int, dt: float) -> np.ndarray:
     """Expand a scalar rate or a piecewise-constant trace to per-tick loads."""
     offered = np.asarray(offered_ktps, np.float64)
@@ -530,8 +576,9 @@ def simulate_batch(
     seeds: Sequence[int] | None = None,
     min_inst_bucket: int = 0,
     min_cont_bucket: int = 0,
+    devices: int | None = None,
 ) -> list[SimResult]:
-    """Evaluate N configurations in one vmapped kernel call.
+    """Evaluate N configurations in one vmapped (and device-sharded) call.
 
     ``offered_ktps`` is either one *scalar* load shared by every
     configuration or a sequence of per-configuration loads (each a scalar or
@@ -541,11 +588,20 @@ def simulate_batch(
     common shape bucket; the
     ``min_*_bucket`` floors let a caller pin the bucket it already compiled
     (sticky bucketing — see :class:`repro.streams.engine.SimulatorEvaluator`).
+
+    ``devices`` shards the batch: ``None`` (auto) splits it across local
+    devices via ``pmap`` while every shard keeps at least two
+    configurations (see :func:`shard_count`), an explicit count pins the
+    shard count, and ``1`` forces the single-device vmap path.  The batch
+    is padded to a multiple of the shard count by replicating the last
+    configuration (replicas are dropped on unpack), so sharded results are
+    bitwise-identical to the unsharded path.
     """
     configs = list(configs)
     if not configs:
         return []
     B = len(configs)
+    n_dev = shard_count(B, devices)
     structures = [build_structure(c, params) for c in configs]
     n_inst_b = bucket_size(max(st.n_inst for st in structures), min_inst_bucket)
     n_cont_b = bucket_size(max(st.n_cont for st in structures), min_cont_bucket)
@@ -553,7 +609,7 @@ def simulate_batch(
     n_ticks = int(duration_s / params.dt)
     n_ticks = (n_ticks // params.sample_every) * params.sample_every
 
-    if np.ndim(offered_ktps) == 0:
+    if is_scalar_load(offered_ktps):
         offered_list = [offered_ktps] * B
     else:
         offered_list = list(offered_ktps)
@@ -569,13 +625,32 @@ def simulate_batch(
         raise ValueError("seeds must match configs")
 
     padded = [pad_structure(st, n_inst_b, n_cont_b) for st in structures]
-    arrays = {k: jnp.asarray(np.stack([p[k] for p in padded])) for k in padded[0]}
+    stacked = {k: np.stack([p[k] for p in padded]) for k in padded[0]}
+    per_tick_in = np.asarray(per_tick, np.float32)
+    seeds_in = np.asarray(seeds, np.int32)
 
-    kernel = _get_batch_kernel(B, n_inst_b, n_cont_b, n_ticks, params.sample_every)
+    if n_dev > 1:
+        # pad the batch to a multiple of the shard count by replicating the
+        # last row (replicas are sliced away below), then add the device axis
+        fill = (-B) % n_dev
+        def shard(a: np.ndarray) -> np.ndarray:
+            if fill:
+                a = np.concatenate([a, np.repeat(a[-1:], fill, axis=0)])
+            return a.reshape(n_dev, -1, *a.shape[1:])
+        stacked = {k: shard(v) for k, v in stacked.items()}
+        per_tick_in = shard(per_tick_in)
+        seeds_in = shard(seeds_in)
+        per_dev_B = (B + fill) // n_dev
+    else:
+        per_dev_B = B
+
+    kernel = _get_batch_kernel(
+        per_dev_B, n_inst_b, n_cont_b, n_ticks, params.sample_every, n_dev
+    )
     samples = kernel(
-        arrays,
-        jnp.asarray(per_tick, jnp.float32),
-        jnp.asarray(np.asarray(seeds, np.int32)),
+        {k: jnp.asarray(v) for k, v in stacked.items()},
+        jnp.asarray(per_tick_in),
+        jnp.asarray(seeds_in),
         params.dt,
         params.noise_std,
         params.queue_high_ktuples,
@@ -584,7 +659,14 @@ def simulate_batch(
         params.gc_cost_frac,
         params.mem_alloc_mb_per_ktuple,
     )
-    samples = {k: np.asarray(v) for k, v in samples.items()}
+    if n_dev > 1:
+        # merge the device axis back and drop the fill replicas
+        samples = {
+            k: np.asarray(v).reshape(-1, *np.asarray(v).shape[2:])[:B]
+            for k, v in samples.items()
+        }
+    else:
+        samples = {k: np.asarray(v) for k, v in samples.items()}
 
     n_samples = n_ticks // params.sample_every
     results: list[SimResult] = []
