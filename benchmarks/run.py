@@ -19,6 +19,7 @@ BENCHES = [
     ("prediction", "bench_prediction", "Paper Fig. 13 — learned-model accuracy"),
     ("allocator", "bench_allocator", "Paper Fig. 14 — allocator efficiency"),
     ("reactive", "bench_reactive", "Paper §2.3/§6 — Dhalion baseline vs one-shot"),
+    ("forecast", "bench_forecast", "Predictive layer — forecast accuracy + horizon sweeps"),
     ("fleet", "bench_fleet", "Fleet layer — sharded sweeps + joint scheduling"),
     ("speed", "bench_speed", "Paper §4/§5 — predict/allocate latency + LP bench"),
     ("kernels", "bench_kernels", "Pallas kernels vs jnp oracles"),

@@ -1,7 +1,9 @@
-"""Unified control plane: one sense→predict→plan→act→learn loop for every
-scaling policy (declarative one-shot, Dhalion-style reactive, hybrid, LM
-chip planning), with shared guard bands, a uniform event log, pooled
-learning/drift/retraining, and a scenario-diverse load-trace library."""
+"""Unified control plane: one sense→forecast→plan→act→learn loop for every
+scaling policy (declarative one-shot, Dhalion-style reactive, hybrid,
+horizon-predictive, LM chip planning), with shared guard bands (plus
+scenario-conditioned presets), online load forecasting, a uniform event log
+that records why each action fired, pooled learning/drift/retraining, and a
+scenario-diverse load-trace library."""
 
 from .loop import (
     Action,
@@ -10,21 +12,34 @@ from .loop import (
     ControlLoop,
     GuardBands,
     LoadSource,
+    PlanContext,
     Policy,
     StepRecord,
 )
-from .learning import ModelStore, fold_executor_timings
+from .forecast import (
+    FORECASTERS,
+    Forecaster,
+    HoltWintersForecaster,
+    LastValueForecaster,
+    ReplayForecaster,
+    make_forecaster,
+)
+from .learning import ForecastTracker, ModelStore, fold_executor_timings
 from .policies import (
     DeclarativePolicy,
     ElasticLMPolicy,
     HybridPolicy,
+    PredictivePolicy,
     ReactivePolicy,
 )
-from .scenarios import SCENARIOS, make_trace, replay
+from .scenarios import GUARD_PRESETS, SCENARIOS, make_trace, replay
 
 __all__ = [
     "Action", "ControlContext", "ControlEvent", "ControlLoop",
-    "DeclarativePolicy", "ElasticLMPolicy", "GuardBands", "HybridPolicy",
-    "LoadSource", "ModelStore", "Policy", "ReactivePolicy", "SCENARIOS",
-    "StepRecord", "fold_executor_timings", "make_trace", "replay",
+    "DeclarativePolicy", "ElasticLMPolicy", "FORECASTERS", "ForecastTracker",
+    "Forecaster", "GUARD_PRESETS", "GuardBands", "HoltWintersForecaster",
+    "HybridPolicy", "LastValueForecaster", "LoadSource", "ModelStore",
+    "PlanContext", "Policy", "PredictivePolicy", "ReactivePolicy",
+    "ReplayForecaster", "SCENARIOS", "StepRecord", "fold_executor_timings",
+    "make_forecaster", "make_trace", "replay",
 ]

@@ -13,6 +13,12 @@ are folded back into the simulator's physical truth (calibrated per-node
 costs + a host-speed-scaled stream-manager cost in :class:`SimParams`), so
 drift experiments can replay "the same pipeline, on this machine" through
 the batched simulator.
+
+:class:`ForecastTracker` extends the same predict-back idiom to the
+forecast phase: one-step-ahead forecasts are scored against the sensed
+load, and a persistent bias becomes a multiplicative correction factor on
+future forecast windows — online refinement for the forecaster, exactly
+as the calibrator's over-provisioning factor refines the node models.
 """
 from __future__ import annotations
 
@@ -97,6 +103,76 @@ class ModelStore:
         self.models.update(fitted)
         self.calibrator.mark_retrained()
         return fitted
+
+
+class ForecastTracker:
+    """Predict-back calibration for forecasters (the §4 idiom, applied to
+    the forecast phase).
+
+    The control loop records each step's one-step-ahead forecast and, one
+    step later, the load that actually arrived.  Over a sliding window the
+    tracker exposes the forecast accuracy (:meth:`mean_abs_pct_error`) and
+    a clipped multiplicative correction (:meth:`factor`): a forecaster that
+    persistently under-predicts by 10% gets its windows scaled up by ~1.1
+    before planning — the forecaster analogue of the calibrator's
+    over-provisioning factor, learned online and never trusted beyond
+    ``max_correction``.
+    """
+
+    def __init__(self, window: int = 32, max_correction: float = 1.5) -> None:
+        if int(window) < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.window = int(window)
+        self.max_correction = float(max_correction)
+        self.predicted: list[float] = []
+        self.actual: list[float] = []
+
+    def __len__(self) -> int:
+        return len(self.actual)
+
+    def observe(self, predicted: float, actual: float) -> None:
+        """Record one (one-step-ahead forecast, sensed load) pair."""
+        self.predicted.append(float(predicted))
+        self.actual.append(float(actual))
+        bound = 4 * self.window
+        if len(self.actual) > bound:
+            del self.predicted[:-bound]
+            del self.actual[:-bound]
+
+    def _recent(self) -> tuple[np.ndarray, np.ndarray]:
+        p = np.asarray(self.predicted[-self.window :], np.float64)
+        a = np.asarray(self.actual[-self.window :], np.float64)
+        return p, a
+
+    def mean_abs_pct_error(self) -> float:
+        """Mean |actual - predicted| / actual over the window (NaN-free:
+        zero-load steps are excluded)."""
+        p, a = self._recent()
+        mask = a > 1e-9
+        if not mask.any():
+            return 0.0
+        return float(np.mean(np.abs(a[mask] - p[mask]) / a[mask]))
+
+    def bias(self) -> float:
+        """Signed mean (actual - predicted) / actual: positive = the
+        forecaster under-predicts (the dangerous direction)."""
+        p, a = self._recent()
+        mask = a > 1e-9
+        if not mask.any():
+            return 0.0
+        return float(np.mean((a[mask] - p[mask]) / a[mask]))
+
+    def factor(self) -> float:
+        """Multiplicative window correction: mean actual/predicted ratio
+        over the window, clipped to [1/max_correction, max_correction]."""
+        p, a = self._recent()
+        mask = p > 1e-9
+        if not mask.any():
+            return 1.0
+        ratio = float(np.mean(a[mask] / p[mask]))
+        return float(
+            np.clip(ratio, 1.0 / self.max_correction, self.max_correction)
+        )
 
 
 def fold_executor_timings(

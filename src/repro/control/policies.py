@@ -12,18 +12,24 @@ brains are ported here:
 * :class:`ElasticLMPolicy` — the ``lm_bridge`` chip planner, previously
   ``ElasticController.observe``;
 
-plus one genuinely new scenario:
+plus two genuinely new scenarios:
 
 * :class:`HybridPolicy` — model-based target, reactive trim: allocate in
   closed form, then empirically verify the capacity and clone the container
   hosting the measured bottleneck until the target is met.  One-shot speed
   with Dhalion's empirical safety net — the configuration model error can
-  no longer strand an allocation below target.
+  no longer strand an allocation below target;
+* :class:`PredictivePolicy` — horizon planning: consume the loop's
+  forecast window and deploy the cheapest configuration empirically
+  feasible for the *whole* window, scored as one batched
+  candidates × horizon-rates sweep.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import TYPE_CHECKING, Mapping
+
+import numpy as np
 
 from ..core.allocator import allocate
 from ..core.dag import Configuration, ContainerDim, DagSpec
@@ -234,6 +240,130 @@ class HybridPolicy:
             detail={"allocation": res, "trims": trims},
             reason="allocate+trim" if trims else "allocate",
             measurement=probe,             # spare the loop a re-measure
+        )
+
+
+class PredictivePolicy:
+    """Horizon planning: the cheapest configuration feasible for the WHOLE
+    forecast window (new with the forecast phase).
+
+    Where :class:`DeclarativePolicy` plans for the instantaneous target and
+    :class:`HybridPolicy` trims after the fact, this policy consumes the
+    loop's forecast window (:attr:`PlanContext.horizon`) and answers for
+    every step of it at once:
+
+    1. build a small ladder of closed-form allocations spanning the
+       window's target range (cheapest plausible → peak), padded by
+       replication to a FIXED candidate count so every plan call issues
+       the same batch shape — one compiled tick kernel serves the whole
+       trace,
+    2. score candidates × window rates in ONE batched evaluator call
+       (:func:`~repro.streams.engine.evaluate_grid_with`; the rates ride
+       the vmapped batch axis and reuse the sticky shape buckets),
+    3. deploy the cheapest candidate whose measured rate keeps up at
+       EVERY window step; if none survives, the candidate with the best
+       worst-step margin.
+
+    Without a forecast window (or an evaluator) it degrades to the
+    declarative horizon-1 allocation.  The winning candidate's score at the
+    *current* load doubles as the loop's measurement (no second
+    deploy+measure cycle per step).
+    """
+
+    name = "predictive"
+
+    def __init__(
+        self,
+        dag: DagSpec,
+        models: "ModelStore | Mapping[str, NodeModel]",
+        preferred_dim: ContainerDim | None = None,
+        n_candidates: int = 4,
+        feasibility_threshold: float = 0.98,
+    ) -> None:
+        self.dag = dag
+        self.store = _as_store(models)
+        self.preferred_dim = preferred_dim
+        self.n_candidates = max(1, int(n_candidates))
+        self.feasibility_threshold = float(feasibility_threshold)
+
+    def _candidates(self, window_targets: np.ndarray) -> list:
+        """Closed-form allocations along the window's target range, deduped
+        by configuration and padded by replicating the costliest entry so
+        the scored batch always holds exactly ``n_candidates`` entries
+        (stable batch shape = stable compile cache)."""
+        lo = float(np.min(window_targets))
+        hi = float(np.max(window_targets))
+        ladder = (
+            np.linspace(lo, hi, self.n_candidates)
+            if hi > lo
+            else np.full(self.n_candidates, hi)
+        )
+        cands, seen = [], set()
+        for t in ladder:
+            res = allocate(
+                self.dag,
+                self.store.models,
+                max(float(t), 1e-6),
+                preferred_dim=self.preferred_dim,
+                overprovision=self.store.overprovision_factor,
+            )
+            key = (res.config.packing, res.config.dims)
+            if key in seen:
+                continue
+            seen.add(key)
+            cands.append(res)
+        while len(cands) < self.n_candidates:
+            cands.append(cands[-1])
+        return cands
+
+    def plan(self, target: float, ctx: ControlContext) -> Action:
+        window_loads = ctx.window_loads()
+        window_targets = ctx.window_targets()
+        cands = self._candidates(window_targets)
+        if ctx.evaluator is None:
+            # no measurement channel: trust the model at the window peak
+            res = max(cands, key=lambda r: r.total_cpus)
+            return Action(
+                provisioned=res.total_cpus,
+                predicted_capacity=float(np.max(window_targets)),
+                config=res.config,
+                detail=res,
+                reason="forecast-allocate",
+            )
+        from ..streams.engine import evaluate_grid_with
+
+        grid = evaluate_grid_with(
+            ctx.evaluator, [r.config for r in cands], window_loads
+        )
+        thr = self.feasibility_threshold
+        margins = []                  # per candidate: worst-step achieved/load
+        for row in grid:
+            margins.append(
+                min(
+                    e.achieved_ktps / max(l, 1e-9)
+                    for e, l in zip(row, window_loads)
+                )
+            )
+        feasible = [i for i, m in enumerate(margins) if m >= thr]
+        if feasible:
+            best = min(feasible, key=lambda i: cands[i].total_cpus)
+        else:
+            best = int(np.argmax(margins))
+        res, row = cands[best], grid[best]
+        return Action(
+            provisioned=res.total_cpus,
+            # the best lower bound on capacity this sweep produced: the
+            # largest rate the winner was seen to sustain
+            predicted_capacity=float(max(e.achieved_ktps for e in row)),
+            config=res.config,
+            detail={
+                "allocation": res,
+                "window_loads": window_loads,
+                "worst_step_margin": margins[best],
+                "n_feasible": len(feasible),
+            },
+            reason="horizon" if len(window_loads) > 1 else "allocate",
+            measurement=row[0],        # scored at the current load
         )
 
 

@@ -133,12 +133,43 @@ SCENARIOS: dict[str, Callable[..., np.ndarray]] = {
     "bursty": bursty,
 }
 
+#: Scenario-conditioned guard-band presets, registered alongside the trace
+#: generators and consumed through ``GuardBands.for_scenario(name)``.  The
+#: tuning follows the shape: ``step``'s clean level shifts warrant a tight
+#: deadband and symmetric release (follow the shift immediately, both ways);
+#: ``flash_crowd``/``bursty`` transients warrant extra headroom, a wider
+#: deadband and deep scale-down hysteresis (don't chase a spike back down);
+#: periodic shapes sit at the defaults with moderately reluctant release.
+GUARD_PRESETS: dict[str, dict] = {
+    "diurnal": dict(headroom=1.2, deadband=0.15, down_hysteresis=2.0),
+    "weekly": dict(headroom=1.2, deadband=0.15, down_hysteresis=2.5),
+    "ramp": dict(headroom=1.25, deadband=0.10, down_hysteresis=2.0),
+    "step": dict(headroom=1.2, deadband=0.05, down_hysteresis=1.0),
+    "sawtooth": dict(headroom=1.2, deadband=0.10, down_hysteresis=3.0),
+    "flash_crowd": dict(headroom=1.3, deadband=0.20, down_hysteresis=4.0),
+    "bursty": dict(headroom=1.35, deadband=0.25, down_hysteresis=4.0),
+}
+
 
 def make_trace(name: str, n: int, base_ktps: float = 400.0, seed: int = 0,
-               **kw) -> np.ndarray:
-    """Build a named scenario trace; raises ``KeyError`` for unknown names."""
+               split: float | int | None = None, **kw):
+    """Build a named scenario trace; raises ``KeyError`` for unknown names.
+
+    ``split`` carves the trace into a ``(train, test)`` pair — a fraction
+    in (0, 1) or an absolute prefix length — so forecasters are fit on the
+    train prefix and scored on a held-out suffix instead of leaking the
+    full trace into their history."""
     if name not in SCENARIOS:
         raise KeyError(
             f"unknown scenario {name!r}; available: {sorted(SCENARIOS)}"
         )
-    return SCENARIOS[name](n, base_ktps=base_ktps, seed=seed, **kw)
+    trace = SCENARIOS[name](n, base_ktps=base_ktps, seed=seed, **kw)
+    if split is None:
+        return trace
+    k = int(round(split * n)) if isinstance(split, float) else int(split)
+    if not 0 < k < n:
+        raise ValueError(
+            f"split={split!r} leaves an empty train or test side of a "
+            f"{n}-sample trace"
+        )
+    return trace[:k], trace[k:]

@@ -55,6 +55,8 @@ class AutoScaler:
         deadband: float = 0.15,
         preferred_dim: ContainerDim | None = None,
         calibrator: Calibrator | None = None,
+        forecaster=None,
+        horizon: int = 4,
     ) -> None:
         from ..control.learning import ModelStore
         from ..control.loop import ControlLoop, GuardBands
@@ -66,6 +68,9 @@ class AutoScaler:
             DeclarativePolicy(dag, self.store, preferred_dim=preferred_dim),
             guards=GuardBands(headroom=headroom, deadband=deadband),
             learner=self.store,
+            # optional forecast phase: observe_load plans for the window peak
+            forecaster=forecaster,
+            horizon=horizon,
             auto_retrain=False,   # back-compat: the caller decides when to retrain
         )
         self.events: list[ScalingEvent] = []

@@ -1,4 +1,4 @@
-"""One sense→plan→act→learn cycle across every tenant of the fleet.
+"""One sense→forecast→plan→act→learn cycle across every tenant of the fleet.
 
 :class:`FleetLoop` is the multi-tenant sibling of
 :class:`repro.control.loop.ControlLoop` and reuses its semantics piecewise:
@@ -7,6 +7,12 @@
   through its own :class:`~repro.control.loop.GuardBands` (per-tenant
   headroom/deadband/anti-thrash, identical rules to the single-job loop;
   a measured SLA breach overrides any hold),
+* **forecast** — tenants carrying a
+  :class:`~repro.control.forecast.Forecaster` are judged (and planned) at
+  their forecast-window *peak* target: a predicted rise triggers a joint
+  reschedule BEFORE the sensed breach, and the window's rates are scored
+  inside the scheduler's single batched call (``TenantStep.cause``
+  distinguishes such proactive steps from reactive guard steps),
 * **plan** — if *any* tenant's guards demand action the WHOLE fleet is
   rescheduled jointly (:class:`FleetScheduler` — priority-ordered against
   the shared finite cluster, so a guaranteed tenant scaling up is exactly
@@ -45,7 +51,7 @@ class TenantStep:
     qos: QosTier
     load: float
     target: float
-    guard: str                 # bootstrap / breach / scale-up / ... / deadband
+    guard: str                 # bootstrap / breach / forecast / ... / deadband
     planned_ktps: float
     achieved_ktps: float
     cpus: float
@@ -53,6 +59,10 @@ class TenantStep:
     admitted: bool
     sla_met: bool              # achieved >= saturation_threshold * load
     bottleneck: str | None
+    #: why this tenant demanded action: "guard" (reactive threshold),
+    #: "forecast" (proactive window-peak), "measured-sla" (breach
+    #: override), "bootstrap", or "" when this tenant's guards held
+    cause: str = ""
 
 
 @dataclasses.dataclass
@@ -64,6 +74,11 @@ class FleetEvent:
     cores_total: float
     cores_used: float
     tenants: list[TenantStep]
+    #: why the fleet replanned, aggregated over the tenants that demanded
+    #: action — "measured-sla" dominates "guard" dominates "forecast"
+    #: (a purely proactive reschedule is exactly ``cause == "forecast"``);
+    #: "" when no tenant acted
+    cause: str = ""
 
     def tenant(self, name: str) -> TenantStep:
         for t in self.tenants:
@@ -74,6 +89,12 @@ class FleetEvent:
     @property
     def degraded_tenants(self) -> list[str]:
         return [t.tenant for t in self.tenants if t.degraded]
+
+    @property
+    def proactive(self) -> bool:
+        """The fleet replanned purely on forecasts — ahead of any sensed
+        guard threshold or measured breach."""
+        return self.replanned and self.cause == "forecast"
 
 
 class FleetLoop:
@@ -101,7 +122,9 @@ class FleetLoop:
         self.tenants = list(tenants)
         self.cluster = cluster
         self.evaluator = evaluator
-        self.scheduler = FleetScheduler(cluster, evaluator)
+        self.scheduler = FleetScheduler(
+            cluster, evaluator, feasibility_threshold=saturation_threshold
+        )
         self.saturation_threshold = saturation_threshold
         self.plan: FleetPlan | None = None
         self.events: list[FleetEvent] = []
@@ -110,32 +133,75 @@ class FleetLoop:
 
     # -- one cycle ----------------------------------------------------------
     def step(self, loads: Mapping[str, float]) -> FleetEvent:
-        # sense: per-tenant targets through per-tenant guards
+        # sense + forecast: per-tenant targets through per-tenant guards;
+        # tenants with forecasters are judged at their window-peak target
         targets: dict[str, float] = {}
         guard_of: dict[str, str] = {}
+        cause_of: dict[str, str] = {}
+        windows: dict[str, list[float]] = {}
         replan = self.plan is None
         for spec in self.tenants:
             load = float(loads[spec.name])
             target = spec.guards.target_for(load)
-            targets[spec.name] = target
+            plan_target = target
+            if spec.forecaster is not None:
+                spec.forecaster.observe(load)
+                fc = [
+                    float(x)
+                    for x in spec.forecaster.forecast(max(1, int(spec.horizon)))
+                ]
+                windows[spec.name] = fc
+                if fc:
+                    plan_target = max(
+                        target, spec.guards.target_for(max(fc))
+                    )
+            targets[spec.name] = plan_target
             if self.plan is None:
-                guard_of[spec.name] = "bootstrap"
+                guard_of[spec.name] = cause_of[spec.name] = "bootstrap"
                 continue
+            breached = self._breached[spec.name]
             act, reason = spec.guards.decide(
-                target, self._last_target[spec.name], self._breached[spec.name]
+                plan_target, self._last_target[spec.name], breached
             )
+            cause = ""
+            if act:
+                if reason == "breach":
+                    cause = "measured-sla"
+                elif spec.forecaster is not None:
+                    # proactive iff the sensed target alone would NOT have
+                    # produced this same decision (held, or acted the other
+                    # way) — this tenant's demand is owed to its forecast
+                    act_now, reason_now = spec.guards.decide(
+                        target, self._last_target[spec.name], False
+                    )
+                    if act_now and reason_now == reason:
+                        cause = "guard"
+                    else:
+                        reason = cause = "forecast"
+                else:
+                    cause = "guard"
             guard_of[spec.name] = reason
+            cause_of[spec.name] = cause
             replan = replan or act
 
-        # plan: one joint scheduling round covers every tenant
+        # plan: one joint scheduling round covers every tenant; forecast
+        # windows ride the scheduler's single batched scoring call
         if replan:
             self.plan = self.scheduler.schedule(
-                [(spec, targets[spec.name]) for spec in self.tenants]
+                [(spec, targets[spec.name]) for spec in self.tenants],
+                windows=windows or None,
             )
             for spec in self.tenants:
                 self._last_target[spec.name] = targets[spec.name]
                 self._breached[spec.name] = False
         assert self.plan is not None
+        causes = {c for c in cause_of.values() if c}
+        fleet_cause = ""
+        if replan:
+            for dominant in ("bootstrap", "measured-sla", "guard", "forecast"):
+                if dominant in causes:
+                    fleet_cause = dominant
+                    break
 
         # act: measure all deployed configs at their offered loads in one
         # batched call; values are (derated achieved, bottleneck,
@@ -216,6 +282,7 @@ class FleetLoop:
                     admitted=alloc.admitted,
                     sla_met=sla_met,
                     bottleneck=bottleneck,
+                    cause=cause_of.get(spec.name, ""),
                 )
             )
 
@@ -225,6 +292,7 @@ class FleetLoop:
             cores_total=self.plan.cores_total,
             cores_used=self.plan.cores_used,
             tenants=steps,
+            cause=fleet_cause,
         )
         self.events.append(ev)
         return ev

@@ -18,7 +18,10 @@ one finite pool.  :class:`FleetScheduler` is that arbiter:
   shed first by construction,
 * every tenant's final configuration is scored in ONE batched, device-
   sharded evaluation (:meth:`ConfigEvaluator.evaluate_jobs`), and the
-  predicted capacity is derated by the slowest host speed in its placement.
+  predicted capacity is derated by the slowest host speed in its placement,
+* tenants carrying a forecast window additionally get every window rate
+  scored inside that same single call — whole-window feasibility comes
+  with the plan, not as a follow-up sweep.
 """
 from __future__ import annotations
 
@@ -30,10 +33,11 @@ from ..core.allocator import ResourceBudget, allocate_under_budget
 from ..core.dag import Configuration, ContainerDim, DagSpec
 from ..core.node_model import NodeModel
 from ..control.loop import GuardBands
-from ..streams.engine import evaluate_jobs_with
+from ..streams.engine import OVERLOAD_KTPS, evaluate_jobs_with
 from .cluster import Cluster, Placement
 
 if TYPE_CHECKING:
+    from ..control.forecast import Forecaster
     from ..control.learning import ModelStore
     from ..streams.engine import ConfigEvaluator
 
@@ -53,7 +57,9 @@ class TenantSpec:
     ``models`` may be a plain mapping or a :class:`ModelStore` (the fleet
     loop feeds saturated measurements back into a store).  ``guards`` are
     per-tenant :class:`GuardBands` — a best-effort tenant can run wider
-    deadbands than a guaranteed one.
+    deadbands than a guaranteed one.  A per-tenant ``forecaster`` makes the
+    fleet loop plan this tenant for its forecast-window peak over the next
+    ``horizon`` steps — proactive joint reschedules ahead of the breach.
     """
 
     name: str
@@ -63,6 +69,8 @@ class TenantSpec:
     models: "ModelStore | Mapping[str, NodeModel] | None" = None
     guards: GuardBands = dataclasses.field(default_factory=GuardBands)
     preferred_dim: ContainerDim | None = None
+    forecaster: "Forecaster | None" = None
+    horizon: int = 4
 
     def node_models(self) -> Mapping[str, NodeModel]:
         if self.models is None:
@@ -90,6 +98,11 @@ class TenantAllocation:
     bottleneck: str | None
     shortfall_ktps: float             # requested - planned (budget shed)
     degraded: bool                    # budget bound this tenant
+    #: per-window-step measured rates (speed-derated), when the schedule was
+    #: given a forecast window for this tenant — empty otherwise
+    horizon_ktps: tuple = ()
+    #: the deployment keeps up at every step of its forecast window
+    horizon_feasible: bool = True
 
     @property
     def admitted(self) -> bool:
@@ -129,15 +142,24 @@ class FleetPlan:
 
 
 class FleetScheduler:
-    """Places N tenants onto one cluster through the evaluation engine."""
+    """Places N tenants onto one cluster through the evaluation engine.
+
+    ``feasibility_threshold`` is the whole-window feasibility bar: a
+    windowed tenant's deployment is ``horizon_feasible`` only when its
+    (derated) measured rate reaches ``threshold * window_rate`` at every
+    window step — the fleet loop passes its own ``saturation_threshold``
+    here so "feasible at plan time" and "SLA met when the load arrives"
+    are one judgment."""
 
     def __init__(
         self,
         cluster: Cluster,
         evaluator: "ConfigEvaluator | None" = None,
+        feasibility_threshold: float = 0.95,
     ) -> None:
         self.cluster = cluster
         self.evaluator = evaluator
+        self.feasibility_threshold = float(feasibility_threshold)
 
     @staticmethod
     def _priority_order(
@@ -148,11 +170,20 @@ class FleetScheduler:
         )
 
     def schedule(
-        self, demands: Sequence[tuple[TenantSpec, float]]
+        self,
+        demands: Sequence[tuple[TenantSpec, float]],
+        windows: "Mapping[str, Sequence[float]] | None" = None,
     ) -> FleetPlan:
         """One joint scheduling round: ``demands`` pairs each tenant with
         its current provisioning target (ktps).  Returns the fleet plan in
-        the original demand order."""
+        the original demand order.
+
+        ``windows`` optionally maps tenant names to their forecast windows
+        (future loads in ktps).  Windowed tenants' deployments are scored
+        at every window rate *in the same single batched call* as the
+        capacity probe — the window rides the job axis of
+        ``evaluate_jobs`` — and the allocation reports per-step rates and
+        whole-window feasibility."""
         names = [spec.name for spec, _t in demands]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names in demands: {names}")
@@ -204,16 +235,51 @@ class FleetScheduler:
             )
 
         # joint capacity scoring: every admitted tenant's configuration in
-        # one batched (device-sharded) evaluation
+        # one batched (device-sharded) evaluation.  Each tenant contributes
+        # one capacity probe (overload) plus, when it has a forecast window,
+        # one job per window rate — the whole fleet × every horizon step is
+        # still a single evaluate_jobs call.
         if self.evaluator is not None:
             admitted = [a for a in by_tenant.values() if a.config is not None]
-            groups = [[a.config] for a in admitted]
+            groups: list[list[Configuration]] = []
+            loads: list[float] = []
+            spans: list[tuple[TenantAllocation, float, int]] = []
+            for a in admitted:
+                speed = a.placement.min_speed if a.placement else 1.0
+                window = list((windows or {}).get(a.tenant, ()))
+                groups.append([a.config])
+                loads.append(OVERLOAD_KTPS)
+                for rate in window:
+                    # the reference-host simulator is driven at rate/speed;
+                    # its answer is scaled back by speed (fleet-loop rule)
+                    groups.append([a.config])
+                    loads.append(float(rate) / speed)
+                spans.append((a, speed, len(window)))
             if groups:
-                evals = evaluate_jobs_with(self.evaluator, groups)
-                for a, (ev,) in zip(admitted, evals):
-                    speed = a.placement.min_speed if a.placement else 1.0
-                    a.predicted_ktps = ev.achieved_ktps * speed
-                    a.bottleneck = ev.bottleneck
+                evals = evaluate_jobs_with(self.evaluator, groups, loads)
+                i = 0
+                for a, speed, n_win in spans:
+                    (cap,) = evals[i]
+                    a.predicted_ktps = cap.achieved_ktps * speed
+                    a.bottleneck = cap.bottleneck
+                    window = loads[i + 1 : i + 1 + n_win]
+                    rates = tuple(
+                        evals[i + 1 + k][0].achieved_ktps * speed
+                        for k in range(n_win)
+                    )
+                    a.horizon_ktps = rates
+                    a.horizon_feasible = all(
+                        r >= self.feasibility_threshold * ref * speed
+                        for r, ref in zip(rates, window)
+                    )
+                    i += 1 + n_win
+
+        # a tenant whose window was never scored — shed entirely, or no
+        # evaluator to measure with — must not claim whole-window coverage
+        if windows:
+            for a in by_tenant.values():
+                if windows.get(a.tenant) and not a.horizon_ktps:
+                    a.horizon_feasible = False
 
         allocations = [by_tenant[spec.name] for spec, _t in demands]
         return FleetPlan(

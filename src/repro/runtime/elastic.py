@@ -45,6 +45,8 @@ class ElasticController:
         min_chips: int = 8,
         max_chips: int = 4096,
         on_remesh: Callable[[ElasticEvent], None] | None = None,
+        forecaster=None,
+        horizon: int = 4,
     ):
         from ..control.loop import ControlLoop, GuardBands
         from ..control.policies import ElasticLMPolicy
@@ -57,6 +59,9 @@ class ElasticController:
                 model, tokens_per_step, min_chips=min_chips, max_chips=max_chips
             ),
             guards=GuardBands(headroom=headroom, deadband=deadband),
+            # optional forecast phase: re-mesh for the window-peak token rate
+            forecaster=forecaster,
+            horizon=horizon,
         )
 
     # -- tunables forwarded live to the loop/policy (not captured copies) ---

@@ -22,6 +22,7 @@ from .simulator import (
     shard_count,
     simulate,
     simulate_batch,
+    simulate_grid,
     training_sweep,
 )
 from .engine import (
@@ -30,6 +31,7 @@ from .engine import (
     EvalResult,
     ExecutorEvaluator,
     SimulatorEvaluator,
+    evaluate_grid_with,
     evaluate_jobs_with,
 )
 from . import sources
@@ -38,7 +40,8 @@ __all__ = [
     "WORKLOADS", "ConfigEvaluator", "EvalResult", "ExecutorEvaluator",
     "OVERLOAD_KTPS", "SimParams", "SimResult", "SimulatorEvaluator",
     "adanalytics", "bucket_size", "clear_kernel_cache", "deep_pipeline",
-    "diamond", "evaluate_jobs_with", "kernel_cache_info", "measure_capacity",
-    "mobile_analytics", "pad_structure", "shard_count", "simulate",
-    "simulate_batch", "sources", "training_sweep", "wordcount",
+    "diamond", "evaluate_grid_with", "evaluate_jobs_with",
+    "kernel_cache_info", "measure_capacity", "mobile_analytics",
+    "pad_structure", "shard_count", "simulate", "simulate_batch",
+    "simulate_grid", "sources", "training_sweep", "wordcount",
 ]

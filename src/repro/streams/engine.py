@@ -31,6 +31,7 @@ from ..core.node_model import oracle_models
 from .simulator import (
     SimParams,
     SimResult,
+    _grid_through_batch,
     bucket_size,
     is_scalar_load,
     simulate_batch,
@@ -69,6 +70,24 @@ class ConfigEvaluator(Protocol):
     def evaluate_jobs(
         self, groups: JobGroups, offered_ktps=OVERLOAD_KTPS
     ) -> list[list[EvalResult]]: ...
+
+    def evaluate_grid(
+        self, configs: Sequence[Configuration], rates_ktps
+    ) -> list[list[EvalResult]]: ...
+
+
+def evaluate_grid_with(
+    evaluator, configs: Sequence[Configuration], rates_ktps
+) -> list["list[EvalResult]"]:
+    """``evaluate_grid`` on *any* evaluator, including backends written
+    before the grid entry point existed: those fall back to one flattened
+    ``evaluate_batch`` over the cross-product — still a single batched call
+    on batching backends.  Predictive policies call through this shim so
+    old evaluators (counting/caching wrappers) keep working."""
+    fn = getattr(evaluator, "evaluate_grid", None)
+    if fn is not None:
+        return fn(configs, rates_ktps)
+    return _grid_through_batch(evaluator.evaluate_batch, configs, rates_ktps)
 
 
 def _expand_job_loads(groups: list[list[Configuration]], offered_ktps):
@@ -198,6 +217,15 @@ class SimulatorEvaluator:
         loads = _expand_job_loads(groups, offered_ktps)
         return _regroup(self.evaluate_batch(flat, loads), groups)
 
+    def evaluate_grid(
+        self, configs: Sequence[Configuration], rates_ktps
+    ) -> list[list[EvalResult]]:
+        """Candidate-configs × horizon-rates in ONE vmapped kernel call —
+        the rates ride the batch axis (config-major cross-product), so a
+        predictive policy's whole window sweep reuses the sticky shape
+        buckets and costs no extra compilations beyond its batch shape."""
+        return _grid_through_batch(self.evaluate_batch, configs, rates_ktps)
+
 
 class ExecutorEvaluator:
     """Real-JAX executor backend.
@@ -316,3 +344,16 @@ class ExecutorEvaluator:
             for c, o in zip((c for g in groups for c in g), loads)
         ]
         return _regroup(flat, groups)
+
+    def evaluate_grid(
+        self, configs: Sequence[Configuration], rates_ktps
+    ) -> list[list[EvalResult]]:
+        """Grid scoring on the real-executor backend: each distinct DAG is
+        timed once, then the (config, rate) pairs score serially through
+        the calibrated LP flow solver."""
+
+        def batch(flat_cfgs, flat_loads):
+            self.precalibrate([c.dag for c in flat_cfgs])
+            return [self.evaluate(c, o) for c, o in zip(flat_cfgs, flat_loads)]
+
+        return _grid_through_batch(batch, configs, rates_ktps)

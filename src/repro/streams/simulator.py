@@ -692,6 +692,59 @@ def simulate_batch(
     return results
 
 
+def _grid_through_batch(evaluate_batch, configs, rates_ktps):
+    """Shared config × rate grid driver: flatten the cross-product
+    config-major onto the batch axis (config ``i`` at rate ``j`` lands at
+    flat index ``i * R + j``), score it through one ``evaluate_batch``-
+    shaped callable, and slice back to ``out[i][j]``.  Both the engine's
+    ``evaluate_grid`` entry points and :func:`simulate_grid` route through
+    here, so grid ordering and empty-input semantics have one home."""
+    configs = list(configs)
+    rates = [float(r) for r in rates_ktps]
+    if not configs or not rates:
+        return [[] for _ in configs]
+    flat = evaluate_batch(
+        [c for c in configs for _ in rates],
+        [r for _ in configs for r in rates],
+    )
+    R = len(rates)
+    return [flat[i * R : (i + 1) * R] for i in range(len(configs))]
+
+
+def simulate_grid(
+    configs: Sequence[Configuration],
+    rates_ktps,
+    duration_s: float = 20.0,
+    params: SimParams = SimParams(),
+    min_inst_bucket: int = 0,
+    min_cont_bucket: int = 0,
+    devices: int | None = None,
+) -> list[list[SimResult]]:
+    """Score C configurations × R offered rates in ONE batched kernel call.
+
+    The cross-product rides the vmapped batch axis, so a predictive
+    policy's whole horizon sweep — every candidate configuration at every
+    forecast rate — shares a single compilation through the existing
+    shape-bucket cache.  Returns ``out[i][j]`` for config ``i`` at
+    ``rates_ktps[j]``; results are bitwise identical to evaluating each
+    (config, rate) pair on its own (same bucket), because the batch axis is
+    data-parallel.
+    """
+
+    def batch(flat_cfgs, flat_loads):
+        return simulate_batch(
+            flat_cfgs,
+            flat_loads,
+            duration_s=duration_s,
+            params=params,
+            min_inst_bucket=min_inst_bucket,
+            min_cont_bucket=min_cont_bucket,
+            devices=devices,
+        )
+
+    return _grid_through_batch(batch, configs, rates_ktps)
+
+
 def simulate(
     config: Configuration,
     offered_ktps,
