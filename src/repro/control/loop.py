@@ -98,6 +98,9 @@ class GuardBands:
         return cls(**GUARD_PRESETS[name])
 
     def target_for(self, load: float) -> float:
+        """The provisioning target for a sensed ``load``: capacity to plan
+        for, i.e. ``load * headroom``.  Both the single-job loop and every
+        fleet tenant derive their targets through this one rule."""
         return load * self.headroom
 
     def decide(

@@ -29,7 +29,9 @@ from .allocator import (
     BudgetedAllocation,
     ResourceBudget,
     allocate,
+    allocate_point,
     allocate_under_budget,
+    minimal_footprint,
 )
 from .calibration import Calibrator
 from .autoscaler import AutoScaler, run_against_trace
@@ -40,9 +42,11 @@ __all__ = [
     "Calibrator", "Configuration", "ContainerDim", "DagSpec", "EdgeSpec",
     "FlowSolution", "Grouping", "InstanceSamples", "LinearFit", "MetricsStore",
     "NodeModel", "NodeSpec", "ReactiveResult", "ResourceBudget",
-    "ResourceClass", "STREAM_MANAGER", "allocate", "allocate_under_budget",
+    "ResourceClass", "STREAM_MANAGER", "allocate", "allocate_point",
+    "allocate_under_budget",
     "build_flow_problem", "classify_bound", "fit_node", "fit_workload",
-    "linear_fit", "oracle_models", "propagate_rates", "reactive_scale",
+    "linear_fit", "minimal_footprint", "oracle_models", "propagate_rates",
+    "reactive_scale",
     "round_robin_configuration", "run_against_trace",
     "single_container_configuration", "solve_flow",
 ]

@@ -246,6 +246,57 @@ def _allocate_one(
     )
 
 
+def allocate_point(
+    dag: DagSpec,
+    models: Mapping[str, NodeModel],
+    target_rate_ktps: float,
+    preferred_dim: ContainerDim | None = None,
+    overprovision: float = 1.0,
+    rounding: str = "ceil",
+) -> AllocationResult:
+    """One closed-form allocation at a single (dim, rounding) point.
+
+    Args:
+        dag: the logical job.
+        models: learned per-node models (including the stream manager).
+        target_rate_ktps: declared source rate to provision for.
+        preferred_dim: optional container dimension to α-scale down to.
+        overprovision: §4 calibration factor multiplied into the rate.
+        rounding: ``"ceil"`` (conservative, the paper's default) or
+            ``"floor"`` (a leaner candidate whose feasibility an evaluator
+            can check empirically).
+
+    Returns:
+        The :class:`AllocationResult` for exactly this point — no candidate
+        search.  The fleet scheduler uses this to build per-tenant candidate
+        *sets* (dim × rounding ladders) that are then scored together in one
+        batched evaluation.
+    """
+    if target_rate_ktps <= 0:
+        raise ValueError("target rate must be positive")
+    return _allocate_one(
+        dag, models, target_rate_ktps, preferred_dim, overprovision, rounding
+    )
+
+
+def minimal_footprint(
+    dag: DagSpec,
+    models: Mapping[str, NodeModel],
+    preferred_dim: ContainerDim | None = None,
+    overprovision: float = 1.0,
+) -> Configuration:
+    """The smallest configuration this DAG can run as: one container per
+    node group with one instance of each node (the rate → 0 limit).
+
+    This is the *minimum footprint* admission is judged by: a tenant whose
+    minimal configuration does not bin-pack onto the remaining inventory
+    cannot be admitted at any rate — and it is the trial-pack probe the
+    fleet scheduler's preemption ladder tries to make room for."""
+    return _allocate_one(
+        dag, models, 1e-3, preferred_dim, overprovision, "ceil"
+    ).config
+
+
 def allocate(
     dag: DagSpec,
     models: Mapping[str, NodeModel],

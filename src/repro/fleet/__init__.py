@@ -3,10 +3,16 @@
 ``Cluster`` models the finite physical pool (machine classes with per-host
 core/memory capacity and relative speed); ``FleetScheduler`` places N
 independent jobs — each a DagSpec + declared rate + QoS tier — onto it by
-scoring joint candidate allocations through the batched, device-sharded
-evaluation engine; ``FleetLoop`` runs one sense→plan→act→learn cycle across
-all tenants, shedding best-effort capacity before guaranteed capacity when
-the budget binds.
+scoring joint candidate *sets* (dim × rounding per tenant) through the
+batched, device-sharded evaluation engine; ``FleetLoop`` runs one
+sense→plan→act→learn cycle across all tenants, shedding best-effort
+capacity before guaranteed capacity when the budget binds.
+
+Scheduling is *stateful*: ``schedule(..., previous=plan)`` warm-places —
+containers stay on their current hosts when the allocation allows it and
+repacks are scored by container-move cost — and a squeezed higher tier
+defragments and then preempts lower-tier residency in reverse-QoS order
+(evictions recorded per tenant in the plan's eviction log).
 """
 
 from .cluster import Cluster, Host, MachineClass, Placement

@@ -65,6 +65,12 @@ class Host:
         self.cores_free -= dim.cpus
         self.mem_free -= dim.mem_mb
 
+    def release(self, dim: ContainerDim) -> None:
+        """Return one container's capacity to this host (inverse of
+        :meth:`place`) — incremental unpack for evictions and replans."""
+        self.cores_free = min(self.cores, self.cores_free + dim.cpus)
+        self.mem_free = min(self.mem_mb, self.mem_free + dim.mem_mb)
+
     def clone(self) -> "Host":
         return dataclasses.replace(self)
 
@@ -75,12 +81,19 @@ class Placement:
 
     ``host_of[c]`` is the index (into the inventory this placement was packed
     against) of the host carrying container ``c``; ``-1`` marks an unplaced
-    container (the packing failed).
+    container (the packing failed).  ``moves`` counts the containers that
+    were *not* kept on their warm-preferred host — a container with no
+    preference (a fresh start) counts as a move, a container re-seated on
+    its previous host does not.  ``move_cost`` is the container state those
+    moves have to transfer (the summed ``mem_mb`` of every moved container);
+    schedulers minimize it when choosing between feasible repacks.
     """
 
     host_of: tuple[int, ...]
     host_names: tuple[str, ...]
     min_speed: float
+    moves: int = 0
+    move_cost: float = 0.0
 
     @property
     def feasible(self) -> bool:
@@ -131,34 +144,122 @@ class Cluster:
         return hosts
 
     @staticmethod
-    def pack(dims: Sequence[ContainerDim], hosts: list[Host]) -> Placement:
+    def pack(
+        dims: Sequence[ContainerDim],
+        hosts: list[Host],
+        prefer: Sequence[str] | None = None,
+    ) -> Placement:
         """First-fit-decreasing bin-packing of containers onto ``hosts``.
 
-        Mutates ``hosts`` (successive tenants share one shrinking
-        inventory); callers wanting a *trial* pack pass cloned hosts (see
-        :func:`trial_pack`).  Containers are placed largest-CPU-first; each
-        goes to the first host with room, and hosts are ordered fastest
-        first by :meth:`inventory`.
+        Args:
+            dims: one :class:`ContainerDim` per container to place.
+            hosts: the (mutable) inventory.  ``pack`` consumes capacity from
+                it — successive tenants share one shrinking inventory.
+                Callers wanting a *trial* pack pass cloned hosts (see
+                :meth:`trial_pack`).
+            prefer: optional warm-placement preferences — ``prefer[c]`` is
+                the *name* of the host container ``c`` currently lives on
+                (``""`` for a container with no previous home).  A container
+                whose preferred host still has room is re-seated there and
+                costs no move; every other placed container falls back to
+                first-fit and is charged to :attr:`Placement.moves` /
+                :attr:`Placement.move_cost`.
+
+        Returns:
+            A :class:`Placement`.  Containers are placed largest-CPU-first;
+            each non-preferred container goes to the first host with room,
+            and hosts are ordered fastest first by :meth:`inventory`.
+            ``host_of[c] == -1`` marks a container that fit nowhere
+            (``placement.feasible`` is then False); partially consumed
+            capacity is *not* rolled back, so infeasible packs on the real
+            inventory should be avoided via :meth:`trial_pack` first.
         """
+        by_name = {h.name: i for i, h in enumerate(hosts)}
         order = sorted(range(len(dims)), key=lambda i: -dims[i].cpus)
         host_of = [-1] * len(dims)
+        moves = 0
+        move_cost = 0.0
         for ci in order:
+            want = prefer[ci] if prefer is not None and ci < len(prefer) else ""
+            wi = by_name.get(want, -1) if want else -1
+            if wi >= 0 and hosts[wi].can_fit(dims[ci]):
+                hosts[wi].place(dims[ci])
+                host_of[ci] = wi
+                continue                       # warm: kept on its host
             for hi, h in enumerate(hosts):
                 if h.can_fit(dims[ci]):
                     h.place(dims[ci])
                     host_of[ci] = hi
+                    moves += 1                 # started or relocated
+                    move_cost += dims[ci].mem_mb
                     break
         used_speeds = [hosts[h].speed for h in host_of if h >= 0]
         return Placement(
             host_of=tuple(host_of),
             host_names=tuple(hosts[h].name if h >= 0 else "" for h in host_of),
             min_speed=min(used_speeds) if used_speeds else 1.0,
+            moves=moves,
+            move_cost=move_cost,
         )
 
     @staticmethod
     def trial_pack(dims: Sequence[ContainerDim], hosts: list[Host]) -> bool:
-        """Would these containers fit, without consuming the inventory?"""
+        """Would these containers fit, without consuming the inventory?
+
+        Args:
+            dims: the containers to probe.
+            hosts: the current inventory — cloned internally, never mutated.
+
+        Returns:
+            True iff a first-fit-decreasing pack places every container.
+            This is the feasibility predicate the fleet scheduler threads
+            into :func:`repro.core.allocator.allocate_under_budget`, so
+            *fragmentation* binds admission, not just aggregate capacity.
+        """
         return Cluster.pack(dims, [h.clone() for h in hosts]).feasible
+
+    @staticmethod
+    def release(
+        placement: Placement, dims: Sequence[ContainerDim], hosts: list[Host]
+    ) -> None:
+        """Return a placement's capacity to the inventory it was packed
+        against (incremental unpack — the inverse of :meth:`pack`).
+
+        Unplaced containers (``host_of[c] == -1``) are skipped.  ``hosts``
+        must be the same list (same indices) the placement was produced
+        from."""
+        for hi, dim in zip(placement.host_of, dims):
+            if hi >= 0:
+                hosts[hi].release(dim)
+
+    @staticmethod
+    def seat(
+        dims: Sequence[ContainerDim],
+        host_names: Sequence[str],
+        hosts: list[Host],
+    ) -> Placement:
+        """Re-seat containers on specific *named* hosts — restoring a
+        previous plan's residency onto a fresh inventory.
+
+        Each container is placed on ``host_names[c]`` when that host exists
+        and has room; containers whose named host is gone or full are left
+        unplaced (``host_of[c] == -1``) rather than relocated — the caller
+        decides whether a failed re-seat becomes a move or an eviction.
+        Consumes capacity for every seated container.  Seated containers
+        are never charged as moves."""
+        by_name = {h.name: i for i, h in enumerate(hosts)}
+        host_of = [-1] * len(dims)
+        for ci, (dim, name) in enumerate(zip(dims, host_names)):
+            hi = by_name.get(name, -1)
+            if hi >= 0 and hosts[hi].can_fit(dim):
+                hosts[hi].place(dim)
+                host_of[ci] = hi
+        used_speeds = [hosts[h].speed for h in host_of if h >= 0]
+        return Placement(
+            host_of=tuple(host_of),
+            host_names=tuple(hosts[h].name if h >= 0 else "" for h in host_of),
+            min_speed=min(used_speeds) if used_speeds else 1.0,
+        )
 
     def describe(self) -> str:
         parts = [

@@ -16,7 +16,12 @@
 * **plan** — if *any* tenant's guards demand action the WHOLE fleet is
   rescheduled jointly (:class:`FleetScheduler` — priority-ordered against
   the shared finite cluster, so a guaranteed tenant scaling up is exactly
-  what sheds a best-effort tenant's capacity),
+  what sheds a best-effort tenant's capacity).  Replans are *warm*: the
+  deployed plan is carried across steps as the scheduler's previous state,
+  so unchanged tenants keep their hosts (zero container moves) and a
+  squeezed higher tier defragments/preempts lower-tier residency instead
+  of failing on fragmentation (``TenantStep.moves`` / ``.evicted`` audit
+  both),
 * **act** — every deployed configuration is measured at its offered load in
   ONE batched, device-sharded evaluation (``evaluate_jobs``); host speed
   scales capacity, so the reference-host simulator is driven at
@@ -63,6 +68,11 @@ class TenantStep:
     #: "forecast" (proactive window-peak), "measured-sla" (breach
     #: override), "bootstrap", or "" when this tenant's guards held
     cause: str = ""
+    #: containers this tenant started or relocated this step (0 on held
+    #: steps and for warm-placed tenants whose allocation did not change)
+    moves: int = 0
+    #: containers of this tenant preempted by higher tiers this step
+    evicted: int = 0
 
 
 @dataclasses.dataclass
@@ -79,6 +89,11 @@ class FleetEvent:
     #: (a purely proactive reschedule is exactly ``cause == "forecast"``);
     #: "" when no tenant acted
     cause: str = ""
+    #: containers started or relocated by this step's replan (0 on held
+    #: steps; a replan with unchanged demands also moves 0 — warm placement)
+    moves: int = 0
+    #: containers preempted by this step's replan, across all tenants
+    evicted: int = 0
 
     def tenant(self, name: str) -> TenantStep:
         for t in self.tenants:
@@ -185,11 +200,15 @@ class FleetLoop:
             replan = replan or act
 
         # plan: one joint scheduling round covers every tenant; forecast
-        # windows ride the scheduler's single batched scoring call
+        # windows ride the scheduler's single batched scoring call.  The
+        # current plan is handed back in as the warm state: unchanged
+        # tenants keep their hosts (zero moves) and a squeezed higher tier
+        # preempts lower-tier residency instead of failing on fragmentation
         if replan:
             self.plan = self.scheduler.schedule(
                 [(spec, targets[spec.name]) for spec in self.tenants],
                 windows=windows or None,
+                previous=self.plan,
             )
             for spec in self.tenants:
                 self._last_target[spec.name] = targets[spec.name]
@@ -283,6 +302,8 @@ class FleetLoop:
                     sla_met=sla_met,
                     bottleneck=bottleneck,
                     cause=cause_of.get(spec.name, ""),
+                    moves=alloc.moves if replan else 0,
+                    evicted=alloc.evicted if replan else 0,
                 )
             )
 
@@ -293,6 +314,8 @@ class FleetLoop:
             cores_used=self.plan.cores_used,
             tenants=steps,
             cause=fleet_cause,
+            moves=self.plan.total_moves if replan else 0,
+            evicted=sum(t.evicted for t in steps),
         )
         self.events.append(ev)
         return ev

@@ -1,11 +1,12 @@
-"""QoS-aware multi-job scheduling over a shared :class:`Cluster`.
+"""QoS-aware, *stateful* multi-job scheduling over a shared :class:`Cluster`.
 
 Trevor's central claim is that learned performance models let you
 "optimally schedule logically specified jobs onto available physical
 hardware".  One job against an infinite cluster (PRs 1-2) only exercises
 half of that sentence; the interesting regime — per Phoebe and Daedalus
 (PAPERS.md) — is N independent jobs with distinct QoS tiers contending for
-one finite pool.  :class:`FleetScheduler` is that arbiter:
+one finite pool, *re-planned as conditions change*.  :class:`FleetScheduler`
+is that arbiter:
 
 * tenants are served in QoS order (guaranteed → standard → best-effort,
   ties broken by declared rate then name, so the outcome is deterministic),
@@ -13,15 +14,29 @@ one finite pool.  :class:`FleetScheduler` is that arbiter:
   (:func:`repro.core.allocator.allocate_under_budget`) against the
   *remaining* host inventory — the feasibility predicate is a trial
   bin-packing, so fragmentation binds, not just aggregate cores,
-* when the budget binds, lower tiers are degraded (allocated for the
-  largest feasible rate) or shut out entirely — best-effort capacity is
-  shed first by construction,
-* every tenant's final configuration is scored in ONE batched, device-
-  sharded evaluation (:meth:`ConfigEvaluator.evaluate_jobs`), and the
-  predicted capacity is derated by the slowest host speed in its placement,
-* tenants carrying a forecast window additionally get every window rate
-  scored inside that same single call — whole-window feasibility comes
-  with the plan, not as a follow-up sweep.
+* scheduling is **warm**: given the previous :class:`FleetPlan`, every
+  tenant's containers stay seated on their current hosts and a replanned
+  tenant's repack *prefers* its previous hosts — candidate placements are
+  scored by a container-move cost (the state they would have to transfer)
+  and the cheapest feasible repack wins.  A replan with unchanged demands
+  moves zero containers,
+* when a guaranteed/standard tenant's allocation is squeezed by lower-tier
+  residency — its minimum footprint no longer trial-packs, or the bisected
+  rate falls short — the scheduler **defragments** (compacts lower-tier
+  residents onto fewer hosts, costing moves but no capacity) and then
+  **preempts**: resident containers are evicted in reverse-QoS order
+  (best-effort first, then previously-degraded standard, then standard)
+  until the higher tier fits.  Evictions are recorded per tenant in the
+  plan's eviction log,
+* every tenant gets a *candidate set* (its dim × rounding ladder), and all
+  tenants' candidate sets — plus every forecast-window rate — are scored in
+  ONE batched, device-sharded evaluation
+  (:meth:`ConfigEvaluator.evaluate_jobs`).  The measured scores pick the
+  final deployment among the real alternatives: a provisional winner whose
+  measured capacity misses the planned rate is swapped for the cheapest
+  candidate that delivers it,
+* predicted capacity is derated by the slowest host speed in the winning
+  placement.
 """
 from __future__ import annotations
 
@@ -29,12 +44,17 @@ import dataclasses
 import enum
 from typing import TYPE_CHECKING, Mapping, Sequence
 
-from ..core.allocator import ResourceBudget, allocate_under_budget
+from ..core.allocator import (
+    AllocationResult,
+    ResourceBudget,
+    allocate_point,
+    allocate_under_budget,
+)
 from ..core.dag import Configuration, ContainerDim, DagSpec
 from ..core.node_model import NodeModel
 from ..control.loop import GuardBands
-from ..streams.engine import OVERLOAD_KTPS, evaluate_jobs_with
-from .cluster import Cluster, Placement
+from ..streams.engine import OVERLOAD_KTPS, PerCandidateLoads, evaluate_jobs_with
+from .cluster import Cluster, Host, Placement
 
 if TYPE_CHECKING:
     from ..control.forecast import Forecaster
@@ -60,6 +80,14 @@ class TenantSpec:
     deadbands than a guaranteed one.  A per-tenant ``forecaster`` makes the
     fleet loop plan this tenant for its forecast-window peak over the next
     ``horizon`` steps — proactive joint reschedules ahead of the breach.
+
+    ``candidate_dims`` / ``candidate_roundings`` define the tenant's
+    candidate *set*: one closed-form allocation per (dim, rounding) pair is
+    generated at the budget-feasible rate and scored in the scheduler's
+    single batched call, so the repack chooses among real alternatives
+    rather than trusting one analytic point.  The defaults score the
+    preferred dim at both roundings; set ``candidate_roundings=("ceil",)``
+    to pin the paper's conservative single point.
     """
 
     name: str
@@ -71,6 +99,8 @@ class TenantSpec:
     preferred_dim: ContainerDim | None = None
     forecaster: "Forecaster | None" = None
     horizon: int = 4
+    candidate_dims: Sequence[ContainerDim] | None = None
+    candidate_roundings: Sequence[str] = ("ceil", "floor")
 
     def node_models(self) -> Mapping[str, NodeModel]:
         if self.models is None:
@@ -98,6 +128,16 @@ class TenantAllocation:
     bottleneck: str | None
     shortfall_ktps: float             # requested - planned (budget shed)
     degraded: bool                    # budget bound this tenant
+    #: containers started or relocated relative to the previous plan (a
+    #: container kept on its warm-preferred host costs nothing)
+    moves: int = 0
+    #: summed ``mem_mb`` of the moved containers — the state transferred
+    move_cost: float = 0.0
+    #: containers of THIS tenant preempted by higher tiers this round
+    evicted: int = 0
+    #: size of the candidate set scored for this tenant (1 without an
+    #: evaluator: the analytic point is the only trusted alternative)
+    candidates_scored: int = 1
     #: per-window-step measured rates (speed-derated), when the schedule was
     #: given a forecast window for this tenant — empty otherwise
     horizon_ktps: tuple = ()
@@ -116,10 +156,29 @@ class FleetPlan:
     allocations: list[TenantAllocation]
     cores_total: float
     cores_used: float
+    #: evictions in the order they happened: ``(victim tenant, victim QoS)``
+    #: — reverse-QoS by construction (a higher tier is never touched while a
+    #: lower tier still holds hosts)
+    eviction_log: tuple = ()
 
     @property
     def cores_free(self) -> float:
         return self.cores_total - self.cores_used
+
+    @property
+    def total_moves(self) -> int:
+        """Containers started or relocated by this plan (0 for a replan
+        with unchanged demands — the warm-placement contract)."""
+        return sum(a.moves for a in self.allocations)
+
+    @property
+    def total_move_cost(self) -> float:
+        return float(sum(a.move_cost for a in self.allocations))
+
+    @property
+    def evictions(self) -> dict:
+        """Per-tenant count of containers preempted this round."""
+        return {a.tenant: a.evicted for a in self.allocations if a.evicted}
 
     def allocation(self, tenant: str) -> TenantAllocation:
         for a in self.allocations:
@@ -133,23 +192,60 @@ class FleetPlan:
             state = "shut-out" if not a.admitted else (
                 "degraded" if a.degraded else "full"
             )
+            extra = ""
+            if a.moves or a.evicted:
+                extra = f" (moves={a.moves}, evicted={a.evicted})"
             rows.append(
                 f"{a.tenant}[{a.qos.name.lower()}]: {state} "
                 f"{a.planned_ktps:.0f}/{a.requested_ktps:.0f} ktps "
-                f"on {a.cpus:.1f} cpus"
+                f"on {a.cpus:.1f} cpus{extra}"
             )
         return "; ".join(rows)
+
+
+@dataclasses.dataclass
+class _Residency:
+    """A tenant's containers still seated from the previous plan."""
+
+    tenant: str
+    qos: QosTier
+    degraded: bool
+    dims: list                # ContainerDim per still-seated container
+    seated: list              # inventory index per container
+    prev_names: tuple         # the previous plan's host names (warm prefs)
+
+
+@dataclasses.dataclass
+class _Candidate:
+    """One (dim, rounding) alternative for a tenant, with its trial repack."""
+
+    result: AllocationResult
+    trial: Placement | None = None     # warm (or cold-fallback) trial pack
+    warm: bool = True                  # the trial honored warm preferences
+
+    @property
+    def config(self) -> Configuration:
+        return self.result.config
+
+    @property
+    def feasible(self) -> bool:
+        return self.trial is not None and self.trial.feasible
+
+    @property
+    def speed(self) -> float:
+        return self.trial.min_speed if self.feasible else 1.0
 
 
 class FleetScheduler:
     """Places N tenants onto one cluster through the evaluation engine.
 
-    ``feasibility_threshold`` is the whole-window feasibility bar: a
-    windowed tenant's deployment is ``horizon_feasible`` only when its
+    ``feasibility_threshold`` is the measured-feasibility bar used twice:
+    a windowed tenant's deployment is ``horizon_feasible`` only when its
     (derated) measured rate reaches ``threshold * window_rate`` at every
-    window step — the fleet loop passes its own ``saturation_threshold``
-    here so "feasible at plan time" and "SLA met when the load arrives"
-    are one judgment."""
+    window step, and a candidate is swapped in by the measured repack only
+    when its derated capacity reaches ``threshold * planned_rate``.  The
+    fleet loop passes its own ``saturation_threshold`` here so "feasible at
+    plan time" and "SLA met when the load arrives" are one judgment."""
 
     def __init__(
         self,
@@ -173,106 +269,111 @@ class FleetScheduler:
         self,
         demands: Sequence[tuple[TenantSpec, float]],
         windows: "Mapping[str, Sequence[float]] | None" = None,
+        previous: "FleetPlan | None" = None,
     ) -> FleetPlan:
-        """One joint scheduling round: ``demands`` pairs each tenant with
-        its current provisioning target (ktps).  Returns the fleet plan in
-        the original demand order.
+        """One joint scheduling round.
 
-        ``windows`` optionally maps tenant names to their forecast windows
-        (future loads in ktps).  Windowed tenants' deployments are scored
-        at every window rate *in the same single batched call* as the
-        capacity probe — the window rides the job axis of
-        ``evaluate_jobs`` — and the allocation reports per-step rates and
-        whole-window feasibility."""
+        Args:
+            demands: ``(spec, target_ktps)`` pairs — each tenant with its
+                current provisioning target.
+            windows: optional map of tenant name → forecast window (future
+                loads in ktps).  Windowed tenants' candidate sets are scored
+                at every window rate *in the same single batched call* as
+                the capacity probes, and the allocation reports per-step
+                rates and whole-window feasibility.
+            previous: the plan currently deployed.  When given, scheduling
+                is *warm*: every tenant's containers start seated on their
+                current hosts, a replanned tenant prefers its previous hosts
+                (an unchanged allocation moves zero containers), and a
+                guaranteed/standard tenant squeezed by lower-tier residency
+                triggers the defragment-then-preempt ladder.  ``None``
+                packs cold from an empty inventory (every container counts
+                as a move).
+
+        Returns:
+            The :class:`FleetPlan` in the original demand order, carrying
+            per-tenant ``moves`` / ``move_cost`` / ``evicted`` and the
+            ordered ``eviction_log``.
+        """
         names = [spec.name for spec, _t in demands]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names in demands: {names}")
         hosts = self.cluster.inventory()
+        specs = {spec.name: spec for spec, _t in demands}
+
+        # -- warm state: re-seat the previous plan's residency ---------------
+        residency = self._restore_residency(previous, specs, hosts)
+        evicted_count = {n: 0 for n in names}
+        eviction_log: list[tuple[str, QosTier]] = []
+
         by_tenant: dict[str, TenantAllocation] = {}
+        cand_sets: dict[str, list[_Candidate]] = {}
+        chosen: dict[str, int] = {}
+        prefer_of: dict[str, tuple] = {}
 
         for spec, target in self._priority_order(demands):
-            # the shrinking host inventory is the single source of truth:
-            # the trial-pack predicate is strictly stronger than any
-            # aggregate cpu/mem budget (fragmentation binds too)
-            ba = allocate_under_budget(
-                spec.dag,
-                spec.node_models(),
-                max(target, 1e-6),
-                ResourceBudget(),
-                preferred_dim=spec.preferred_dim,
-                overprovision=spec.overprovision,
-                fits=lambda cfg: Cluster.trial_pack(cfg.dims, hosts),
-            )
-            if not ba.fits:
-                by_tenant[spec.name] = TenantAllocation(
-                    tenant=spec.name,
-                    qos=spec.qos,
-                    requested_ktps=target,
-                    planned_ktps=0.0,
-                    config=None,
-                    placement=None,
-                    cpus=0.0,
-                    predicted_ktps=0.0,
-                    bottleneck=None,
-                    shortfall_ktps=target,
-                    degraded=True,
+            # release this tenant's own residency: it is being replanned and
+            # its capacity is its own to reuse (warm preference keeps the
+            # containers on the same hosts when the shape allows it)
+            res = residency.pop(spec.name, None)
+            prefer = res.prev_names if res is not None else ()
+            prefer_of[spec.name] = prefer
+            if res is not None:
+                for hi, dim in zip(res.seated, res.dims):
+                    if hi >= 0:
+                        hosts[hi].release(dim)
+
+            ba = self._allocate(spec, target, hosts)
+            if (ba.degraded or not ba.fits) and spec.qos > QosTier.BEST_EFFORT:
+                # the squeeze is (possibly) lower-tier residency: defragment,
+                # then preempt in reverse-QoS order, until this tenant fits
+                ba = self._make_room(
+                    spec, target, ba, hosts, residency,
+                    evicted_count, eviction_log,
                 )
+            if not ba.fits:
+                by_tenant[spec.name] = self._shut_out(spec, target)
                 continue
-            config = ba.result.config
-            placement = Cluster.pack(config.dims, hosts)   # consume inventory
+
+            cands = self._candidate_set(spec, ba)
+            pick = self._trial_candidates(cands, hosts, prefer)
+            if pick is None:
+                by_tenant[spec.name] = self._shut_out(spec, target)
+                continue
+            winner = cands[pick]
+            placement = Cluster.pack(
+                winner.config.dims, hosts,
+                prefer=prefer if winner.warm else None,
+            )
+            chosen[spec.name] = pick
+            cand_sets[spec.name] = cands
             by_tenant[spec.name] = TenantAllocation(
                 tenant=spec.name,
                 qos=spec.qos,
                 requested_ktps=target,
                 planned_ktps=ba.feasible_rate_ktps,
-                config=config,
+                config=winner.config,
                 placement=placement,
-                cpus=config.total_cpus(),
+                cpus=winner.config.total_cpus(),
                 predicted_ktps=ba.feasible_rate_ktps * placement.min_speed,
                 bottleneck=None,
                 shortfall_ktps=ba.shortfall_ktps,
                 degraded=ba.degraded,
+                moves=placement.moves,
+                move_cost=placement.move_cost,
+                candidates_scored=len(cands),
             )
 
-        # joint capacity scoring: every admitted tenant's configuration in
-        # one batched (device-sharded) evaluation.  Each tenant contributes
-        # one capacity probe (overload) plus, when it has a forecast window,
-        # one job per window rate — the whole fleet × every horizon step is
-        # still a single evaluate_jobs call.
+        # joint scoring: every admitted tenant's whole candidate set — one
+        # capacity probe per candidate plus, per forecast-window rate, one
+        # per-candidate-load group — in ONE batched (device-sharded) call.
+        # The measured scores then run the repack repair: a provisional
+        # winner that misses its planned rate is swapped for the cheapest
+        # candidate that delivers it.
         if self.evaluator is not None:
-            admitted = [a for a in by_tenant.values() if a.config is not None]
-            groups: list[list[Configuration]] = []
-            loads: list[float] = []
-            spans: list[tuple[TenantAllocation, float, int]] = []
-            for a in admitted:
-                speed = a.placement.min_speed if a.placement else 1.0
-                window = list((windows or {}).get(a.tenant, ()))
-                groups.append([a.config])
-                loads.append(OVERLOAD_KTPS)
-                for rate in window:
-                    # the reference-host simulator is driven at rate/speed;
-                    # its answer is scaled back by speed (fleet-loop rule)
-                    groups.append([a.config])
-                    loads.append(float(rate) / speed)
-                spans.append((a, speed, len(window)))
-            if groups:
-                evals = evaluate_jobs_with(self.evaluator, groups, loads)
-                i = 0
-                for a, speed, n_win in spans:
-                    (cap,) = evals[i]
-                    a.predicted_ktps = cap.achieved_ktps * speed
-                    a.bottleneck = cap.bottleneck
-                    window = loads[i + 1 : i + 1 + n_win]
-                    rates = tuple(
-                        evals[i + 1 + k][0].achieved_ktps * speed
-                        for k in range(n_win)
-                    )
-                    a.horizon_ktps = rates
-                    a.horizon_feasible = all(
-                        r >= self.feasibility_threshold * ref * speed
-                        for r, ref in zip(rates, window)
-                    )
-                    i += 1 + n_win
+            self._score_and_repair(
+                by_tenant, cand_sets, chosen, prefer_of, windows, hosts
+            )
 
         # a tenant whose window was never scored — shed entirely, or no
         # evaluator to measure with — must not claim whole-window coverage
@@ -281,9 +382,347 @@ class FleetScheduler:
                 if windows.get(a.tenant) and not a.horizon_ktps:
                     a.horizon_feasible = False
 
+        for name, n in evicted_count.items():
+            by_tenant[name].evicted = n
         allocations = [by_tenant[spec.name] for spec, _t in demands]
         return FleetPlan(
             allocations=allocations,
             cores_total=self.cluster.total_cores(),
             cores_used=float(sum(a.cpus for a in allocations)),
+            eviction_log=tuple(eviction_log),
         )
+
+    # -- warm state -----------------------------------------------------------
+    @staticmethod
+    def _restore_residency(
+        previous: "FleetPlan | None",
+        specs: Mapping[str, TenantSpec],
+        hosts: list[Host],
+    ) -> dict[str, _Residency]:
+        """Seat the previous plan's containers back onto the fresh
+        inventory (by host *name* — robust to a changed cluster; containers
+        whose host is gone are simply not restored).  Tenants absent from
+        the current demands are dropped entirely: their capacity is free."""
+        residency: dict[str, _Residency] = {}
+        if previous is None:
+            return residency
+        for a in previous.allocations:
+            if a.config is None or a.placement is None:
+                continue
+            spec = specs.get(a.tenant)
+            if spec is None:
+                continue
+            dims = list(a.config.dims)
+            seated = Cluster.seat(dims, a.placement.host_names, hosts)
+            keep = [i for i, h in enumerate(seated.host_of) if h >= 0]
+            residency[a.tenant] = _Residency(
+                tenant=a.tenant,
+                qos=spec.qos,
+                degraded=a.degraded,
+                dims=[dims[i] for i in keep],
+                seated=[seated.host_of[i] for i in keep],
+                prev_names=tuple(a.placement.host_names),
+            )
+        return residency
+
+    # -- allocation -----------------------------------------------------------
+    def _allocate(self, spec: TenantSpec, target: float, hosts: list[Host]):
+        # the shrinking host inventory is the single source of truth: the
+        # trial-pack predicate is strictly stronger than any aggregate
+        # cpu/mem budget (fragmentation binds too)
+        return allocate_under_budget(
+            spec.dag,
+            spec.node_models(),
+            max(target, 1e-6),
+            ResourceBudget(),
+            preferred_dim=spec.preferred_dim,
+            overprovision=spec.overprovision,
+            fits=lambda cfg: Cluster.trial_pack(cfg.dims, hosts),
+        )
+
+    def _shut_out(self, spec: TenantSpec, target: float) -> TenantAllocation:
+        return TenantAllocation(
+            tenant=spec.name,
+            qos=spec.qos,
+            requested_ktps=target,
+            planned_ktps=0.0,
+            config=None,
+            placement=None,
+            cpus=0.0,
+            predicted_ktps=0.0,
+            bottleneck=None,
+            shortfall_ktps=target,
+            degraded=True,
+        )
+
+    # -- preemption + defragmentation ladder ---------------------------------
+    def _make_room(
+        self,
+        spec: TenantSpec,
+        target: float,
+        ba,
+        hosts: list[Host],
+        residency: dict[str, _Residency],
+        evicted_count: dict[str, int],
+        eviction_log: list,
+    ):
+        """Reclaim capacity held by strictly-lower-tier residents until
+        ``spec``'s allocation stops being degraded (or nothing is left to
+        reclaim).  Cheapest remedy first:
+
+        1. **defragment** — compact the lower-tier residents onto fewer
+           hosts (first-fit-decreasing repack of their containers; costs
+           moves, sheds no capacity),
+        2. **preempt** — evict resident containers one at a time in
+           reverse-QoS order: best-effort before standard, previously-
+           degraded before healthy within a tier, largest container first
+           (fastest reclaim).  Each eviction is appended to the plan's
+           eviction log, so the order is auditable: a higher tier is never
+           touched while a lower tier still holds hosts.
+
+        Returns the final (possibly unchanged) budgeted allocation.
+        """
+
+        def victims() -> list[_Residency]:
+            return [
+                r for r in residency.values() if r.qos < spec.qos and r.dims
+            ]
+
+        if not victims():
+            return ba
+        if self._compact(victims(), hosts):
+            ba = self._allocate(spec, target, hosts)
+        while ba.degraded or not ba.fits:
+            queue = [
+                (int(r.qos), 0 if r.degraded else 1, -r.dims[i].cpus,
+                 r.tenant, i)
+                for r in victims()
+                for i in range(len(r.dims))
+            ]
+            if not queue:
+                break
+            queue.sort()
+            _q, _d, _c, victim_name, ci = queue[0]
+            victim = residency[victim_name]
+            hi = victim.seated[ci]
+            if hi >= 0:
+                hosts[hi].release(victim.dims[ci])
+            del victim.dims[ci]
+            del victim.seated[ci]
+            evicted_count[victim_name] += 1
+            eviction_log.append((victim_name, victim.qos))
+            ba = self._allocate(spec, target, hosts)
+        return ba
+
+    @staticmethod
+    def _compact(residents: list[_Residency], hosts: list[Host]) -> bool:
+        """Defragment: repack the given residents' containers first-fit-
+        decreasing, consolidating the free space they fragment.  Applied
+        only when a trial shows every container still fits (the previous
+        arrangement is a feasibility witness, but FFD is a heuristic — a
+        failed trial leaves everything in place).  Returns True when any
+        container actually changed host."""
+        items = [(r, i) for r in residents for i in range(len(r.dims))]
+        if not items:
+            return False
+        dims = [r.dims[i] for r, i in items]
+        trial = [h.clone() for h in hosts]
+        for r, i in items:
+            if r.seated[i] >= 0:
+                trial[r.seated[i]].release(r.dims[i])
+        pl = Cluster.pack(dims, trial)
+        if not pl.feasible:
+            return False
+        if all(pl.host_of[j] == items[j][0].seated[items[j][1]]
+               for j in range(len(items))):
+            return False
+        for r, i in items:
+            if r.seated[i] >= 0:
+                hosts[r.seated[i]].release(r.dims[i])
+        committed = Cluster.pack(dims, hosts)   # deterministic: same as pl
+        for j, (r, i) in enumerate(items):
+            r.seated[i] = committed.host_of[j]
+        return True
+
+    # -- candidate sets -------------------------------------------------------
+    def _candidate_set(self, spec: TenantSpec, ba) -> list[_Candidate]:
+        """The tenant's (dim × rounding) ladder at the budget-feasible rate.
+
+        Index 0 is always the bisected base point (``allocate_under_budget``'s
+        own result); without an evaluator there is nothing to check the
+        leaner alternatives against, so the base is the whole set."""
+        base = _Candidate(result=ba.result)
+        if self.evaluator is None:
+            return [base]
+        rate = max(ba.feasible_rate_ktps, 1e-6)
+        dims_ladder: list[ContainerDim | None] = (
+            list(spec.candidate_dims)
+            if spec.candidate_dims
+            else [spec.preferred_dim]
+        )
+        cands = [base]
+        seen = {(base.config.packing, base.config.dims)}
+        for dim in dims_ladder:
+            for rounding in spec.candidate_roundings:
+                res = allocate_point(
+                    spec.dag, spec.node_models(), rate,
+                    preferred_dim=dim,
+                    overprovision=spec.overprovision,
+                    rounding=rounding,
+                )
+                key = (res.config.packing, res.config.dims)
+                if key not in seen:
+                    seen.add(key)
+                    cands.append(_Candidate(result=res))
+        return cands
+
+    @staticmethod
+    def _trial_candidates(
+        cands: list[_Candidate], hosts: list[Host], prefer
+    ) -> int | None:
+        """Warm trial-pack every candidate; return the index of the
+        provisional winner — the cheapest feasible repack by
+        ``(move_cost, cpus)`` — or None when nothing places."""
+        best: tuple | None = None
+        for k, cand in enumerate(cands):
+            trial = [h.clone() for h in hosts]
+            pl = Cluster.pack(cand.config.dims, trial, prefer=prefer)
+            cand.warm = True
+            if not pl.feasible and prefer:
+                # a preference-first order can wedge where plain FFD fits
+                trial = [h.clone() for h in hosts]
+                pl = Cluster.pack(cand.config.dims, trial)
+                cand.warm = False
+            cand.trial = pl
+            if pl.feasible:
+                key = (pl.move_cost, cand.result.total_cpus, k)
+                if best is None or key < best[0]:
+                    best = (key, k)
+        return None if best is None else best[1]
+
+    # -- joint scoring + measured repack repair -------------------------------
+    def _score_and_repair(
+        self,
+        by_tenant: dict[str, TenantAllocation],
+        cand_sets: dict[str, list[_Candidate]],
+        chosen: dict[str, int],
+        prefer_of: dict[str, tuple],
+        windows: "Mapping[str, Sequence[float]] | None",
+        hosts: list[Host],
+    ) -> None:
+        groups: list[list[Configuration]] = []
+        loads: list = []
+        spans: list[tuple] = []
+        for name, a in by_tenant.items():      # insertion order = QoS order
+            if a.config is None:
+                continue
+            cands = cand_sets[name]
+            cfgs = [c.config for c in cands]
+            speeds = [c.speed for c in cands]
+            window = list((windows or {}).get(name, ()))
+            groups.append(cfgs)
+            loads.append(OVERLOAD_KTPS)        # capacity probes, ref units
+            for rate in window:
+                # the reference-host simulator is driven at rate/speed and
+                # its answer scaled back by speed (fleet-loop rule) — each
+                # candidate at its own trial-placement speed, one group
+                groups.append(cfgs)
+                loads.append(
+                    PerCandidateLoads(float(rate) / s for s in speeds)
+                )
+            spans.append((a, cands, speeds, window))
+        if not groups:
+            return
+        evals = evaluate_jobs_with(self.evaluator, groups, loads)
+        i = 0
+        for a, cands, speeds, window in spans:
+            caps = evals[i]
+            derated = [
+                caps[k].achieved_ktps * speeds[k] for k in range(len(cands))
+            ]
+            bar = self.feasibility_threshold * a.planned_ktps
+            final = chosen[a.tenant]
+            if derated[final] < bar:
+                final = self._repair(
+                    a, cands,
+                    [c.achieved_ktps for c in caps], derated, bar, final,
+                    hosts, prefer_of[a.tenant],
+                )
+            # derate by the speed of the placement actually committed: for
+            # the provisional winner it equals the trial speed, and for a
+            # repair swap it reflects where the live repack really landed
+            # (the drive rate used the trial speed — a small approximation
+            # the feasibility threshold absorbs)
+            spd = a.placement.min_speed if a.placement else 1.0
+            a.predicted_ktps = caps[final].achieved_ktps * spd
+            a.bottleneck = caps[final].bottleneck
+            rates = tuple(
+                evals[i + 1 + w][final].achieved_ktps * spd
+                for w in range(len(window))
+            )
+            a.horizon_ktps = rates
+            a.horizon_feasible = all(
+                r >= self.feasibility_threshold * ref
+                for r, ref in zip(rates, window)
+            )
+            i += 1 + len(window)
+
+    def _repair(
+        self,
+        a: TenantAllocation,
+        cands: list[_Candidate],
+        ref_caps: list[float],
+        derated: list[float],
+        bar: float,
+        current: int,
+        hosts: list[Host],
+        prefer,
+    ) -> int:
+        """The provisional winner's measured capacity misses the planned
+        rate: swap in the cheapest candidate that delivers it (or, when
+        nothing reaches the bar, the one that gets closest — mirroring
+        :func:`repro.core.allocator.allocate`'s fallback).  The swap
+        re-places on the live inventory, and the bar is re-checked against
+        the speed of the placement the repack *actually* lands (the trial
+        speed may be stale — lower tiers consumed the fast hosts since):
+        a candidate that no longer fits, or no longer clears the bar where
+        it really lands, is skipped and the original placement restored.
+        ``ref_caps`` are the reference-host (un-derated) capacity probes."""
+        meets = [
+            k for k in range(len(cands))
+            if k != current and cands[k].feasible and derated[k] >= bar
+        ]
+        meets.sort(
+            key=lambda k: (
+                cands[k].trial.move_cost, cands[k].result.total_cpus, k
+            )
+        )
+        strict = True
+        if not meets:
+            best = max(range(len(cands)), key=lambda k: derated[k])
+            if best == current or derated[best] <= derated[current]:
+                return current
+            meets = [best]
+            strict = False       # best-effort capacity grab: no bar to hold
+        assert a.config is not None and a.placement is not None
+        for k in meets:
+            Cluster.release(a.placement, a.config.dims, hosts)
+            trial = [h.clone() for h in hosts]
+            pl = Cluster.pack(cands[k].config.dims, trial, prefer=prefer)
+            if pl.feasible and (
+                not strict or ref_caps[k] * pl.min_speed >= bar
+            ):
+                committed = Cluster.pack(
+                    cands[k].config.dims, hosts, prefer=prefer
+                )
+                a.config = cands[k].config
+                a.placement = committed
+                a.cpus = cands[k].config.total_cpus()
+                a.moves = committed.moves
+                a.move_cost = committed.move_cost
+                return k
+            # put the original back exactly where it was
+            a.placement = Cluster.seat(
+                a.config.dims, a.placement.host_names, hosts
+            )
+        return current

@@ -150,6 +150,12 @@ class FleetElasticController:
     tenant's guards fired), else ``None`` — mirroring
     :meth:`ElasticController.observe` returning an allocation only on a
     re-mesh.  ``on_reschedule`` fires with the fleet event on every replan.
+
+    Reschedules are warm (the loop threads the deployed plan back into the
+    scheduler): an unchanged tenant keeps its hosts, and the returned
+    plan's ``total_moves`` / ``evictions`` quantify the churn a replan
+    would actually cause — the re-mesh analogue of "how many containers
+    does this decision restart?".
     """
 
     def __init__(
@@ -175,6 +181,11 @@ class FleetElasticController:
     @property
     def plan(self) -> "FleetPlan | None":
         return self.loop.plan
+
+    @property
+    def last_event(self) -> "FleetEvent | None":
+        """The most recent fleet step event (moves/evictions included)."""
+        return self.loop.events[-1] if self.loop.events else None
 
     def observe(self, loads: Mapping[str, float]) -> "FleetPlan | None":
         """Returns the new plan when the fleet was rescheduled, else None."""

@@ -30,6 +30,7 @@ from .engine import (
     ConfigEvaluator,
     EvalResult,
     ExecutorEvaluator,
+    PerCandidateLoads,
     SimulatorEvaluator,
     evaluate_grid_with,
     evaluate_jobs_with,
@@ -38,7 +39,8 @@ from . import sources
 
 __all__ = [
     "WORKLOADS", "ConfigEvaluator", "EvalResult", "ExecutorEvaluator",
-    "OVERLOAD_KTPS", "SimParams", "SimResult", "SimulatorEvaluator",
+    "OVERLOAD_KTPS", "PerCandidateLoads", "SimParams", "SimResult",
+    "SimulatorEvaluator",
     "adanalytics", "bucket_size", "clear_kernel_cache", "deep_pipeline",
     "diamond", "evaluate_grid_with", "evaluate_jobs_with",
     "kernel_cache_info", "measure_capacity", "mobile_analytics",

@@ -45,6 +45,22 @@ JobGroups = Sequence[Sequence[Configuration]]
 OVERLOAD_KTPS = 1e6
 
 
+class PerCandidateLoads(tuple):
+    """A per-*candidate* offered-load entry for one ``evaluate_jobs`` group.
+
+    A plain per-job load (scalar or per-sample trace) applies to every
+    candidate of that job's group.  Wrapping a sequence of scalars in
+    ``PerCandidateLoads`` instead gives each candidate its *own* offered
+    load — the fleet scheduler uses this to score one forecast-window rate
+    across a whole candidate set whose members sit on different-speed hosts
+    (each candidate is driven at ``rate / its_min_host_speed`` in
+    reference-host units), still inside one batched call.  The wrapper is
+    the disambiguator: a bare sequence keeps meaning a shared per-sample
+    trace."""
+
+    __slots__ = ()
+
+
 @dataclasses.dataclass(frozen=True)
 class EvalResult:
     """One configuration's evaluation: achieved rate + limiting component."""
@@ -57,23 +73,92 @@ class EvalResult:
 
 @runtime_checkable
 class ConfigEvaluator(Protocol):
-    """What a configuration-evaluation backend must provide."""
+    """What a configuration-evaluation backend must provide.
+
+    All four entry points answer the same question at different shapes:
+    *what rate does this configuration achieve under this offered load, and
+    which component limits it?*  Control layers depend only on this
+    protocol; how bulk evaluation happens (vmapped simulation, serial LP
+    scoring of a real deployment, a caching wrapper...) is the backend's
+    business.  Backends written before the multi-job/grid entry points
+    existed keep working through :func:`evaluate_jobs_with` /
+    :func:`evaluate_grid_with`.
+    """
 
     def evaluate(
         self, config: Configuration, offered_ktps: float = OVERLOAD_KTPS
-    ) -> EvalResult: ...
+    ) -> EvalResult:
+        """Score one configuration.
+
+        Args:
+            config: the physical configuration to score.
+            offered_ktps: offered source load — a scalar rate or a
+                per-sample trace.  The default :data:`OVERLOAD_KTPS` is far
+                above any realistic capacity, so the achieved rate *is* the
+                configuration's capacity (a capacity probe).
+
+        Returns:
+            An :class:`EvalResult` with the achieved rate and the limiting
+            component (a node name, :data:`~repro.core.metrics
+            .STREAM_MANAGER`, or None when unsaturated).
+        """
+        ...
 
     def evaluate_batch(
         self, configs: Sequence[Configuration], offered_ktps=OVERLOAD_KTPS
-    ) -> list[EvalResult]: ...
+    ) -> list[EvalResult]:
+        """Score N configurations in one call.
+
+        Args:
+            configs: the candidate configurations.
+            offered_ktps: a shared scalar, or one load per *config* (each a
+                scalar or per-sample trace).
+
+        Returns:
+            One :class:`EvalResult` per config, in input order.  Batching
+            backends answer this with a single kernel dispatch; serial
+            backends loop — callers must not assume either.
+        """
+        ...
 
     def evaluate_jobs(
         self, groups: JobGroups, offered_ktps=OVERLOAD_KTPS
-    ) -> list[list[EvalResult]]: ...
+    ) -> list[list[EvalResult]]:
+        """Score candidate sets for N independent jobs in one call.
+
+        Args:
+            groups: ``groups[j]`` holds job ``j``'s candidate
+                configurations — jobs may be entirely different DAGs.
+            offered_ktps: a shared scalar, or one entry per *job*: a scalar
+                or per-sample trace applied to every candidate of that
+                job's group, or a :class:`PerCandidateLoads` giving each
+                candidate its own load (the fleet scheduler's
+                candidate-set shape).
+
+        Returns:
+            Per-job lists of :class:`EvalResult`, mirroring ``groups``'
+            shape.  This is the fleet scheduler's joint-scoring primitive:
+            every tenant's candidate set and forecast window costs one
+            batched (device-sharded) evaluation.
+        """
+        ...
 
     def evaluate_grid(
         self, configs: Sequence[Configuration], rates_ktps
-    ) -> list[list[EvalResult]]: ...
+    ) -> list[list[EvalResult]]:
+        """Score the configs × rates cross-product in one call.
+
+        Args:
+            configs: C candidate configurations.
+            rates_ktps: R offered rates (scalars).
+
+        Returns:
+            ``out[i][j]`` scores config ``i`` at rate ``j``.  Predictive
+            policies use this to check a candidate ladder against a whole
+            forecast window; on batching backends the grid rides the
+            vmapped batch axis in a single dispatch.
+        """
+        ...
 
 
 def evaluate_grid_with(
@@ -91,7 +176,11 @@ def evaluate_grid_with(
 
 
 def _expand_job_loads(groups: list[list[Configuration]], offered_ktps):
-    """Per-job offered loads → one per-config flat list (scalar = shared)."""
+    """Per-job offered loads → one per-config flat list.
+
+    A scalar is shared by every config of every job; a per-job entry is a
+    scalar or per-sample trace shared by that job's candidates, or a
+    :class:`PerCandidateLoads` giving each candidate its own scalar load."""
     if is_scalar_load(offered_ktps):
         return [offered_ktps for g in groups for _ in g]
     loads = list(offered_ktps)
@@ -99,7 +188,18 @@ def _expand_job_loads(groups: list[list[Configuration]], offered_ktps):
         raise ValueError(
             f"offered_ktps has {len(loads)} entries for {len(groups)} jobs"
         )
-    return [o for g, o in zip(groups, loads) for _ in g]
+    flat = []
+    for g, o in zip(groups, loads):
+        if isinstance(o, PerCandidateLoads):
+            if len(o) != len(g):
+                raise ValueError(
+                    f"PerCandidateLoads has {len(o)} entries for a "
+                    f"{len(g)}-candidate group"
+                )
+            flat.extend(float(x) for x in o)
+        else:
+            flat.extend(o for _ in g)
+    return flat
 
 
 def _regroup(flat: list, groups: list[list]) -> list[list]:

@@ -1,6 +1,7 @@
 """Fleet layer: cluster model, budget-constrained allocation, QoS-ordered
-scheduling/shedding, the fleet control loop, device-sharded evaluation, and
-pad_structure masking invariance."""
+scheduling/shedding, warm placement / preemption / defragmentation, the
+fleet control loop, device-sharded evaluation, and pad_structure masking
+invariance."""
 import json
 import os
 import subprocess
@@ -17,19 +18,25 @@ from repro.core import (
     ResourceBudget,
     allocate,
     allocate_under_budget,
+    minimal_footprint,
     oracle_models,
     round_robin_configuration,
 )
 from repro.fleet import (
     Cluster,
     FleetLoop,
+    FleetPlan,
     FleetScheduler,
     MachineClass,
+    Placement,
     QosTier,
+    TenantAllocation,
     TenantSpec,
 )
 from repro.streams import (
+    EvalResult,
     ExecutorEvaluator,
+    PerCandidateLoads,
     SimParams,
     SimulatorEvaluator,
     diamond,
@@ -410,6 +417,306 @@ def test_fleet_elastic_controller_shim():
     assert plan is not None and plan.allocation("gold").admitted
     assert ctl.observe({"gold": 405.0}) is None    # deadband hold
     assert len(seen) == 1 and len(ctl.events) == 2
+
+
+# ---------------------------------------------------------------------------
+# Warm placement, preemption & defragmentation
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_plan(cluster, *rows):
+    """A hand-placed previous FleetPlan: rows are (spec, config, host_names)."""
+    allocs = []
+    for spec, config, names in rows:
+        allocs.append(TenantAllocation(
+            tenant=spec.name, qos=spec.qos, requested_ktps=spec.target_ktps,
+            planned_ktps=spec.target_ktps, config=config,
+            placement=Placement(
+                host_of=tuple(range(len(names))), host_names=tuple(names),
+                min_speed=1.0,
+            ),
+            cpus=float(sum(d.cpus for d in config.dims)),
+            predicted_ktps=spec.target_ktps, bottleneck=None,
+            shortfall_ktps=0.0, degraded=False,
+        ))
+    return FleetPlan(
+        allocations=allocs, cores_total=cluster.total_cores(), cores_used=0.0
+    )
+
+
+def test_noop_replan_moves_zero_containers():
+    """The warm-placement contract: rescheduling unchanged demands keeps
+    every container on its host and reports zero moves."""
+    gold = _tenant("gold", wordcount(), QosTier.GUARANTEED, 480.0)
+    be = _tenant("be", wordcount(), QosTier.BEST_EFFORT, 480.0)
+    cluster = Cluster([MachineClass("std", count=4, cores=4.0, mem_mb=16384.0)])
+    sched = FleetScheduler(cluster)
+    demands = [(gold, 480.0), (be, 480.0)]
+    p1 = sched.schedule(demands)
+    assert p1.total_moves == sum(
+        len(a.config.dims) for a in p1.allocations
+    )                                              # cold: every start is a move
+    p2 = sched.schedule(demands, previous=p1)
+    assert p2.total_moves == 0
+    assert all(a.moves == 0 and a.move_cost == 0.0 for a in p2.allocations)
+    for a1, a2 in zip(p1.allocations, p2.allocations):
+        assert a1.placement.host_names == a2.placement.host_names
+
+
+def test_warm_replan_leaves_unchanged_tenants_alone():
+    """When one tenant scales up on a roomy cluster, the others' containers
+    stay exactly where they were (zero moves), and the grower only adds."""
+    gold = _tenant("gold", wordcount(), QosTier.GUARANTEED, 480.0)
+    be = _tenant("be", wordcount(), QosTier.BEST_EFFORT, 480.0)
+    cluster = Cluster([MachineClass("std", count=6, cores=4.0, mem_mb=16384.0)])
+    sched = FleetScheduler(cluster)
+    p1 = sched.schedule([(gold, 480.0), (be, 480.0)])
+    p2 = sched.schedule([(gold, 1400.0), (be, 480.0)], previous=p1)
+    b1, b2 = p1.allocation("be"), p2.allocation("be")
+    assert b2.moves == 0
+    assert b2.placement.host_names == b1.placement.host_names
+    g1, g2 = p1.allocation("gold"), p2.allocation("gold")
+    assert len(g2.config.dims) > len(g1.config.dims)
+    # the grower kept its original containers and only started new ones
+    assert g2.moves == len(g2.config.dims) - len(g1.config.dims)
+    assert g2.placement.host_names[: len(g1.config.dims)] == g1.placement.host_names
+
+
+def test_warm_replan_shrinking_allocation_keeps_hosts():
+    gold = _tenant("gold", wordcount(), QosTier.GUARANTEED, 480.0)
+    cluster = Cluster([MachineClass("std", count=6, cores=4.0, mem_mb=16384.0)])
+    sched = FleetScheduler(cluster)
+    p1 = sched.schedule([(gold, 1400.0)])
+    p2 = sched.schedule([(gold, 480.0)], previous=p1)
+    g1, g2 = p1.allocation("gold"), p2.allocation("gold")
+    assert len(g2.config.dims) < len(g1.config.dims)
+    assert g2.moves == 0                            # survivors stay put
+    assert set(g2.placement.host_names) <= set(g1.placement.host_names)
+
+
+def test_preemption_admits_guaranteed_after_best_effort_eviction():
+    """The fragmentation demo: best-effort residents hold one 3-cpu
+    container on EVERY host, so the guaranteed tenant's footprint fails
+    trial_pack on the fragmented inventory; eviction (best-effort first)
+    admits it."""
+    gold = _tenant("gold", wordcount(), QosTier.GUARANTEED, 400.0)
+    be = _tenant("be", wordcount(), QosTier.BEST_EFFORT, 400.0)
+    cluster = Cluster([MachineClass("std", count=4, cores=4.0, mem_mb=16384.0)])
+    sched = FleetScheduler(cluster)
+    be_cfg = round_robin_configuration(be.dag, {"W": 1, "C": 1}, 4, DIM)
+    prev = _synthetic_plan(
+        cluster, (be, be_cfg, ("std/0", "std/1", "std/2", "std/3"))
+    )
+    # every host has only 1 core free: gold's minimum footprint fails the
+    # trial pack on the fragmented inventory
+    hosts = cluster.inventory()
+    seated = Cluster.seat(
+        be_cfg.dims, prev.allocations[0].placement.host_names, hosts
+    )
+    assert seated.feasible
+    assert not Cluster.trial_pack(
+        minimal_footprint(gold.dag, gold.node_models(), DIM).dims, hosts
+    )
+
+    plan = sched.schedule([(gold, 400.0), (be, 400.0)], previous=prev)
+    g, b = plan.allocation("gold"), plan.allocation("be")
+    assert g.admitted and not g.degraded
+    assert b.evicted >= 1
+    assert plan.evictions == {"be": b.evicted}
+    assert all(q == QosTier.BEST_EFFORT for _t, q in plan.eviction_log)
+    # cold-scheduling the same demands would also admit gold — preemption
+    # recovers exactly what fragmentation had taken away
+    cold = sched.schedule([(gold, 400.0), (be, 400.0)])
+    assert cold.allocation("gold").admitted
+
+
+def test_defragmentation_compacts_instead_of_evicting():
+    """When compaction alone reclaims a contiguous footprint, the squeezed
+    guaranteed tenant is admitted with ZERO evictions."""
+    gold = _tenant("gold", wordcount(), QosTier.GUARANTEED, 400.0)
+    be = _tenant("be", wordcount(), QosTier.BEST_EFFORT, 100.0)
+    cluster = Cluster([MachineClass("std", count=2, cores=4.0, mem_mb=16384.0)])
+    sched = FleetScheduler(cluster)
+    # BE holds 2.5 cpu on std/0 and 1.5 cpu on std/1: free space is
+    # (1.5, 2.5) — fragmented below gold's ~2-cpu containers, but FFD
+    # compaction packs both residents onto std/0 and frees std/1 entirely
+    be_cfg = round_robin_configuration(be.dag, {"W": 1, "C": 1}, 2, DIM)
+    import dataclasses as _dc
+    be_cfg = _dc.replace(
+        be_cfg,
+        dims=(ContainerDim(cpus=2.5, mem_mb=2048.0),
+              ContainerDim(cpus=1.5, mem_mb=2048.0)),
+    )
+    prev = _synthetic_plan(cluster, (be, be_cfg, ("std/0", "std/1")))
+    plan = sched.schedule([(gold, 400.0), (be, 100.0)], previous=prev)
+    g, b = plan.allocation("gold"), plan.allocation("be")
+    assert g.admitted and not g.degraded
+    assert plan.eviction_log == () and b.evicted == 0
+    assert b.admitted
+
+
+def test_eviction_order_is_reverse_qos():
+    """A guaranteed tenant's preemption drains best-effort completely
+    before touching standard residency."""
+    gold = _tenant("gold", wordcount(), QosTier.GUARANTEED, 1400.0)
+    silver = _tenant("silver", wordcount(), QosTier.STANDARD, 400.0)
+    be = _tenant("be", wordcount(), QosTier.BEST_EFFORT, 400.0)
+    cluster = Cluster([MachineClass("std", count=4, cores=4.0, mem_mb=16384.0)])
+    sched = FleetScheduler(cluster)
+    cfg = round_robin_configuration(wordcount(), {"W": 1, "C": 1}, 2, DIM)
+    prev = _synthetic_plan(
+        cluster,
+        (silver, cfg, ("std/0", "std/1")),
+        (be, cfg, ("std/2", "std/3")),
+    )
+    plan = sched.schedule(
+        [(gold, 1400.0), (silver, 400.0), (be, 400.0)], previous=prev
+    )
+    log = plan.eviction_log
+    assert plan.allocation("gold").admitted
+    assert any(q == QosTier.BEST_EFFORT for _t, q in log)
+    first_std = next(
+        (i for i, (_t, q) in enumerate(log) if q == QosTier.STANDARD),
+        len(log),
+    )
+    # every best-effort container was gone before any standard eviction
+    n_be_before = sum(
+        1 for _t, q in log[:first_std] if q == QosTier.BEST_EFFORT
+    )
+    if first_std < len(log):
+        assert n_be_before == len(cfg.dims)
+    assert all(q != QosTier.GUARANTEED for _t, q in log)
+
+
+def test_eviction_property_never_touches_higher_tier_first():
+    """Property form: whatever the cluster size and demand mix, the
+    eviction log never touches a higher tier while a lower tier still
+    holds hosts (and guaranteed tenants are never evicted)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n_hosts=st.integers(2, 6),
+        be_t=st.sampled_from([200.0, 500.0, 900.0]),
+        silver_t=st.sampled_from([200.0, 500.0]),
+        gold_t=st.sampled_from([600.0, 1400.0, 2400.0]),
+    )
+    def check(n_hosts, be_t, silver_t, gold_t):
+        cluster = Cluster(
+            [MachineClass("std", count=n_hosts, cores=4.0, mem_mb=16384.0)]
+        )
+        sched = FleetScheduler(cluster)
+        silver = _tenant("silver", wordcount(), QosTier.STANDARD, silver_t)
+        be = _tenant("be", wordcount(), QosTier.BEST_EFFORT, be_t)
+        gold = _tenant("gold", wordcount(), QosTier.GUARANTEED, gold_t)
+        p0 = sched.schedule([(silver, silver_t), (be, be_t)])
+        p1 = sched.schedule(
+            [(gold, gold_t), (silver, silver_t), (be, be_t)], previous=p0
+        )
+        log = p1.eviction_log
+        assert all(q != QosTier.GUARANTEED for _t, q in log)
+        be_resident = (
+            len(p0.allocation("be").config.dims)
+            if p0.allocation("be").admitted else 0
+        )
+        for i, (_t, q) in enumerate(log):
+            if q == QosTier.STANDARD:
+                evicted_be = sum(
+                    1 for _t2, q2 in log[:i] if q2 == QosTier.BEST_EFFORT
+                )
+                assert evicted_be == be_resident
+
+    check()
+
+
+def test_fleet_loop_warm_steps_report_moves_and_evictions():
+    gold = _tenant("gold", wordcount(), QosTier.GUARANTEED, 800.0)
+    be = _tenant("be", wordcount(), QosTier.BEST_EFFORT, 800.0)
+    cluster = Cluster([MachineClass("std", count=3, cores=4.0, mem_mb=16384.0)])
+    loop = FleetLoop(
+        [gold, be], cluster, SimulatorEvaluator(params=PARAMS, duration_s=2.0)
+    )
+    ev1 = loop.step({"gold": 300.0, "be": 500.0})
+    assert ev1.moves > 0                         # bootstrap: all starts
+    ev2 = loop.step({"gold": 310.0, "be": 505.0})
+    assert not ev2.replanned and ev2.moves == 0  # held step, nothing moved
+    ev3 = loop.step({"gold": 1400.0, "be": 500.0})
+    assert ev3.replanned
+    assert ev3.tenant("gold").sla_met
+    # the event log carries the churn audit trail
+    assert ev3.moves == sum(t.moves for t in ev3.tenants)
+
+
+class _RiggedEvaluator:
+    """Deterministic stand-in: configs at/above a cpu floor score rich,
+    leaner ones score poor — forcing the measured repack to reject the
+    cheapest candidate."""
+
+    def __init__(self, cpu_floor, rich=2000.0, poor=10.0):
+        self.cpu_floor = cpu_floor
+        self.rich = rich
+        self.poor = poor
+        self.jobs_calls = 0
+        self.group_shapes = []
+
+    def _score(self, c):
+        ok = c.total_cpus() >= self.cpu_floor - 1e-9
+        return EvalResult(
+            config=c,
+            achieved_ktps=self.rich if ok else self.poor,
+            bottleneck=None,
+        )
+
+    def evaluate(self, config, offered_ktps=1e6):
+        return self._score(config)
+
+    def evaluate_batch(self, configs, offered_ktps=1e6):
+        return [self._score(c) for c in configs]
+
+    def evaluate_jobs(self, groups, offered_ktps=1e6):
+        self.jobs_calls += 1
+        self.group_shapes.append([len(g) for g in groups])
+        return [[self._score(c) for c in g] for g in groups]
+
+
+def test_candidate_sets_scored_in_one_call_and_repaired():
+    """The scheduler scores the whole dim-ladder candidate set in ONE
+    evaluate_jobs call, and swaps a provisionally-cheapest candidate whose
+    measured capacity misses the planned rate for one that delivers it."""
+    # candidates at 300 ktps: the preferred dim's 1x1.98-cpu point (the
+    # provisionally cheapest repack) and a 2x1.5-cpu alternative; the rig
+    # makes only the bigger one deliver the planned rate
+    ev = _RiggedEvaluator(cpu_floor=2.5)
+    spec = TenantSpec(
+        name="wc", dag=wordcount(), target_ktps=300.0,
+        qos=QosTier.GUARANTEED, models=_models(wordcount()),
+        preferred_dim=DIM,
+        candidate_dims=[DIM, ContainerDim(cpus=1.5, mem_mb=1024.0)],
+    )
+    cluster = Cluster([MachineClass("std", count=4, cores=4.0, mem_mb=16384.0)])
+    plan = FleetScheduler(cluster, ev).schedule([(spec, 300.0)])
+    a = plan.allocation("wc")
+    assert ev.jobs_calls == 1
+    assert a.candidates_scored >= 2
+    assert max(ev.group_shapes[0]) == a.candidates_scored
+    assert a.cpus == pytest.approx(3.0, abs=0.05)
+    assert a.predicted_ktps == pytest.approx(2000.0)
+
+
+def test_per_candidate_loads_in_evaluate_jobs():
+    """PerCandidateLoads gives every candidate of one group its own offered
+    load inside a single evaluate_jobs call."""
+    w = wordcount()
+    cw = round_robin_configuration(w, {"W": 2, "C": 2}, 2, DIM)
+    ev = SimulatorEvaluator(params=PARAMS, duration_s=2.0)
+    out = ev.evaluate_jobs(
+        [[cw, cw]], [PerCandidateLoads((300.0, 150.0))]
+    )
+    assert out[0][0].achieved_ktps == pytest.approx(300.0, rel=0.1)
+    assert out[0][1].achieved_ktps == pytest.approx(150.0, rel=0.1)
+    with pytest.raises(ValueError, match="PerCandidateLoads"):
+        ev.evaluate_jobs([[cw, cw]], [PerCandidateLoads((300.0,))])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,124 @@
+"""Docs verifier: run every fenced Python block, resolve every intra-repo
+link.
+
+Two guarantees the CI docs job enforces:
+
+* every ```` ```python ```` fenced block in README.md and docs/*.md is
+  executable as-is (each block runs in its own subprocess with
+  ``PYTHONPATH=src``, from the repo root) — documentation code that rots
+  fails the build;
+* every relative markdown link ``[text](path)`` in README.md, docs/*.md
+  and ROADMAP.md points at a file or directory that exists (``http(s)``
+  and ``mailto`` links are not checked; ``#anchors`` are stripped).
+
+Usage:  python tools/check_docs.py  [--no-run]  [files...]
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# [text](target) — skips images' inner brackets well enough for our docs
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def default_files() -> list[str]:
+    files = [os.path.join(REPO, "README.md"), os.path.join(REPO, "ROADMAP.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(
+            os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md")
+        )
+    return [f for f in files if os.path.isfile(f)]
+
+
+def extract_python_blocks(path: str) -> list[tuple[int, str]]:
+    """(start_line, source) for every ```python fenced block in the file."""
+    blocks: list[tuple[int, str]] = []
+    lang = None
+    buf: list[str] = []
+    start = 0
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            m = FENCE_RE.match(line.strip())
+            if m and lang is None:
+                lang = m.group(1).lower()
+                buf, start = [], lineno + 1
+            elif line.strip() == "```" and lang is not None:
+                if lang == "python":
+                    blocks.append((start, "".join(buf)))
+                lang = None
+            elif lang is not None:
+                buf.append(line)
+    return blocks
+
+
+def run_block(path: str, lineno: int, source: str) -> bool:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(REPO, "src")
+        + (os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, "-c", source],
+        capture_output=True, text=True, timeout=600, env=env, cwd=REPO,
+    )
+    rel = os.path.relpath(path, REPO)
+    if out.returncode != 0:
+        print(f"FAIL {rel}:{lineno} python block exited {out.returncode}")
+        sys.stdout.write(out.stdout)
+        sys.stderr.write(out.stderr)
+        return False
+    print(f"ok   {rel}:{lineno} python block ran clean")
+    return True
+
+
+def check_links(path: str) -> list[str]:
+    errors = []
+    rel = os.path.relpath(path, REPO)
+    base = os.path.dirname(path)
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                cleaned = target.split("#", 1)[0]
+                if not cleaned:
+                    continue
+                resolved = os.path.normpath(os.path.join(base, cleaned))
+                if not os.path.exists(resolved):
+                    errors.append(f"{rel}:{lineno} broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    run_code = "--no-run" not in sys.argv
+    files = [os.path.abspath(a) for a in args] or default_files()
+
+    failures = 0
+    for path in files:
+        for err in check_links(path):
+            print(f"FAIL {err}")
+            failures += 1
+    if run_code:
+        for path in files:
+            for lineno, source in extract_python_blocks(path):
+                if not run_block(path, lineno, source):
+                    failures += 1
+    n_blocks = sum(len(extract_python_blocks(p)) for p in files) if run_code else 0
+    print(
+        f"# checked {len(files)} files, {n_blocks} python blocks, "
+        f"{failures} failures"
+    )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
