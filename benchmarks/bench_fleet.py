@@ -28,7 +28,7 @@ import os
 import subprocess
 import sys
 
-from .common import emit, timed
+from .common import EXTRAS, emit, timed
 
 N_CANDIDATES = 128
 DURATION_S = 2.0
@@ -142,6 +142,20 @@ def run() -> dict:
         f"cores_used={plan.cores_used:.0f}of{plan.cores_total:.0f};"
         f"degraded={sum(a.degraded for a in plan.allocations)}",
     )
+    # the per-phase wall-time breakdown of the last round, as emitted rows
+    # AND as a structured extras payload in the BENCH JSON artifact (the
+    # perf trajectory can then attribute a regression to a phase)
+    total_s = max(plan.timings.get("total", 0.0), 1e-12)
+    for phase in ("restore", "allocate", "pack", "score", "repair"):
+        secs = plan.timings.get(phase, 0.0)
+        emit(
+            f"fleet_schedule_phase_{phase}",
+            secs * 1e6,
+            f"share={secs / total_s * 100:.0f}pct",
+        )
+    EXTRAS["fleet_schedule_3tenants_timings"] = {
+        k: round(v * 1e6, 1) for k, v in plan.timings.items()
+    }
 
     # -- moves-per-replan: warm vs cold on the 3-tenant scenario ----------
     # the same demand trace (the guaranteed tenant breathing up and down)

@@ -1,0 +1,173 @@
+"""Fleet scheduling at production scale: the tenant-count scaling curve.
+
+One question, three scales: what does a warm replanning round cost at
+10 / 100 / 1,000 tenants (override with ``BENCH_FLEET_TENANTS=10,100``)?
+Each scale is measured three ways:
+
+* **incremental, ~5% churn** — the production shape: a twentieth of the
+  fleet changed its demand since the last round, everyone else keeps
+  their allocation verbatim through the touched-set fast path;
+* **full replan, same churn** — the same round with ``incremental=False``
+  (every tenant re-allocated and re-packed).  The ratio is the headline:
+  at 1,000 tenants incremental must be **at least 5× faster**;
+* **fixed touched set** — exactly ``FIXED_TOUCHED`` tenants churn
+  regardless of fleet size.  Latency growth across the curve must stay
+  *sub-linear* in tenant count (the per-round cost of an untouched tenant
+  is a residency re-seat, not a repack).
+
+Moves-per-replan rides along: churned tenants alternate between a demand
+that fits their current footprint and one that needs an extra container,
+so the curve also records how many containers an incremental round
+actually relocates (warm placement keeps it near the churn count, nowhere
+near fleet size).
+
+Packing-only rounds (``evaluator=None``): this bench isolates the
+scheduler's own latency — allocation, bin-packing, and bookkeeping — from
+simulator scoring, which bench_fleet measures separately.
+"""
+from __future__ import annotations
+
+import math
+import os
+
+from .common import EXTRAS, emit, timed
+
+CHURN = 0.05
+FIXED_TOUCHED = 5
+_DEFAULT_COUNTS = "10,100,1000"
+
+
+def _fleet(n: int):
+    from repro.control import GuardBands
+    from repro.core import ContainerDim, oracle_models
+    from repro.fleet import Cluster, MachineClass, QosTier, TenantSpec
+    from repro.streams import SimParams, wordcount
+
+    params = SimParams()
+    dag = wordcount()
+    dim = ContainerDim(cpus=3.0, mem_mb=4096.0)
+    models = oracle_models(dag, params.sm_cost_per_ktuple)
+    tenants = [
+        TenantSpec(
+            name=f"t{i:04d}", dag=dag, target_ktps=40.0,
+            qos=QosTier.STANDARD, models=models,
+            guards=GuardBands(), preferred_dim=dim,
+        )
+        for i in range(n)
+    ]
+    # ~4 cpus per tenant at the 40 ktps base target, 1.3x headroom so the
+    # packing is tight enough to be honest but never sheds anyone
+    hosts = max(4, math.ceil(n * 4.5 * 1.3 / 16))
+    cluster = Cluster(
+        [MachineClass("std", count=hosts, cores=16.0, mem_mb=65536.0)]
+    )
+    return tenants, cluster
+
+
+def _demands(tenants, bumped: set, bump: float):
+    return [
+        (t, bump if t.name in bumped else 40.0) for t in tenants
+    ]
+
+
+def run() -> dict:
+    from repro.fleet import FleetScheduler
+
+    counts = sorted(
+        int(x)
+        for x in os.environ.get(
+            "BENCH_FLEET_TENANTS", _DEFAULT_COUNTS
+        ).split(",")
+        if x.strip()
+    )
+    curve: dict[int, dict] = {}
+    for n in counts:
+        tenants, cluster = _fleet(n)
+        base = _demands(tenants, set(), 0.0)
+        churned = {t.name for t in tenants[: max(1, int(n * CHURN))]}
+        d_churn = _demands(tenants, churned, 55.0)
+
+        inc = FleetScheduler(cluster)
+        prev = inc.schedule(base)
+        prev = inc.schedule(base, previous=prev)     # settle to steady state
+
+        _, us_inc = timed(
+            inc.schedule, d_churn, previous=prev, repeats=3, warmup=1
+        )
+        full = FleetScheduler(cluster, incremental=False)
+        _, us_full = timed(
+            full.schedule, d_churn, previous=prev,
+            repeats=1 if n >= 1000 else 3, warmup=1,
+        )
+        speedup = us_full / max(us_inc, 1e-9)
+
+        # fixed touched set: the same FIXED_TOUCHED tenants flip between
+        # two targets every round regardless of fleet size
+        fixed = {t.name for t in tenants[:FIXED_TOUCHED]}
+        p = inc.schedule(_demands(tenants, fixed, 70.0), previous=prev)
+        p = inc.schedule(_demands(tenants, fixed, 65.0), previous=p)
+        _, us_fixed = timed(
+            inc.schedule, _demands(tenants, fixed, 70.0), previous=p,
+            repeats=3, warmup=1,
+        )
+
+        # moves-per-replan: churned tenants alternate between a demand
+        # their footprint absorbs and one needing an extra container
+        moves = 0
+        steps = 6
+        q = prev
+        for s in range(steps):
+            # 400 ktps needs a second container (a real move); 55 shrinks
+            # back into the warm footprint
+            q = inc.schedule(
+                _demands(tenants, churned, 400.0 if s % 2 == 0 else 55.0),
+                previous=q,
+            )
+            moves += q.total_moves
+        per_replan = moves / steps
+
+        emit(
+            f"fleet_scale_{n}t_incremental",
+            us_inc,
+            f"churn={len(churned)};speedup={speedup:.1f}x_vs_full;"
+            f"moves_per_replan={per_replan:.1f}",
+        )
+        emit(f"fleet_scale_{n}t_full", us_full, f"churn={len(churned)}")
+        emit(
+            f"fleet_scale_{n}t_fixed_touched",
+            us_fixed,
+            f"touched={FIXED_TOUCHED}",
+        )
+        curve[n] = {
+            "us_incremental": round(us_inc, 1),
+            "us_full": round(us_full, 1),
+            "us_fixed_touched": round(us_fixed, 1),
+            "speedup": round(speedup, 2),
+            "churned": len(churned),
+            "moves_per_replan": round(per_replan, 2),
+        }
+
+    EXTRAS["fleet_scale_curve"] = {str(k): v for k, v in curve.items()}
+
+    top = counts[-1]
+    floor = 5.0 if top >= 1000 else 1.2
+    assert curve[top]["speedup"] >= floor, (
+        f"incremental replanning at {top} tenants must be >={floor}x faster "
+        f"than a full replan (got {curve[top]['speedup']:.2f}x)"
+    )
+    if len(counts) >= 2 and counts[-1] > counts[0]:
+        lo, hi = counts[0], counts[-1]
+        growth = (
+            curve[hi]["us_fixed_touched"]
+            / max(curve[lo]["us_fixed_touched"], 1e-9)
+        )
+        ratio = hi / lo
+        assert growth < ratio, (
+            f"fixed-touched-set latency must grow sub-linearly in tenant "
+            f"count: {lo}->{hi} tenants grew {growth:.1f}x (>= {ratio:.0f}x)"
+        )
+    return {"curve": curve}
+
+
+if __name__ == "__main__":
+    run()

@@ -10,6 +10,11 @@ import time
 #: Every emit() row of the current process, in order.
 RESULTS: list[dict] = []
 
+#: Free-form structured payloads keyed by bench name — e.g. the fleet
+#: scheduler's per-phase wall-time breakdown — shipped alongside the rows
+#: in the BENCH JSON artifact.
+EXTRAS: dict = {}
+
 
 def timed(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
     for _ in range(warmup):
@@ -50,6 +55,7 @@ def dump_json(path: str | None = None) -> str | None:
         "generated_unix": int(time.time()),
         "results": RESULTS,
         "kernel_cache": _kernel_cache_snapshot(),
+        "extras": EXTRAS,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)

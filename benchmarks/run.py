@@ -21,6 +21,7 @@ BENCHES = [
     ("reactive", "bench_reactive", "Paper §2.3/§6 — Dhalion baseline vs one-shot"),
     ("forecast", "bench_forecast", "Predictive layer — forecast accuracy + horizon sweeps"),
     ("fleet", "bench_fleet", "Fleet layer — sharded sweeps + joint scheduling"),
+    ("fleet_scale", "bench_fleet_scale", "Fleet layer — tenant-count scaling curve (incremental vs full)"),
     ("speed", "bench_speed", "Paper §4/§5 — predict/allocate latency + LP bench"),
     ("kernels", "bench_kernels", "Pallas kernels vs jnp oracles"),
 ]

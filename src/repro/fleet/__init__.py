@@ -13,6 +13,16 @@ containers stay on their current hosts when the allocation allows it and
 repacks are scored by container-move cost — and a squeezed higher tier
 defragments and then preempts lower-tier residency in reverse-QoS order
 (evictions recorded per tenant in the plan's eviction log).
+
+It is also *incremental*: only the touched set (tenants whose demand,
+window, or feasibility changed, plus tenants displaced by preemption or
+defragmentation) is replanned — everyone else keeps their allocation
+verbatim at zero packing/scoring cost, so a 1,000-tenant fleet with a few
+percent churn schedules in time proportional to the churn.  Candidate
+ladders are pruned to a cost band before joint scoring, ``move_budget``
+caps voluntary container moves per replan (excess repacks are deferred to
+later rounds), and ``eviction_grace`` gives preemption victims one drain
+round before their capacity is reclaimed.
 """
 
 from .cluster import Cluster, Host, MachineClass, Placement

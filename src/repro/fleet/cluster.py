@@ -72,7 +72,12 @@ class Host:
         self.mem_free = min(self.mem_mb, self.mem_free + dim.mem_mb)
 
     def clone(self) -> "Host":
-        return dataclasses.replace(self)
+        # hot path: trial packs clone the whole inventory per candidate —
+        # bypass dataclasses.replace/__init__ (hundreds of hosts × many
+        # candidates per scheduling round)
+        h = Host.__new__(Host)
+        h.__dict__.update(self.__dict__)
+        return h
 
 
 @dataclasses.dataclass
@@ -216,7 +221,24 @@ class Cluster:
             into :func:`repro.core.allocator.allocate_under_budget`, so
             *fragmentation* binds admission, not just aggregate capacity.
         """
-        return Cluster.pack(dims, [h.clone() for h in hosts]).feasible
+        # same FFD walk as pack() (no prefer, largest-cpu-first, first fit)
+        # on bare free-capacity lists: the allocator probes this predicate
+        # once per candidate rung, and cloning hundreds of Host objects per
+        # probe dominated large-fleet scheduling rounds
+        cores = [h.cores_free for h in hosts]
+        mems = [h.mem_free for h in hosts]
+        n = len(hosts)
+        for dim in sorted(dims, key=lambda d: -d.cpus):
+            need_c = dim.cpus - _EPS
+            need_m = dim.mem_mb - _EPS
+            for i in range(n):
+                if cores[i] >= need_c and mems[i] >= need_m:
+                    cores[i] -= dim.cpus
+                    mems[i] -= dim.mem_mb
+                    break
+            else:
+                return False
+        return True
 
     @staticmethod
     def release(

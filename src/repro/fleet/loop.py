@@ -73,6 +73,12 @@ class TenantStep:
     moves: int = 0
     #: containers of this tenant preempted by higher tiers this step
     evicted: int = 0
+    #: containers of this tenant marked draining this step (eviction grace:
+    #: still serving, reclaimed at the next replan)
+    draining: int = 0
+    #: this tenant's repack was deferred by the scheduler's move budget —
+    #: it keeps its previous deployment and is retried next replan
+    deferred: bool = False
 
 
 @dataclasses.dataclass
@@ -130,6 +136,9 @@ class FleetLoop:
         cluster: Cluster,
         evaluator: "ConfigEvaluator | None" = None,
         saturation_threshold: float = 0.95,
+        incremental: bool = True,
+        move_budget: int | None = None,
+        eviction_grace: bool = False,
     ) -> None:
         names = [t.name for t in tenants]
         if len(set(names)) != len(names):
@@ -138,7 +147,9 @@ class FleetLoop:
         self.cluster = cluster
         self.evaluator = evaluator
         self.scheduler = FleetScheduler(
-            cluster, evaluator, feasibility_threshold=saturation_threshold
+            cluster, evaluator, feasibility_threshold=saturation_threshold,
+            incremental=incremental, move_budget=move_budget,
+            eviction_grace=eviction_grace,
         )
         self.saturation_threshold = saturation_threshold
         self.plan: FleetPlan | None = None
@@ -199,6 +210,18 @@ class FleetLoop:
             cause_of[spec.name] = cause
             replan = replan or act
 
+        # unfinished business forces a replan even when every guard holds:
+        # a move-budget deferral must be retried (the budget resets each
+        # round) and a draining container must be reclaimed (its grace
+        # round is over)
+        carried = ""
+        if not replan and self.plan is not None and (
+            self.plan.deferred
+            or any(a.draining for a in self.plan.allocations)
+        ):
+            replan = True
+            carried = "deferred"
+
         # plan: one joint scheduling round covers every tenant; forecast
         # windows ride the scheduler's single batched scoring call.  The
         # current plan is handed back in as the warm state: unchanged
@@ -215,7 +238,7 @@ class FleetLoop:
                 self._breached[spec.name] = False
         assert self.plan is not None
         causes = {c for c in cause_of.values() if c}
-        fleet_cause = ""
+        fleet_cause = carried
         if replan:
             for dominant in ("bootstrap", "measured-sla", "guard", "forecast"):
                 if dominant in causes:
@@ -304,6 +327,8 @@ class FleetLoop:
                     cause=cause_of.get(spec.name, ""),
                     moves=alloc.moves if replan else 0,
                     evicted=alloc.evicted if replan else 0,
+                    draining=len(alloc.draining),
+                    deferred=alloc.deferred,
                 )
             )
 

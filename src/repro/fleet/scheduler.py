@@ -36,12 +36,29 @@ is that arbiter:
   measured capacity misses the planned rate is swapped for the cheapest
   candidate that delivers it,
 * predicted capacity is derated by the slowest host speed in the winning
-  placement.
+  placement,
+* replans are **incremental**: given a previous plan the scheduler computes
+  a *touched set* — tenants whose demand, forecast window, or feasibility
+  changed, plus tenants displaced by preemption/defrag — and every untouched
+  tenant keeps its previous :class:`TenantAllocation` verbatim (zero packing
+  work, zero evaluator slots), so scheduling latency scales with churn, not
+  fleet size,
+* candidate sets are **pruned** before the joint call: only trial-feasible
+  candidates within ``prune_band``× the provisional winner's cpu footprint
+  consume evaluator slots — the single batched call scores
+  O(touched × pruned), not O(all × full ladder),
+* actuation is bounded: ``move_budget`` caps voluntary container moves per
+  replan (an over-budget repack is deferred — the tenant keeps its previous
+  deployment and the deferral is carried in the plan, so a large repack
+  amortizes over successive rounds), and ``eviction_grace`` gives preemption
+  victims a drain round: they are marked draining, keep serving through the
+  round, and are reclaimed at the next replan.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import time
 from typing import TYPE_CHECKING, Mapping, Sequence
 
 from ..core.allocator import (
@@ -143,6 +160,16 @@ class TenantAllocation:
     horizon_ktps: tuple = ()
     #: the deployment keeps up at every step of its forecast window
     horizon_feasible: bool = True
+    #: the forecast window this allocation was planned against — incremental
+    #: replans compare it to the incoming window to decide "touched"
+    window: tuple = ()
+    #: indices into ``config.dims`` of containers marked draining by an
+    #: eviction-grace round: they keep serving through this round and are
+    #: reclaimed (not re-seated) at the next replan
+    draining: tuple = ()
+    #: this tenant's repack was deferred by the move budget: it keeps its
+    #: previous deployment (or stays shut out) until a later round
+    deferred: bool = False
 
     @property
     def admitted(self) -> bool:
@@ -160,10 +187,24 @@ class FleetPlan:
     #: — reverse-QoS by construction (a higher tier is never touched while a
     #: lower tier still holds hosts)
     eviction_log: tuple = ()
+    #: tenants actually replanned this round (everyone, on a cold or
+    #: non-incremental schedule); the rest kept their allocation verbatim
+    touched: tuple = ()
+    #: tenants whose repack was deferred by the move budget — forced into
+    #: the next round's touched set
+    deferred: tuple = ()
+    #: wall-time (seconds) per scheduling phase:
+    #: restore / allocate / pack / score / repair / total
+    timings: dict = dataclasses.field(default_factory=dict)
 
     @property
     def cores_free(self) -> float:
         return self.cores_total - self.cores_used
+
+    @property
+    def draining(self) -> dict:
+        """Per-tenant count of containers draining under eviction grace."""
+        return {a.tenant: len(a.draining) for a in self.allocations if a.draining}
 
     @property
     def total_moves(self) -> int:
@@ -212,6 +253,7 @@ class _Residency:
     degraded: bool
     dims: list                # ContainerDim per still-seated container
     seated: list              # inventory index per container
+    orig: list                # index into the previous config.dims per entry
     prev_names: tuple         # the previous plan's host names (warm prefs)
 
 
@@ -245,17 +287,52 @@ class FleetScheduler:
     window step, and a candidate is swapped in by the measured repack only
     when its derated capacity reaches ``threshold * planned_rate``.  The
     fleet loop passes its own ``saturation_threshold`` here so "feasible at
-    plan time" and "SLA met when the load arrives" are one judgment."""
+    plan time" and "SLA met when the load arrives" are one judgment.
+
+    Scale knobs:
+
+    * ``incremental`` (default on) — with a ``previous`` plan, only the
+      *touched set* is replanned; untouched tenants keep their allocation
+      verbatim.  ``False`` restores the PR-5 behavior of re-deriving every
+      tenant (still warm, still zero moves when nothing changed) — the
+      scaling benchmark compares the two.
+    * ``move_budget`` — cap on *voluntary* container moves per replan (a
+      demand-driven repack whose trial placement would blow the remaining
+      budget is deferred: the tenant keeps its previous deployment and is
+      forced into the next round's touched set, so a large repack amortizes
+      over ⌈moves/budget⌉ rounds).  Moves forced by a higher tier —
+      preemption and defragmentation displacement — are exempt: deferring
+      them would leave the displaced tenant's bookkeeping pointing at hosts
+      it no longer holds.  The bootstrap round (no previous plan) is also
+      exempt.
+    * ``eviction_grace`` — preemption victims get a drain round: the
+      eviction ladder runs against a ghost inventory, victims are marked
+      draining (still serving, capacity still seated), and the beneficiary
+      stays degraded until the next replan reclaims the drained containers.
+    * ``prune_band`` — candidate-set pruning: only trial-feasible candidates
+      within ``prune_band``× the provisional winner's cpu footprint are
+      scored by the evaluator.
+    """
 
     def __init__(
         self,
         cluster: Cluster,
         evaluator: "ConfigEvaluator | None" = None,
         feasibility_threshold: float = 0.95,
+        incremental: bool = True,
+        move_budget: int | None = None,
+        eviction_grace: bool = False,
+        prune_band: float = 2.0,
     ) -> None:
         self.cluster = cluster
         self.evaluator = evaluator
         self.feasibility_threshold = float(feasibility_threshold)
+        self.incremental = bool(incremental)
+        self.move_budget = None if move_budget is None else int(move_budget)
+        if self.move_budget is not None and self.move_budget < 0:
+            raise ValueError("move_budget must be >= 0")
+        self.eviction_grace = bool(eviction_grace)
+        self.prune_band = float(prune_band)
 
     @staticmethod
     def _priority_order(
@@ -286,25 +363,48 @@ class FleetScheduler:
                 current hosts, a replanned tenant prefers its previous hosts
                 (an unchanged allocation moves zero containers), and a
                 guaranteed/standard tenant squeezed by lower-tier residency
-                triggers the defragment-then-preempt ladder.  ``None``
-                packs cold from an empty inventory (every container counts
-                as a move).
+                triggers the defragment-then-preempt ladder.  With
+                ``incremental`` (the default) it is also the baseline for
+                the *touched set*: tenants whose demand, window, and
+                feasibility are unchanged keep their previous allocation
+                verbatim.  ``None`` packs cold from an empty inventory
+                (every container counts as a move).
 
         Returns:
             The :class:`FleetPlan` in the original demand order, carrying
-            per-tenant ``moves`` / ``move_cost`` / ``evicted`` and the
-            ordered ``eviction_log``.
+            per-tenant ``moves`` / ``move_cost`` / ``evicted`` /
+            ``draining``, the ordered ``eviction_log``, the ``touched`` and
+            ``deferred`` tenant sets, and per-phase wall-time ``timings``.
         """
+        t_start = time.perf_counter()
         names = [spec.name for spec, _t in demands]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names in demands: {names}")
         hosts = self.cluster.inventory()
         specs = {spec.name: spec for spec, _t in demands}
+        timings = {
+            k: 0.0 for k in ("restore", "allocate", "pack", "score", "repair")
+        }
 
         # -- warm state: re-seat the previous plan's residency ---------------
+        t0 = time.perf_counter()
         residency = self._restore_residency(previous, specs, hosts)
+        touched = self._touched_set(demands, windows, previous, residency)
+        timings["restore"] = time.perf_counter() - t0
+
         evicted_count = {n: 0 for n in names}
         eviction_log: list[tuple[str, QosTier]] = []
+        #: tenant -> config.dims indices marked draining this round (grace)
+        drained_marks: dict[str, list[int]] = {}
+        #: tenants whose residency was moved by defragmentation this round
+        displaced: set[str] = set()
+        prev_by = (
+            {a.tenant: a for a in previous.allocations} if previous else {}
+        )
+        budget = self.move_budget if previous is not None else None
+        moves_used = 0
+        deferred: list[str] = []
+        replanned: list[str] = []
 
         by_tenant: dict[str, TenantAllocation] = {}
         cand_sets: dict[str, list[_Candidate]] = {}
@@ -312,43 +412,128 @@ class FleetScheduler:
         prefer_of: dict[str, tuple] = {}
 
         for spec, target in self._priority_order(demands):
+            name = spec.name
+            prev_alloc = prev_by.get(name)
+            window = tuple(float(x) for x in (windows or {}).get(name, ()))
+            forced = name in displaced or evicted_count[name] > 0
+
+            if (
+                prev_alloc is not None
+                and prev_alloc.admitted
+                and name in drained_marks
+                and name not in displaced
+            ):
+                # eviction grace: marked draining this round — the tenant
+                # keeps serving its current deployment; the drained
+                # containers are reclaimed at the next replan (restore
+                # skips them, and "draining" forces it into the touched set)
+                by_tenant[name] = dataclasses.replace(
+                    prev_alloc,
+                    moves=0,
+                    move_cost=0.0,
+                    draining=tuple(sorted(drained_marks[name])),
+                    deferred=False,
+                )
+                continue
+
+            if touched is not None and name not in touched and not forced:
+                # untouched: the previous allocation is kept verbatim — no
+                # packing work, no evaluator slots — and its residency stays
+                # seated (later, lower-priority tenants see it as occupied).
+                # An allocation that is already clean (steady state after
+                # one incremental round) is reused as-is: at 1,000 tenants
+                # the per-tenant dataclasses.replace was itself a hot spot
+                if (
+                    prev_alloc.moves == 0
+                    and prev_alloc.move_cost == 0.0
+                    and prev_alloc.evicted == 0
+                    and not prev_alloc.draining
+                    and not prev_alloc.deferred
+                ):
+                    by_tenant[name] = prev_alloc
+                else:
+                    by_tenant[name] = dataclasses.replace(
+                        prev_alloc,
+                        moves=0,
+                        move_cost=0.0,
+                        evicted=0,
+                        draining=(),
+                        deferred=False,
+                    )
+                continue
+
+            if budget is not None and moves_used >= budget and not forced:
+                # move budget exhausted: defer before any allocation work
+                # (no preemption runs on behalf of a deferred tenant); the
+                # residency stays seated
+                by_tenant[name] = self._deferred_alloc(spec, target, prev_alloc)
+                deferred.append(name)
+                continue
+
+            replanned.append(name)
             # release this tenant's own residency: it is being replanned and
             # its capacity is its own to reuse (warm preference keeps the
             # containers on the same hosts when the shape allows it)
-            res = residency.pop(spec.name, None)
+            res = residency.pop(name, None)
             prefer = res.prev_names if res is not None else ()
-            prefer_of[spec.name] = prefer
+            prefer_of[name] = prefer
             if res is not None:
                 for hi, dim in zip(res.seated, res.dims):
                     if hi >= 0:
                         hosts[hi].release(dim)
 
+            t0 = time.perf_counter()
             ba = self._allocate(spec, target, hosts)
             if (ba.degraded or not ba.fits) and spec.qos > QosTier.BEST_EFFORT:
                 # the squeeze is (possibly) lower-tier residency: defragment,
                 # then preempt in reverse-QoS order, until this tenant fits
                 ba = self._make_room(
                     spec, target, ba, hosts, residency,
-                    evicted_count, eviction_log,
+                    evicted_count, eviction_log, displaced, drained_marks,
                 )
+            timings["allocate"] += time.perf_counter() - t0
             if not ba.fits:
-                by_tenant[spec.name] = self._shut_out(spec, target)
+                by_tenant[name] = self._shut_out(spec, target, window=window)
                 continue
 
+            t0 = time.perf_counter()
             cands = self._candidate_set(spec, ba)
             pick = self._trial_candidates(cands, hosts, prefer)
             if pick is None:
-                by_tenant[spec.name] = self._shut_out(spec, target)
+                timings["pack"] += time.perf_counter() - t0
+                by_tenant[name] = self._shut_out(spec, target, window=window)
                 continue
             winner = cands[pick]
+
+            if (
+                budget is not None
+                and not forced
+                and moves_used + (winner.trial.moves if winner.trial else 0)
+                    > budget
+            ):
+                # this repack would blow the remaining move budget: defer
+                # it and put the released residency back where it was
+                if res is not None:
+                    for hi, dim in zip(res.seated, res.dims):
+                        if hi >= 0:
+                            hosts[hi].place(dim)
+                    residency[name] = res
+                replanned.pop()
+                by_tenant[name] = self._deferred_alloc(spec, target, prev_alloc)
+                deferred.append(name)
+                timings["pack"] += time.perf_counter() - t0
+                continue
+
             placement = Cluster.pack(
                 winner.config.dims, hosts,
                 prefer=prefer if winner.warm else None,
             )
-            chosen[spec.name] = pick
-            cand_sets[spec.name] = cands
-            by_tenant[spec.name] = TenantAllocation(
-                tenant=spec.name,
+            moves_used += placement.moves
+            timings["pack"] += time.perf_counter() - t0
+            chosen[name] = pick
+            cand_sets[name] = cands
+            by_tenant[name] = TenantAllocation(
+                tenant=name,
                 qos=spec.qos,
                 requested_ktps=target,
                 planned_ktps=ba.feasible_rate_ktps,
@@ -362,34 +547,42 @@ class FleetScheduler:
                 moves=placement.moves,
                 move_cost=placement.move_cost,
                 candidates_scored=len(cands),
+                window=window,
             )
 
-        # joint scoring: every admitted tenant's whole candidate set — one
-        # capacity probe per candidate plus, per forecast-window rate, one
-        # per-candidate-load group — in ONE batched (device-sharded) call.
-        # The measured scores then run the repack repair: a provisional
-        # winner that misses its planned rate is swapped for the cheapest
-        # candidate that delivers it.
+        # joint scoring: every *replanned* admitted tenant's pruned candidate
+        # set — one capacity probe per candidate plus, per forecast-window
+        # rate, one per-candidate-load group — in ONE batched
+        # (device-sharded) call.  The measured scores then run the repack
+        # repair: a provisional winner that misses its planned rate is
+        # swapped for the cheapest candidate that delivers it.
         if self.evaluator is not None:
             self._score_and_repair(
-                by_tenant, cand_sets, chosen, prefer_of, windows, hosts
+                by_tenant, cand_sets, chosen, prefer_of, windows, hosts,
+                timings,
             )
 
         # a tenant whose window was never scored — shed entirely, or no
-        # evaluator to measure with — must not claim whole-window coverage
+        # evaluator to measure with — must not claim whole-window coverage;
+        # untouched tenants carry their previously scored window forward
         if windows:
-            for a in by_tenant.values():
-                if windows.get(a.tenant) and not a.horizon_ktps:
+            for name in replanned:
+                a = by_tenant[name]
+                if windows.get(name) and not a.horizon_ktps:
                     a.horizon_feasible = False
 
         for name, n in evicted_count.items():
             by_tenant[name].evicted = n
         allocations = [by_tenant[spec.name] for spec, _t in demands]
+        timings["total"] = time.perf_counter() - t_start
         return FleetPlan(
             allocations=allocations,
             cores_total=self.cluster.total_cores(),
             cores_used=float(sum(a.cpus for a in allocations)),
             eviction_log=tuple(eviction_log),
+            touched=tuple(replanned),
+            deferred=tuple(deferred),
+            timings=timings,
         )
 
     # -- warm state -----------------------------------------------------------
@@ -402,28 +595,89 @@ class FleetScheduler:
         """Seat the previous plan's containers back onto the fresh
         inventory (by host *name* — robust to a changed cluster; containers
         whose host is gone are simply not restored).  Tenants absent from
-        the current demands are dropped entirely: their capacity is free."""
+        the current demands are dropped entirely: their capacity is free.
+        Containers the previous round marked ``draining`` (eviction grace)
+        are *reclaimed* here: their grace round is over, so they are simply
+        not re-seated and their capacity is free for the beneficiary."""
         residency: dict[str, _Residency] = {}
         if previous is None:
             return residency
+        by_name = {h.name: i for i, h in enumerate(hosts)}
         for a in previous.allocations:
             if a.config is None or a.placement is None:
                 continue
             spec = specs.get(a.tenant)
             if spec is None:
                 continue
-            dims = list(a.config.dims)
-            seated = Cluster.seat(dims, a.placement.host_names, hosts)
-            keep = [i for i, h in enumerate(seated.host_of) if h >= 0]
+            draining = set(a.draining)
+            dims: list = []
+            seated: list = []
+            orig: list = []
+            for ci, (dim, hname) in enumerate(
+                zip(a.config.dims, a.placement.host_names)
+            ):
+                if ci in draining:
+                    continue
+                hi = by_name.get(hname, -1)
+                if hi >= 0 and hosts[hi].can_fit(dim):
+                    hosts[hi].place(dim)
+                    dims.append(dim)
+                    seated.append(hi)
+                    orig.append(ci)
             residency[a.tenant] = _Residency(
                 tenant=a.tenant,
                 qos=spec.qos,
                 degraded=a.degraded,
-                dims=[dims[i] for i in keep],
-                seated=[seated.host_of[i] for i in keep],
+                dims=dims,
+                seated=seated,
+                orig=orig,
                 prev_names=tuple(a.placement.host_names),
             )
         return residency
+
+    def _touched_set(
+        self,
+        demands: Sequence[tuple[TenantSpec, float]],
+        windows: "Mapping[str, Sequence[float]] | None",
+        previous: "FleetPlan | None",
+        residency: dict[str, _Residency],
+    ) -> "set[str] | None":
+        """The tenants that must be replanned this round; ``None`` means
+        everyone (cold start, or ``incremental=False``).
+
+        A tenant is touched when its demand or forecast window changed,
+        when its previous round left work unfinished (not admitted,
+        degraded, deferred by the move budget, or draining under eviction
+        grace — all worth retrying now that conditions moved), or when its
+        residency could not be fully re-seated (hosts vanished or shrank).
+        Tenants *displaced* by preemption/defragmentation join dynamically
+        during the round — a victim is always strictly lower QoS than its
+        beneficiary, so it is processed (and can be replanned) later in
+        priority order."""
+        if previous is None or not self.incremental:
+            return None
+        prev_by = {a.tenant: a for a in previous.allocations}
+        touched = set(previous.deferred)
+        for spec, target in demands:
+            name = spec.name
+            a = prev_by.get(name)
+            if a is None:
+                touched.add(name)
+                continue
+            if not a.admitted or a.degraded or a.deferred or a.draining:
+                touched.add(name)
+                continue
+            if abs(float(target) - a.requested_ktps) > 1e-9:
+                touched.add(name)
+                continue
+            window = tuple(float(x) for x in (windows or {}).get(name, ()))
+            if window != tuple(a.window):
+                touched.add(name)
+                continue
+            res = residency.get(name)
+            if res is None or len(res.dims) != len(a.config.dims):
+                touched.add(name)
+        return touched
 
     # -- allocation -----------------------------------------------------------
     def _allocate(self, spec: TenantSpec, target: float, hosts: list[Host]):
@@ -440,7 +694,13 @@ class FleetScheduler:
             fits=lambda cfg: Cluster.trial_pack(cfg.dims, hosts),
         )
 
-    def _shut_out(self, spec: TenantSpec, target: float) -> TenantAllocation:
+    def _shut_out(
+        self,
+        spec: TenantSpec,
+        target: float,
+        window: tuple = (),
+        deferred: bool = False,
+    ) -> TenantAllocation:
         return TenantAllocation(
             tenant=spec.name,
             qos=spec.qos,
@@ -453,7 +713,33 @@ class FleetScheduler:
             bottleneck=None,
             shortfall_ktps=target,
             degraded=True,
+            window=window,
+            deferred=deferred,
         )
+
+    def _deferred_alloc(
+        self,
+        spec: TenantSpec,
+        target: float,
+        prev_alloc: "TenantAllocation | None",
+    ) -> TenantAllocation:
+        """Move budget says not this round: the tenant keeps its previous
+        deployment exactly (containers stay seated; ``draining`` carries
+        through so a pending reclaim is not forgotten) — or stays shut out —
+        and ``deferred=True`` forces it into the next round's touched set."""
+        if prev_alloc is not None and prev_alloc.admitted:
+            return dataclasses.replace(
+                prev_alloc,
+                requested_ktps=float(target),
+                shortfall_ktps=max(
+                    0.0, float(target) - prev_alloc.planned_ktps
+                ),
+                moves=0,
+                move_cost=0.0,
+                evicted=0,
+                deferred=True,
+            )
+        return self._shut_out(spec, target, deferred=True)
 
     # -- preemption + defragmentation ladder ---------------------------------
     def _make_room(
@@ -465,6 +751,8 @@ class FleetScheduler:
         residency: dict[str, _Residency],
         evicted_count: dict[str, int],
         eviction_log: list,
+        displaced: set,
+        drained_marks: dict,
     ):
         """Reclaim capacity held by strictly-lower-tier residents until
         ``spec``'s allocation stops being degraded (or nothing is left to
@@ -472,13 +760,20 @@ class FleetScheduler:
 
         1. **defragment** — compact the lower-tier residents onto fewer
            hosts (first-fit-decreasing repack of their containers; costs
-           moves, sheds no capacity),
+           moves, sheds no capacity).  Residents whose containers actually
+           moved are recorded in ``displaced`` so an incremental round
+           replans them (their bookkeeping changed even if their demand
+           did not),
         2. **preempt** — evict resident containers one at a time in
            reverse-QoS order: best-effort before standard, previously-
            degraded before healthy within a tier, largest container first
            (fastest reclaim).  Each eviction is appended to the plan's
            eviction log, so the order is auditable: a higher tier is never
-           touched while a lower tier still holds hosts.
+           touched while a lower tier still holds hosts.  Under
+           ``eviction_grace`` the ladder runs on a *ghost* inventory
+           instead: victims are marked draining (``drained_marks``), keep
+           serving through this round, and the beneficiary stays degraded
+           until the next replan reclaims the drained containers.
 
         Returns the final (possibly unchanged) budgeted allocation.
         """
@@ -490,8 +785,17 @@ class FleetScheduler:
 
         if not victims():
             return ba
-        if self._compact(victims(), hosts):
+        moved = self._compact(victims(), hosts)
+        if moved:
+            displaced.update(moved)
             ba = self._allocate(spec, target, hosts)
+        if self.eviction_grace:
+            if ba.degraded or not ba.fits:
+                self._mark_draining(
+                    spec, target, hosts, residency,
+                    evicted_count, eviction_log, drained_marks,
+                )
+            return ba
         while ba.degraded or not ba.fits:
             queue = [
                 (int(r.qos), 0 if r.degraded else 1, -r.dims[i].cpus,
@@ -509,22 +813,75 @@ class FleetScheduler:
                 hosts[hi].release(victim.dims[ci])
             del victim.dims[ci]
             del victim.seated[ci]
+            del victim.orig[ci]
             evicted_count[victim_name] += 1
             eviction_log.append((victim_name, victim.qos))
             ba = self._allocate(spec, target, hosts)
         return ba
 
+    def _mark_draining(
+        self,
+        spec: TenantSpec,
+        target: float,
+        hosts: list[Host],
+        residency: dict[str, _Residency],
+        evicted_count: dict[str, int],
+        eviction_log: list,
+        drained_marks: dict,
+    ) -> None:
+        """Eviction grace: run the reverse-QoS eviction ladder against a
+        *ghost* copy of the inventory and record the victims as draining
+        instead of killing them now.  Marked containers stay seated on the
+        real hosts (the victim keeps serving through this round); the next
+        replan's residency restore skips them, which is when the capacity
+        actually frees up.  Containers already marked this round (by an
+        earlier beneficiary) are released on the ghost up front, so two
+        squeezed tenants don't both count on the same draining capacity."""
+        ghost = [h.clone() for h in hosts]
+        marked: set = set()
+        for vname, idxs in drained_marks.items():
+            r = residency.get(vname)
+            if r is None:
+                continue
+            for ci, oi in enumerate(r.orig):
+                if oi in idxs and r.seated[ci] >= 0:
+                    ghost[r.seated[ci]].release(r.dims[ci])
+                    marked.add((vname, ci))
+        ba_g = self._allocate(spec, target, ghost)
+        while ba_g.degraded or not ba_g.fits:
+            queue = [
+                (int(r.qos), 0 if r.degraded else 1, -r.dims[i].cpus,
+                 r.tenant, i)
+                for r in residency.values()
+                if r.qos < spec.qos
+                for i in range(len(r.dims))
+                if (r.tenant, i) not in marked
+            ]
+            if not queue:
+                break
+            queue.sort()
+            _q, _d, _c, victim_name, ci = queue[0]
+            victim = residency[victim_name]
+            if victim.seated[ci] >= 0:
+                ghost[victim.seated[ci]].release(victim.dims[ci])
+            marked.add((victim_name, ci))
+            drained_marks.setdefault(victim_name, []).append(victim.orig[ci])
+            evicted_count[victim_name] += 1
+            eviction_log.append((victim_name, victim.qos))
+            ba_g = self._allocate(spec, target, ghost)
+
     @staticmethod
-    def _compact(residents: list[_Residency], hosts: list[Host]) -> bool:
+    def _compact(residents: list[_Residency], hosts: list[Host]) -> set:
         """Defragment: repack the given residents' containers first-fit-
         decreasing, consolidating the free space they fragment.  Applied
         only when a trial shows every container still fits (the previous
         arrangement is a feasibility witness, but FFD is a heuristic — a
-        failed trial leaves everything in place).  Returns True when any
-        container actually changed host."""
+        failed trial leaves everything in place).  Returns the names of the
+        residents whose containers actually changed host (empty set: no
+        compaction happened)."""
         items = [(r, i) for r in residents for i in range(len(r.dims))]
         if not items:
-            return False
+            return set()
         dims = [r.dims[i] for r, i in items]
         trial = [h.clone() for h in hosts]
         for r, i in items:
@@ -532,17 +889,20 @@ class FleetScheduler:
                 trial[r.seated[i]].release(r.dims[i])
         pl = Cluster.pack(dims, trial)
         if not pl.feasible:
-            return False
+            return set()
         if all(pl.host_of[j] == items[j][0].seated[items[j][1]]
                for j in range(len(items))):
-            return False
+            return set()
         for r, i in items:
             if r.seated[i] >= 0:
                 hosts[r.seated[i]].release(r.dims[i])
         committed = Cluster.pack(dims, hosts)   # deterministic: same as pl
+        moved: set = set()
         for j, (r, i) in enumerate(items):
+            if committed.host_of[j] != r.seated[i]:
+                moved.add(r.tenant)
             r.seated[i] = committed.host_of[j]
-        return True
+        return moved
 
     # -- candidate sets -------------------------------------------------------
     def _candidate_set(self, spec: TenantSpec, ba) -> list[_Candidate]:
@@ -601,6 +961,40 @@ class FleetScheduler:
         return None if best is None else best[1]
 
     # -- joint scoring + measured repack repair -------------------------------
+    def _pruned(self, cands: list[_Candidate], chosen_idx: int) -> list[int]:
+        """Prune a tenant's dim×rounding candidate ladder to the indices
+        worth spending evaluator slots on: placement-feasible candidates
+        whose total CPU footprint sits within ``prune_band`` × the cheaper
+        of (cheapest feasible, provisional winner).  Rungs far above the
+        winner never win the cost-ordered repair; rungs that failed their
+        trial pack can never be committed.  The provisional winner itself
+        is always kept (the capacity probe and window rates are read at its
+        index even when no repair fires)."""
+        feasible = [k for k in range(len(cands)) if cands[k].feasible]
+        if not feasible:
+            return [chosen_idx]
+        floor_cpus = min(cands[k].result.total_cpus for k in feasible)
+        limit = self.prune_band * max(
+            floor_cpus, cands[chosen_idx].result.total_cpus
+        )
+        kept = [
+            k for k in feasible
+            if cands[k].result.total_cpus <= limit + 1e-9
+        ]
+        if chosen_idx not in kept:
+            kept.append(chosen_idx)
+            kept.sort()
+        if len(kept) < 2:
+            # never strand the repair path: keep the cheapest feasible
+            # fallback even when the band would prune everything else
+            rest = sorted(
+                (k for k in feasible if k not in kept),
+                key=lambda k: (cands[k].result.total_cpus, k),
+            )
+            if rest:
+                kept = sorted(kept + rest[:1])
+        return kept
+
     def _score_and_repair(
         self,
         by_tenant: dict[str, TenantAllocation],
@@ -609,14 +1003,20 @@ class FleetScheduler:
         prefer_of: dict[str, tuple],
         windows: "Mapping[str, Sequence[float]] | None",
         hosts: list[Host],
+        timings: dict,
     ) -> None:
+        t0 = time.perf_counter()
         groups: list[list[Configuration]] = []
         loads: list = []
         spans: list[tuple] = []
         for name, a in by_tenant.items():      # insertion order = QoS order
-            if a.config is None:
+            if a.config is None or name not in cand_sets:
                 continue
-            cands = cand_sets[name]
+            all_cands = cand_sets[name]
+            kept = self._pruned(all_cands, chosen[name])
+            cands = [all_cands[k] for k in kept]
+            pos = kept.index(chosen[name])
+            a.candidates_scored = len(cands)
             cfgs = [c.config for c in cands]
             speeds = [c.speed for c in cands]
             window = list((windows or {}).get(name, ()))
@@ -630,18 +1030,20 @@ class FleetScheduler:
                 loads.append(
                     PerCandidateLoads(float(rate) / s for s in speeds)
                 )
-            spans.append((a, cands, speeds, window))
+            spans.append((a, cands, pos, speeds, window))
         if not groups:
             return
         evals = evaluate_jobs_with(self.evaluator, groups, loads)
+        timings["score"] += time.perf_counter() - t0
+        t0 = time.perf_counter()
         i = 0
-        for a, cands, speeds, window in spans:
+        for a, cands, pos, speeds, window in spans:
             caps = evals[i]
             derated = [
                 caps[k].achieved_ktps * speeds[k] for k in range(len(cands))
             ]
             bar = self.feasibility_threshold * a.planned_ktps
-            final = chosen[a.tenant]
+            final = pos
             if derated[final] < bar:
                 final = self._repair(
                     a, cands,
@@ -666,6 +1068,7 @@ class FleetScheduler:
                 for r, ref in zip(rates, window)
             )
             i += 1 + len(window)
+        timings["repair"] += time.perf_counter() - t0
 
     def _repair(
         self,

@@ -14,8 +14,10 @@ from .workloads import (
 from .simulator import (
     SimParams,
     SimResult,
+    batch_bucket_size,
     bucket_size,
     clear_kernel_cache,
+    clear_structure_cache,
     kernel_cache_info,
     measure_capacity,
     pad_structure,
@@ -23,6 +25,7 @@ from .simulator import (
     simulate,
     simulate_batch,
     simulate_grid,
+    structure_cache_info,
     training_sweep,
 )
 from .engine import (
@@ -41,9 +44,11 @@ __all__ = [
     "WORKLOADS", "ConfigEvaluator", "EvalResult", "ExecutorEvaluator",
     "OVERLOAD_KTPS", "PerCandidateLoads", "SimParams", "SimResult",
     "SimulatorEvaluator",
-    "adanalytics", "bucket_size", "clear_kernel_cache", "deep_pipeline",
+    "adanalytics", "batch_bucket_size", "bucket_size", "clear_kernel_cache",
+    "clear_structure_cache", "deep_pipeline",
     "diamond", "evaluate_grid_with", "evaluate_jobs_with",
     "kernel_cache_info", "measure_capacity", "mobile_analytics",
     "pad_structure", "shard_count", "simulate", "simulate_batch",
-    "simulate_grid", "sources", "training_sweep", "wordcount",
+    "simulate_grid", "sources", "structure_cache_info", "training_sweep",
+    "wordcount",
 ]

@@ -46,6 +46,7 @@ agree bitwise; a single-device host falls back to plain vmap.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 from typing import Sequence
 
@@ -176,6 +177,74 @@ def build_structure(config: Configuration, params: SimParams) -> SimStructure:
 
 
 # ---------------------------------------------------------------------------
+# Structure memoization
+# ---------------------------------------------------------------------------
+
+#: ``build_structure`` is pure in ``(config, params)`` — both are frozen
+#: (hashable-by-value) dataclasses — and its O(instances²) host-side loops
+#: dominate repeated evaluation of recurring configurations (the fleet
+#: scheduler re-scores largely the same candidate ladder every replan).
+#: Bounded LRU keyed by value, so two distinct-but-equal Configuration
+#: objects share one structure.
+_STRUCTURE_CACHE: "OrderedDict[tuple, SimStructure]" = OrderedDict()
+_PAD_CACHE: "OrderedDict[tuple, dict]" = OrderedDict()
+_STRUCTURE_CACHE_MAX = 4096
+_STRUCTURE_STATS = {"hits": 0, "misses": 0}
+
+
+def _lru_get(cache: OrderedDict, key, build):
+    hit = cache.get(key)
+    if hit is not None:
+        _STRUCTURE_STATS["hits"] += 1
+        cache.move_to_end(key)
+        return hit
+    _STRUCTURE_STATS["misses"] += 1
+    out = build()
+    cache[key] = out
+    if len(cache) > _STRUCTURE_CACHE_MAX:
+        cache.popitem(last=False)
+    return out
+
+
+def structure_for(config: Configuration, params: SimParams) -> SimStructure:
+    """Memoized :func:`build_structure` (treat the result as read-only)."""
+    return _lru_get(
+        _STRUCTURE_CACHE, (config, params), lambda: build_structure(config, params)
+    )
+
+
+def _padded_for(
+    st: SimStructure, params: SimParams, n_inst_bucket: int, n_cont_bucket: int
+) -> dict:
+    """Memoized :func:`pad_structure` — the bucket layout for one config.
+
+    The returned arrays are shared across calls and must be treated as
+    read-only (``simulate_batch`` copies them when stacking the batch).
+    """
+    return _lru_get(
+        _PAD_CACHE,
+        (st.config, params, n_inst_bucket, n_cont_bucket),
+        lambda: pad_structure(st, n_inst_bucket, n_cont_bucket),
+    )
+
+
+def structure_cache_info() -> dict:
+    """Host-side structure/padding memoization statistics."""
+    return {
+        "structures": len(_STRUCTURE_CACHE),
+        "padded": len(_PAD_CACHE),
+        **_STRUCTURE_STATS,
+    }
+
+
+def clear_structure_cache() -> None:
+    _STRUCTURE_CACHE.clear()
+    _PAD_CACHE.clear()
+    _STRUCTURE_STATS["hits"] = 0
+    _STRUCTURE_STATS["misses"] = 0
+
+
+# ---------------------------------------------------------------------------
 # Shape bucketing + padding
 # ---------------------------------------------------------------------------
 
@@ -192,6 +261,23 @@ def bucket_size(n: int, floor: int = 0) -> int:
         if n <= b:
             return b
     return -(-n // BUCKET_LADDER[-1]) * BUCKET_LADDER[-1]
+
+
+#: Finer ladder for the *batch* axis (candidate count), used by the fleet
+#: scheduler's joint scoring: batch sizes are padded up to a rung (with a
+#: sticky floor) so the per-device batch — and therefore the compiled kernel
+#: shape — stays stable while the touched set fluctuates across replans.
+#: Every rung is a multiple of 8, so an 8-way device shard divides evenly.
+BATCH_LADDER = (8, 16, 32, 64, 128, 256, 512)
+
+
+def batch_bucket_size(n: int, floor: int = 0) -> int:
+    """Round a batch size up to the batch ladder (``floor`` is sticky)."""
+    n = max(int(n), int(floor), 1)
+    for b in BATCH_LADDER:
+        if n <= b:
+            return b
+    return -(-n // BATCH_LADDER[-1]) * BATCH_LADDER[-1]
 
 
 def pad_structure(st: SimStructure, n_inst_bucket: int, n_cont_bucket: int) -> dict:
@@ -577,6 +663,7 @@ def simulate_batch(
     min_inst_bucket: int = 0,
     min_cont_bucket: int = 0,
     devices: int | None = None,
+    min_batch_bucket: int = 0,
 ) -> list[SimResult]:
     """Evaluate N configurations in one vmapped (and device-sharded) call.
 
@@ -596,13 +683,23 @@ def simulate_batch(
     is padded to a multiple of the shard count by replicating the last
     configuration (replicas are dropped on unpack), so sharded results are
     bitwise-identical to the unsharded path.
+
+    ``min_batch_bucket`` (> 0) additionally pads the *batch axis* up to the
+    :data:`BATCH_LADDER` rung ≥ the floor, again by replicating the last
+    configuration.  Shard counts are then derived from the bucketed batch,
+    so fleet traces whose candidate counts fluctuate replan after replan
+    keep hitting the same compiled kernel (see
+    ``SimulatorEvaluator(sticky_batch=True)``).  Padding rows are data-
+    parallel replicas sliced away on unpack — results stay bitwise-identical
+    to the unbucketed call.
     """
     configs = list(configs)
     if not configs:
         return []
     B = len(configs)
-    n_dev = shard_count(B, devices)
-    structures = [build_structure(c, params) for c in configs]
+    B_bucket = batch_bucket_size(B, min_batch_bucket) if min_batch_bucket else B
+    n_dev = shard_count(B_bucket, devices)
+    structures = [structure_for(c, params) for c in configs]
     n_inst_b = bucket_size(max(st.n_inst for st in structures), min_inst_bucket)
     n_cont_b = bucket_size(max(st.n_cont for st in structures), min_cont_bucket)
 
@@ -624,25 +721,26 @@ def simulate_batch(
     if len(seeds) != B:
         raise ValueError("seeds must match configs")
 
-    padded = [pad_structure(st, n_inst_b, n_cont_b) for st in structures]
+    padded = [_padded_for(st, params, n_inst_b, n_cont_b) for st in structures]
     stacked = {k: np.stack([p[k] for p in padded]) for k in padded[0]}
     per_tick_in = np.asarray(per_tick, np.float32)
     seeds_in = np.asarray(seeds, np.int32)
 
-    if n_dev > 1:
-        # pad the batch to a multiple of the shard count by replicating the
-        # last row (replicas are sliced away below), then add the device axis
-        fill = (-B) % n_dev
-        def shard(a: np.ndarray) -> np.ndarray:
-            if fill:
-                a = np.concatenate([a, np.repeat(a[-1:], fill, axis=0)])
-            return a.reshape(n_dev, -1, *a.shape[1:])
+    # pad the batch axis: up to the batch bucket (if any), then to a multiple
+    # of the shard count, by replicating the last row (replicas are sliced
+    # away below); then add the device axis when sharded
+    fill = (B_bucket - B) + ((-B_bucket) % n_dev)
+    def shard(a: np.ndarray) -> np.ndarray:
+        if fill:
+            a = np.concatenate([a, np.repeat(a[-1:], fill, axis=0)])
+        if n_dev > 1:
+            a = a.reshape(n_dev, -1, *a.shape[1:])
+        return a
+    if fill or n_dev > 1:
         stacked = {k: shard(v) for k, v in stacked.items()}
         per_tick_in = shard(per_tick_in)
         seeds_in = shard(seeds_in)
-        per_dev_B = (B + fill) // n_dev
-    else:
-        per_dev_B = B
+    per_dev_B = (B + fill) // n_dev
 
     kernel = _get_batch_kernel(
         per_dev_B, n_inst_b, n_cont_b, n_ticks, params.sample_every, n_dev
@@ -666,7 +764,7 @@ def simulate_batch(
             for k, v in samples.items()
         }
     else:
-        samples = {k: np.asarray(v) for k, v in samples.items()}
+        samples = {k: np.asarray(v)[:B] for k, v in samples.items()}
 
     n_samples = n_ticks // params.sample_every
     results: list[SimResult] = []
@@ -719,6 +817,7 @@ def simulate_grid(
     min_inst_bucket: int = 0,
     min_cont_bucket: int = 0,
     devices: int | None = None,
+    min_batch_bucket: int = 0,
 ) -> list[list[SimResult]]:
     """Score C configurations × R offered rates in ONE batched kernel call.
 
@@ -740,6 +839,7 @@ def simulate_grid(
             min_inst_bucket=min_inst_bucket,
             min_cont_bucket=min_cont_bucket,
             devices=devices,
+            min_batch_bucket=min_batch_bucket,
         )
 
     return _grid_through_batch(batch, configs, rates_ktps)
