@@ -24,6 +24,7 @@ BENCHES = [
     ("fleet_scale", "bench_fleet_scale", "Fleet layer — tenant-count scaling curve (incremental vs full)"),
     ("speed", "bench_speed", "Paper §4/§5 — predict/allocate latency + LP bench"),
     ("kernels", "bench_kernels", "Pallas kernels vs jnp oracles"),
+    ("tick", "bench_tick", "Tick kernel — dense vs sparse ELL flow physics + batch staging"),
 ]
 
 

@@ -57,6 +57,11 @@ class ModelStore:
         self.calibrator = calibrator or Calibrator()
         self.metrics = MetricsStore()
         self.max_pooled_samples = max_pooled_samples
+        #: monotonic mutation counter: bumped whenever calibration state or
+        #: the node models change, so downstream memos (the fleet
+        #: scheduler's candidate-ladder cache) can key on it instead of
+        #: hashing model contents every replan
+        self.version = 0
 
     # -- calibration (predict-back, §4) -------------------------------------
     @property
@@ -66,6 +71,7 @@ class ModelStore:
     def observe(self, config: Configuration, measured_ktps: float) -> bool:
         """Record one predicted-vs-measured pair; returns the drift flag."""
         self.calibrator.observe(config, self.models, measured_ktps)
+        self.version += 1
         return self.drift_detected()
 
     def observe_many(
@@ -74,6 +80,7 @@ class ModelStore:
         """Batch form — the natural sink for ``evaluate_batch`` output and
         for the control loop's buffered saturated measurements."""
         self.calibrator.observe_many(configs, self.models, measured_ktps)
+        self.version += 1
         return self.drift_detected()
 
     def drift_detected(self) -> bool:
@@ -102,6 +109,7 @@ class ModelStore:
         fitted = fit_workload(src)
         self.models.update(fitted)
         self.calibrator.mark_retrained()
+        self.version += 1
         return fitted
 
 

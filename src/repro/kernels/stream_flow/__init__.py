@@ -1,0 +1,4 @@
+from .ops import stream_flow
+from .ref import stream_flow_reference
+
+__all__ = ["stream_flow", "stream_flow_reference"]

@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the fused stream-flow kernel."""
+import functools
+
+import jax
+
+from .ref import stream_flow_reference
+from .stream_flow import stream_flow_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_edges", "interpret"))
+def stream_flow(qout, edge_src, edge_dst, edge_share, edge_remote,
+                edge_src_cont, edge_dst_cont, sm_budget,
+                block_edges: int = 512, interpret: bool = False):
+    return stream_flow_pallas(
+        qout, edge_src, edge_dst, edge_share, edge_remote,
+        edge_src_cont, edge_dst_cont, sm_budget,
+        block_edges=block_edges, interpret=interpret,
+    )

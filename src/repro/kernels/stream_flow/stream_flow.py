@@ -1,0 +1,154 @@
+"""Fused gather–throttle–scatter stream-flow Pallas TPU kernel.
+
+The sparse tick kernel's flow step has three data movements per edge:
+gather ``qout[src]``, read the per-container throttle, scatter the
+throttled flow to ``(dst, src_cont, dst_cont)``.  On TPU, dynamic
+gather/scatter lower poorly, so both are expressed as **one-hot matmuls**
+(MXU-friendly) over edge blocks:
+
+* pass 1 (``_demand_kernel``): accumulate the per-container demand
+  ``orig_c`` / ``arr_c`` over edge blocks,
+* glue (jnp, O(K)): the throttle ``s_c = min(1, budget / demand)``,
+* pass 2 (``_flow_kernel``): apply the min-of-path throttle per edge and
+  accumulate ``delivered`` / ``arrivals`` / ``trav_c``.
+
+The grid iterates over edge blocks sequentially (TPU grid semantics), so
+output blocks are revisited and accumulated in place.  Per-block VMEM is
+O(block_edges × max(I, K)); ``block_edges`` bounds it.  Padding edges must
+carry ``edge_share == 0`` — they contribute exact zeros wherever their
+(arbitrary) indices point.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _onehot_cols(idx_row: jax.Array, n: int) -> jax.Array:
+    """(1, E) int32 → (E, n) f32 one-hot (edge-major)."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (idx_row.shape[1], n), 1)
+    return (jnp.swapaxes(idx_row, 0, 1) == cols).astype(jnp.float32)
+
+
+def _f_want(qout_ref, src_ref, share_ref, n_inst: int) -> jax.Array:
+    """(1, bE) desired flow per edge: gather via one-hot matmul."""
+    onehot_src = _onehot_cols(src_ref[...], n_inst)          # (bE, I)
+    qsrc = jnp.dot(                                          # (1, bE)
+        qout_ref[...], jnp.swapaxes(onehot_src, 0, 1),
+        preferred_element_type=jnp.float32,
+    )
+    return qsrc * share_ref[...]
+
+
+def _demand_kernel(qout_ref, src_ref, share_ref, remote_ref, src_c_ref,
+                   dst_c_ref, orig_ref, arr_ref, *, n_inst: int, n_cont: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        orig_ref[...] = jnp.zeros_like(orig_ref)
+        arr_ref[...] = jnp.zeros_like(arr_ref)
+
+    f_want = _f_want(qout_ref, src_ref, share_ref, n_inst)   # (1, bE)
+    onehot_sc = _onehot_cols(src_c_ref[...], n_cont)         # (bE, K)
+    onehot_dc = _onehot_cols(dst_c_ref[...], n_cont)
+    orig_ref[...] += jnp.dot(f_want, onehot_sc, preferred_element_type=jnp.float32)
+    arr_ref[...] += jnp.dot(
+        f_want * remote_ref[...], onehot_dc, preferred_element_type=jnp.float32
+    )
+
+
+def _flow_kernel(qout_ref, s_c_ref, src_ref, dst_ref, share_ref, remote_ref,
+                 src_c_ref, dst_c_ref, deliv_ref, arriv_ref, trav_ref,
+                 *, n_inst: int, n_cont: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        deliv_ref[...] = jnp.zeros_like(deliv_ref)
+        arriv_ref[...] = jnp.zeros_like(arriv_ref)
+        trav_ref[...] = jnp.zeros_like(trav_ref)
+
+    f_want = _f_want(qout_ref, src_ref, share_ref, n_inst)   # (1, bE)
+    onehot_sc = _onehot_cols(src_c_ref[...], n_cont)         # (bE, K)
+    onehot_dc = _onehot_cols(dst_c_ref[...], n_cont)
+    s_src = jnp.dot(s_c_ref[...], jnp.swapaxes(onehot_sc, 0, 1),
+                    preferred_element_type=jnp.float32)      # (1, bE)
+    s_dst = jnp.dot(s_c_ref[...], jnp.swapaxes(onehot_dc, 0, 1),
+                    preferred_element_type=jnp.float32)
+    remote = remote_ref[...]
+    eff = jnp.minimum(s_src, jnp.where(remote > 0, s_dst, 1.0))
+    f = f_want * eff
+    onehot_src = _onehot_cols(src_ref[...], n_inst)          # (bE, I)
+    onehot_dst = _onehot_cols(dst_ref[...], n_inst)
+    deliv_ref[...] += jnp.dot(f, onehot_src, preferred_element_type=jnp.float32)
+    arriv_ref[...] += jnp.dot(f, onehot_dst, preferred_element_type=jnp.float32)
+    trav_ref[...] += jnp.dot(f, onehot_sc, preferred_element_type=jnp.float32)
+    trav_ref[...] += jnp.dot(f * remote, onehot_dc,
+                             preferred_element_type=jnp.float32)
+
+
+def _edge_spec(block_edges: int):
+    return pl.BlockSpec((1, block_edges), lambda i: (0, i))
+
+
+def stream_flow_pallas(
+    qout: jax.Array,
+    edge_src: jax.Array,
+    edge_dst: jax.Array,
+    edge_share: jax.Array,
+    edge_remote: jax.Array,
+    edge_src_cont: jax.Array,
+    edge_dst_cont: jax.Array,
+    sm_budget: jax.Array,
+    block_edges: int = 512,
+    interpret: bool = False,
+):
+    """Fused flow step; same contract as
+    :func:`~repro.kernels.stream_flow.ref.stream_flow_reference`."""
+    n_inst = qout.shape[0]
+    n_cont = sm_budget.shape[0]
+    n_edges = edge_src.shape[0]
+    block_edges = min(block_edges, max(n_edges, 1))
+    pad = (-n_edges) % block_edges
+
+    def row(x, dtype, fill):
+        x = x.astype(dtype)
+        if pad:
+            x = jnp.concatenate([x, jnp.full((pad,), fill, dtype)])
+        return x.reshape(1, -1)
+
+    src = row(edge_src, jnp.int32, 0)
+    dst = row(edge_dst, jnp.int32, 0)
+    share = row(edge_share, jnp.float32, 0.0)   # zero share ⇒ padded edges inert
+    remote = row(edge_remote, jnp.float32, 0.0)
+    src_c = row(edge_src_cont, jnp.int32, 0)
+    dst_c = row(edge_dst_cont, jnp.int32, 0)
+    qout2 = qout.astype(jnp.float32).reshape(1, -1)
+    budget2 = sm_budget.astype(jnp.float32).reshape(1, -1)
+    grid = ((n_edges + pad) // block_edges,)
+    full = lambda w: pl.BlockSpec((1, w), lambda i: (0, 0))
+
+    orig, arr = pl.pallas_call(
+        functools.partial(_demand_kernel, n_inst=n_inst, n_cont=n_cont),
+        grid=grid,
+        in_specs=[full(n_inst)] + [_edge_spec(block_edges)] * 5,
+        out_specs=[full(n_cont), full(n_cont)],
+        out_shape=[jax.ShapeDtypeStruct((1, n_cont), jnp.float32)] * 2,
+        interpret=interpret,
+    )(qout2, src, share, remote, src_c, dst_c)
+
+    s_c = jnp.minimum(1.0, budget2 / jnp.maximum(orig + arr, 1e-9))
+
+    deliv, arriv, trav = pl.pallas_call(
+        functools.partial(_flow_kernel, n_inst=n_inst, n_cont=n_cont),
+        grid=grid,
+        in_specs=[full(n_inst), full(n_cont)] + [_edge_spec(block_edges)] * 6,
+        out_specs=[full(n_inst), full(n_inst), full(n_cont)],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n_inst), jnp.float32),
+            jax.ShapeDtypeStruct((1, n_inst), jnp.float32),
+            jax.ShapeDtypeStruct((1, n_cont), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qout2, s_c, src, dst, share, remote, src_c, dst_c)
+    return deliv.reshape(-1), arriv.reshape(-1), trav.reshape(-1)

@@ -12,15 +12,22 @@ from .workloads import (
     wordcount,
 )
 from .simulator import (
+    DEGREE_LADDER,
+    EDGE_LADDER,
     SimParams,
     SimResult,
     batch_bucket_size,
     bucket_size,
     clear_kernel_cache,
+    clear_resident_cache,
     clear_structure_cache,
+    degree_bucket_size,
+    edge_bucket_size,
     kernel_cache_info,
     measure_capacity,
     pad_structure,
+    resident_cache_info,
+    resolve_tick_kernel,
     shard_count,
     simulate,
     simulate_batch,
@@ -41,14 +48,18 @@ from .engine import (
 from . import sources
 
 __all__ = [
-    "WORKLOADS", "ConfigEvaluator", "EvalResult", "ExecutorEvaluator",
+    "DEGREE_LADDER",
+    "EDGE_LADDER", "WORKLOADS", "ConfigEvaluator", "EvalResult",
+    "ExecutorEvaluator",
     "OVERLOAD_KTPS", "PerCandidateLoads", "SimParams", "SimResult",
     "SimulatorEvaluator",
     "adanalytics", "batch_bucket_size", "bucket_size", "clear_kernel_cache",
-    "clear_structure_cache", "deep_pipeline",
-    "diamond", "evaluate_grid_with", "evaluate_jobs_with",
+    "clear_resident_cache", "clear_structure_cache", "deep_pipeline",
+    "degree_bucket_size",
+    "diamond", "edge_bucket_size", "evaluate_grid_with", "evaluate_jobs_with",
     "kernel_cache_info", "measure_capacity", "mobile_analytics",
-    "pad_structure", "shard_count", "simulate", "simulate_batch",
+    "pad_structure", "resident_cache_info", "resolve_tick_kernel",
+    "shard_count", "simulate", "simulate_batch",
     "simulate_grid", "sources", "structure_cache_info", "training_sweep",
     "wordcount",
 ]

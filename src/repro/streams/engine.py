@@ -35,8 +35,12 @@ from .simulator import (
     _grid_through_batch,
     batch_bucket_size,
     bucket_size,
+    degree_bucket_size,
+    edge_bucket_size,
     is_scalar_load,
+    resolve_tick_kernel,
     simulate_batch,
+    structure_for,
 )
 
 #: A multi-job evaluation request: one candidate-configuration list per job.
@@ -249,6 +253,17 @@ class SimulatorEvaluator:
     a fleet trace whose per-replan candidate count fluctuates keeps hitting
     one compiled kernel and a stable device-shard count.  Off by default:
     for one-shot batches the padding is pure overhead.
+
+    ``tick_kernel`` picks the flow-physics backend (``"dense"``,
+    ``"sparse"``, or ``"auto"``).  ``"auto"`` is resolved ONCE, from the
+    first batch seen, and then pinned — a per-call decision could flip the
+    backend as candidate sets fluctuate and recompile.  The sparse edge
+    bucket is sticky like the shape buckets.  ``resident_batches`` turns on
+    the device-resident staging cache in :func:`simulate_batch` — the fleet
+    scheduler re-scores largely identical candidate sets every replan, so
+    repeated submissions skip ``np.stack`` + host→device transfer (results
+    stay bitwise identical).  ``saturation_threshold`` is forwarded to
+    :meth:`SimResult.bottleneck_node` when labelling the limiting component.
     """
 
     def __init__(
@@ -258,44 +273,69 @@ class SimulatorEvaluator:
         sticky_buckets: bool = True,
         devices: int | None = None,
         sticky_batch: bool = False,
+        tick_kernel: str = "auto",
+        resident_batches: bool = True,
+        saturation_threshold: float = 0.8,
     ) -> None:
         self.params = params
         self.duration_s = duration_s
         self.sticky_buckets = sticky_buckets
         self.devices = devices
         self.sticky_batch = sticky_batch
+        self.tick_kernel = tick_kernel
+        self.resident_batches = resident_batches
+        self.saturation_threshold = saturation_threshold
         self._inst_floor = 0
         self._cont_floor = 0
         self._batch_floor = 0
+        self._edge_floor = 0
+        self._degree_floor = 0
+        self._backend: str | None = None if tick_kernel == "auto" else tick_kernel
         # shape-scan memo: flat config tuple (by identity) -> bucket inputs;
         # the fleet scheduler re-submits largely identical candidate lists
         # every replan, so the O(total instances) packing scan runs once per
         # distinct layout.  Values hold the configs, keeping the ids valid.
         self._layout_memo: OrderedDict[tuple, tuple] = OrderedDict()
 
-    def presize(self, n_inst: int, n_cont: int, n_batch: int = 0) -> None:
+    def presize(
+        self, n_inst: int, n_cont: int, n_batch: int = 0, n_edges: int = 0,
+        max_degree: int = 0,
+    ) -> None:
         """Pin bucket floors for the largest configuration (and optionally
-        batch size) expected — guarantees a single compilation up front."""
+        batch size / sparse edge count / ELL row width) expected —
+        guarantees a single compilation up front."""
         self._inst_floor = max(self._inst_floor, bucket_size(n_inst))
         self._cont_floor = max(self._cont_floor, bucket_size(n_cont))
         if n_batch:
             self._batch_floor = max(self._batch_floor, batch_bucket_size(n_batch))
+        if n_edges:
+            self._edge_floor = max(self._edge_floor, edge_bucket_size(n_edges))
+        if max_degree:
+            self._degree_floor = max(
+                self._degree_floor, degree_bucket_size(max_degree)
+            )
 
-    def _layout(self, configs: list[Configuration]) -> tuple[int, int]:
-        """Max (instances, containers) across ``configs`` — memoized on the
-        identity signature of the batch so repeated submissions of the same
-        candidate layout (fleet replans) skip the packing re-scan."""
+    def _layout(self, configs: list[Configuration]) -> tuple[int, int, int, int]:
+        """Max (instances, containers, edges, in-/out-degree) across
+        ``configs`` — memoized on the identity signature of the batch so
+        repeated submissions of the same candidate layout (fleet replans)
+        skip the packing re-scan."""
         sig = tuple(id(c) for c in configs)
         hit = self._layout_memo.get(sig)
         if hit is not None:
             self._layout_memo.move_to_end(sig)
-            return hit[1], hit[2]
+            return hit[1], hit[2], hit[3], hit[4]
         n_inst = max(sum(len(p) for p in c.packing) for c in configs)
         n_cont = max(c.n_containers for c in configs)
-        self._layout_memo[sig] = (tuple(configs), n_inst, n_cont)
+        # structure_for is value-memoized, so this warms the same cache
+        # simulate_batch reads — no duplicate structure builds
+        sts = [structure_for(c, self.params) for c in configs]
+        n_edges = max(st.n_edges for st in sts)
+        d_max = max(max(st.d_out, st.d_in) for st in sts)
+        self._layout_memo[sig] = (tuple(configs), n_inst, n_cont, n_edges, d_max)
         if len(self._layout_memo) > 128:
             self._layout_memo.popitem(last=False)
-        return n_inst, n_cont
+        return n_inst, n_cont, n_edges, d_max
 
     def evaluate(
         self, config: Configuration, offered_ktps: float = OVERLOAD_KTPS
@@ -309,9 +349,20 @@ class SimulatorEvaluator:
         if not configs:
             return []
         if self.sticky_buckets:
-            n_inst, n_cont = self._layout(configs)
+            n_inst, n_cont, n_edges, d_max = self._layout(configs)
             self._inst_floor = max(self._inst_floor, bucket_size(n_inst))
             self._cont_floor = max(self._cont_floor, bucket_size(n_cont))
+            if self._backend is None:
+                # pin "auto" on first contact so later batches with different
+                # densities never flip the backend (and recompile)
+                self._backend = resolve_tick_kernel(n_inst, n_edges, "auto")
+            if self._backend == "sparse":
+                self._edge_floor = max(
+                    self._edge_floor, edge_bucket_size(n_edges)
+                )
+                self._degree_floor = max(
+                    self._degree_floor, degree_bucket_size(d_max)
+                )
         if self.sticky_batch:
             self._batch_floor = max(
                 self._batch_floor, batch_bucket_size(len(configs))
@@ -325,12 +376,16 @@ class SimulatorEvaluator:
             min_cont_bucket=self._cont_floor,
             devices=self.devices,
             min_batch_bucket=self._batch_floor,
+            tick_kernel=self._backend if self._backend else self.tick_kernel,
+            min_edge_bucket=self._edge_floor,
+            min_degree_bucket=self._degree_floor,
+            resident=self.resident_batches,
         )
         return [
             EvalResult(
                 config=c,
                 achieved_ktps=r.achieved_ktps,
-                bottleneck=r.bottleneck_node(),
+                bottleneck=r.bottleneck_node(self.saturation_threshold),
                 sim=r,
             )
             for c, r in zip(configs, results)

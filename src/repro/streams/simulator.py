@@ -98,6 +98,15 @@ class SimStructure:
     sm_cost_eff: np.ndarray      # (n_cont,) per-traversal SM cost incl. fan-out overhead
     rowsum_W: np.ndarray         # (n_inst,)
     node_names: list[str]
+    #: CSR-like edge list — the nonzeros of ``W`` in row-major order.  The
+    #: sparse tick kernel scales with these instead of the (I, I) matrices.
+    edge_src: np.ndarray         # (n_edges,) int32 source instance
+    edge_dst: np.ndarray         # (n_edges,) int32 destination instance
+    edge_w: np.ndarray           # (n_edges,) routing weight W[src, dst]
+    edge_remote: np.ndarray      # (n_edges,) bool, cross-container edge
+    n_edges: int
+    d_out: int                   # max out-degree (edges per source instance)
+    d_in: int                    # max in-degree (edges per dest instance)
 
 
 def build_structure(config: Configuration, params: SimParams) -> SimStructure:
@@ -154,6 +163,7 @@ def build_structure(config: Configuration, params: SimParams) -> SimStructure:
                     peers.add(int(cont_of[p]))
         sm_cost_eff[c] = params.sm_cost_per_ktuple * (1.0 + params.sm_fanout_coef * len(peers))
 
+    edge_src, edge_dst = (x.astype(np.int32) for x in np.nonzero(W))
     return SimStructure(
         config=config,
         n_inst=n_inst,
@@ -173,6 +183,15 @@ def build_structure(config: Configuration, params: SimParams) -> SimStructure:
         sm_cost_eff=sm_cost_eff,
         rowsum_W=W.sum(axis=1),
         node_names=list(dag.node_names),
+        edge_src=edge_src,
+        edge_dst=edge_dst,
+        edge_w=W[edge_src, edge_dst],
+        edge_remote=remote[edge_src, edge_dst],
+        n_edges=int(edge_src.shape[0]),
+        d_out=int(np.bincount(edge_src, minlength=n_inst).max())
+        if edge_src.size else 0,
+        d_in=int(np.bincount(edge_dst, minlength=n_inst).max())
+        if edge_dst.size else 0,
     )
 
 
@@ -214,7 +233,13 @@ def structure_for(config: Configuration, params: SimParams) -> SimStructure:
 
 
 def _padded_for(
-    st: SimStructure, params: SimParams, n_inst_bucket: int, n_cont_bucket: int
+    st: SimStructure,
+    params: SimParams,
+    n_inst_bucket: int,
+    n_cont_bucket: int,
+    n_edge_bucket: int | None = None,
+    d_out_bucket: int | None = None,
+    d_in_bucket: int | None = None,
 ) -> dict:
     """Memoized :func:`pad_structure` — the bucket layout for one config.
 
@@ -223,16 +248,34 @@ def _padded_for(
     """
     return _lru_get(
         _PAD_CACHE,
-        (st.config, params, n_inst_bucket, n_cont_bucket),
-        lambda: pad_structure(st, n_inst_bucket, n_cont_bucket),
+        (st.config, params, n_inst_bucket, n_cont_bucket, n_edge_bucket,
+         d_out_bucket, d_in_bucket),
+        lambda: pad_structure(st, n_inst_bucket, n_cont_bucket, n_edge_bucket,
+                              d_out_bucket, d_in_bucket),
     )
 
 
+def _ndarray_bytes(obj) -> int:
+    """Approximate resident bytes of the numpy arrays hanging off ``obj``
+    (a :class:`SimStructure` or a padded-array dict)."""
+    values = obj.values() if isinstance(obj, dict) else vars(obj).values()
+    return sum(v.nbytes for v in values if isinstance(v, np.ndarray))
+
+
 def structure_cache_info() -> dict:
-    """Host-side structure/padding memoization statistics."""
+    """Host-side structure/padding memoization statistics.
+
+    ``structure_bytes`` / ``padded_bytes`` approximate the resident numpy
+    footprint of the two caches (BENCH extras record them so a perf run
+    shows what stayed resident between calls).
+    """
     return {
         "structures": len(_STRUCTURE_CACHE),
         "padded": len(_PAD_CACHE),
+        "structure_bytes": sum(
+            _ndarray_bytes(v) for v in _STRUCTURE_CACHE.values()
+        ),
+        "padded_bytes": sum(_ndarray_bytes(v) for v in _PAD_CACHE.values()),
         **_STRUCTURE_STATS,
     }
 
@@ -280,7 +323,77 @@ def batch_bucket_size(n: int, floor: int = 0) -> int:
     return -(-n // BATCH_LADDER[-1]) * BATCH_LADDER[-1]
 
 
-def pad_structure(st: SimStructure, n_inst_bucket: int, n_cont_bucket: int) -> dict:
+#: Ladder for the *edge* axis of the sparse tick kernel.  Coarse for the
+#: same reason as :data:`BUCKET_LADDER` (each rung = one compilation), and
+#: every rung is lane-aligned (a multiple of 128 from the second rung up)
+#: so the Pallas flow kernel's edge blocks tile cleanly.
+EDGE_LADDER = (32, 128, 512, 2048, 8192)
+
+
+def edge_bucket_size(n: int, floor: int = 0) -> int:
+    """Round an edge count up to the edge ladder (``floor`` is sticky)."""
+    n = max(int(n), int(floor), 1)
+    for b in EDGE_LADDER:
+        if n <= b:
+            return b
+    return -(-n // EDGE_LADDER[-1]) * EDGE_LADDER[-1]
+
+
+#: Ladder for the ELL row width (max in-/out-degree).  Deliberately as
+#: coarse as :data:`BUCKET_LADDER` (4× steps): topology growth along a
+#: trace then crosses few rungs, so the sparse path adds at most a couple
+#: of degree-driven recompiles on the way up — row padding stays ≤ 4×, and
+#: padded slots gather an exact 0.0 (free beyond the wasted lanes).
+DEGREE_LADDER = (4, 16, 64, 256)
+
+
+def degree_bucket_size(n: int, floor: int = 0) -> int:
+    """Round an ELL row width (max in-/out-degree) up to the degree ladder
+    (``floor`` is sticky)."""
+    n = max(int(n), int(floor), 1)
+    for b in DEGREE_LADDER:
+        if n <= b:
+            return b
+    return -(-n // DEGREE_LADDER[-1]) * DEGREE_LADDER[-1]
+
+
+#: ``tick_kernel="auto"`` picks the sparse kernel when the densest
+#: structure in the batch has edge density ``E / I²`` below this.  The
+#: margin (vs the naive 1.0 crossover) pays for the sparse path's
+#: gather/scatter overhead per edge; the decision uses *unpadded* counts,
+#: so it is invariant to bucket floors and batch padding (bitwise-stable
+#: bucketing semantics).  Shuffle-heavy DAGs (wordcount's p×p exchange,
+#: density ≈ 1/4) stay dense; pipelines (deep_pipeline ≈ 0.11) go sparse.
+SPARSE_DENSITY_THRESHOLD = 0.125
+
+TICK_KERNELS = ("dense", "sparse", "auto")
+
+
+def resolve_tick_kernel(n_inst: int, n_edges: int, tick_kernel: str = "auto") -> str:
+    """Resolve a ``tick_kernel`` selector to a concrete backend.
+
+    ``n_inst`` / ``n_edges`` are the *unpadded* maxima across the batch;
+    ``"auto"`` picks ``"sparse"`` when ``n_edges ≤ threshold · n_inst²``
+    and ``"dense"`` otherwise (the dense path stays the oracle).
+    """
+    if tick_kernel not in TICK_KERNELS:
+        raise ValueError(
+            f"tick_kernel={tick_kernel!r} not in {TICK_KERNELS}"
+        )
+    if tick_kernel != "auto":
+        return tick_kernel
+    dense_cells = max(int(n_inst), 1) ** 2
+    return "sparse" if n_edges <= SPARSE_DENSITY_THRESHOLD * dense_cells else "dense"
+
+
+def pad_structure(
+    st: SimStructure,
+    n_inst_bucket: int,
+    n_cont_bucket: int,
+    n_edge_bucket: int | None = None,
+    d_out_bucket: int | None = None,
+    d_in_bucket: int | None = None,
+) -> dict:
     """Pad a :class:`SimStructure` to static bucket shapes.
 
     Returns the exact array dict consumed by the tick kernel, with
@@ -289,6 +402,19 @@ def pad_structure(st: SimStructure, n_inst_bucket: int, n_cont_bucket: int) -> d
     they process nothing; padded containers receive no traffic.  Real entries
     always occupy the leading positions, so per-config metrics are recovered
     by slicing ``[: n_inst]`` / ``[: n_cont]``.
+
+    ``n_edge_bucket=None`` (default) lays out the **dense** kernel's arrays
+    — the ``(I, I)`` routing/remote matrices.  An integer instead lays out
+    the **sparse** kernel's padded edge list (``edge_src`` / ``edge_dst`` /
+    ``edge_share`` / ``edge_remote`` / container ids / ``edge_mask``) plus
+    the ELL row-gather matrices ``ell_src`` (I, d_out) / ``ell_dst``
+    (I, d_in) that turn per-edge → per-instance reductions into gathers +
+    row-sums: the dense matrices are dropped, padded edges carry zero share
+    (so they move exactly nothing wherever their indices point — results
+    are bitwise invariant to the edge and degree buckets), and per-tick
+    flow cost is O(E), not O(I²).  ``d_out_bucket`` / ``d_in_bucket``
+    default to the structure's own degree-ladder buckets; callers batching
+    several structures pass the shared (sticky) buckets explicitly.
     """
     I, K = int(n_inst_bucket), int(n_cont_bucket)
     if I < st.n_inst or K < st.n_cont:
@@ -301,23 +427,18 @@ def pad_structure(st: SimStructure, n_inst_bucket: int, n_cont_bucket: int) -> d
         out[: x.shape[0]] = x
         return out
 
-    W = np.zeros((I, I), np.float32)
-    W[: st.n_inst, : st.n_inst] = st.W
-    remote = np.zeros((I, I), bool)
-    remote[: st.n_inst, : st.n_inst] = st.remote
     sm_pad = float(st.sm_cost_eff.max()) if st.sm_cost_eff.size else 1e-3
     inst_mask = np.zeros(I, np.float32)
     inst_mask[: st.n_inst] = 1.0
     cont_mask = np.zeros(K, np.float32)
     cont_mask[: st.n_cont] = 1.0
-    return dict(
-        W=W,
-        remote=remote,
+    cont_of = pad1(st.cont_of, I, K - 1, np.int32)
+    arrays = dict(
         busy_cost=pad1(st.busy_cost, I, 1.0, np.float32),
         cpu_cost=pad1(st.cpu_cost, I, 0.0, np.float32),
         gamma=pad1(st.gamma, I, 0.0, np.float32),
         is_source=pad1(st.is_source, I, False, bool),
-        cont_of=pad1(st.cont_of, I, K - 1, np.int32),
+        cont_of=cont_of,
         cont_cpus=pad1(st.cont_cpus, K, 1.0, np.float32),
         sm_cost_eff=pad1(st.sm_cost_eff, K, sm_pad, np.float32),
         mem_base=pad1(st.mem_base, I, 0.0, np.float32),
@@ -325,6 +446,69 @@ def pad_structure(st: SimStructure, n_inst_bucket: int, n_cont_bucket: int) -> d
         inst_mask=inst_mask,
         cont_mask=cont_mask,
     )
+    if n_edge_bucket is None:
+        W = np.zeros((I, I), np.float32)
+        W[: st.n_inst, : st.n_inst] = st.W
+        remote = np.zeros((I, I), bool)
+        remote[: st.n_inst, : st.n_inst] = st.remote
+        arrays.update(W=W, remote=remote)
+        return arrays
+
+    E = int(n_edge_bucket)
+    if E < st.n_edges:
+        raise ValueError(
+            f"edge bucket {E} smaller than structure ({st.n_edges} edges)"
+        )
+    # per-edge share of the source's output queue, in float32 exactly as the
+    # dense kernel derives it from the padded W (share = w / max(rowsum, ε))
+    rowsum32 = st.W.astype(np.float32).sum(axis=1)
+    share = st.edge_w.astype(np.float32) / np.maximum(
+        rowsum32[st.edge_src], 1e-9
+    )
+    edge_mask = np.zeros(E, np.float32)
+    edge_mask[: st.n_edges] = 1.0
+    # padded edges point at the last (padded) instance/container with zero
+    # share: inert contributions, exact under summation
+    edge_src = pad1(st.edge_src, E, I - 1, np.int32)
+    edge_dst = pad1(st.edge_dst, E, I - 1, np.int32)
+    # ELL row-gather matrices for vectorized segment sums: per-tick
+    # reductions become gather((I, D) edge ids) + row-sum — no scatters,
+    # which XLA CPU serializes per element, and no cumsum dependency chain.
+    # Rows are built from the REAL edges only, so the layout (and therefore
+    # every summation order) is independent of the edge bucket; row padding
+    # holds the sentinel id ``E``, which gathers an appended exact 0.0.
+    D_out = int(d_out_bucket) if d_out_bucket is not None else degree_bucket_size(st.d_out)
+    D_in = int(d_in_bucket) if d_in_bucket is not None else degree_bucket_size(st.d_in)
+    if D_out < st.d_out or D_in < st.d_in:
+        raise ValueError(
+            f"degree bucket ({D_out},{D_in}) smaller than structure "
+            f"degrees ({st.d_out},{st.d_in})"
+        )
+    ell_src = np.full((I, D_out), E, np.int32)
+    ell_dst = np.full((I, D_in), E, np.int32)
+    if st.n_edges:
+        eid = np.arange(st.n_edges)
+        # edge_src is sorted (row-major nonzero order): rank within each
+        # source's contiguous run = position - run start
+        starts = np.searchsorted(st.edge_src, np.arange(st.n_inst))
+        ell_src[st.edge_src, eid - starts[st.edge_src]] = eid
+        perm = np.argsort(st.edge_dst, kind="stable")
+        dsts = st.edge_dst[perm]
+        dstarts = np.searchsorted(dsts, np.arange(st.n_inst))
+        ell_dst[dsts, eid - dstarts[dsts]] = perm
+    arrays.update(
+        rowsum=pad1(rowsum32, I, 0.0, np.float32),
+        edge_src=edge_src,
+        edge_dst=edge_dst,
+        edge_share=pad1(share, E, 0.0, np.float32),
+        edge_remote=pad1(st.edge_remote.astype(np.float32), E, 0.0, np.float32),
+        edge_src_cont=pad1(st.cont_of[st.edge_src], E, K - 1, np.int32),
+        edge_dst_cont=pad1(st.cont_of[st.edge_dst], E, K - 1, np.int32),
+        edge_mask=edge_mask,
+        ell_src=ell_src,
+        ell_dst=ell_dst,
+    )
+    return arrays
 
 
 # ---------------------------------------------------------------------------
@@ -350,11 +534,20 @@ def _simulate_core(
     *,
     n_ticks: int,
     sample_every: int,
+    backend: str = "dense",
 ):
     """One padded configuration's trajectory.  Pure function of bucket-shaped
-    arrays — batched via ``jax.vmap`` and compiled once per bucket."""
-    W = arrays["W"]
-    remote = arrays["remote"]
+    arrays — batched via ``jax.vmap`` and compiled once per bucket.
+
+    ``backend`` selects the SM-transfer formulation: ``"dense"`` is the
+    original (I, I) flow-matrix oracle; ``"sparse"`` runs the numerically
+    equivalent edge-list step — per-edge gathers plus ELL segment sums
+    (static (I, D) row-gather matrices + row reductions, see
+    :func:`pad_structure`) — whose per-tick cost is O(E + I·D) instead of
+    O(I²).  The same fused step, in segment-sum form, is the
+    contract of :mod:`repro.kernels.stream_flow` (jnp reference + Pallas
+    TPU kernel).
+    """
     busy_cost = arrays["busy_cost"]
     cpu_cost = arrays["cpu_cost"]
     gamma = arrays["gamma"]
@@ -366,9 +559,36 @@ def _simulate_core(
     inst_mask = arrays["inst_mask"]
     cont_mask = arrays["cont_mask"]
     C = _one_hot(arrays["cont_of"], cont_cpus.shape[0])  # (I, K)
-    n_inst = W.shape[0]
+    n_inst = busy_cost.shape[0]
+    n_cont = cont_cpus.shape[0]
     n_src = jnp.maximum(is_source.sum(), 1)
-    rowsum = W.sum(axis=1)
+    if backend == "dense":
+        W = arrays["W"]
+        remote = arrays["remote"]
+        rowsum = W.sum(axis=1)
+    else:
+        rowsum = arrays["rowsum"]
+        e_src = arrays["edge_src"]
+        e_share = arrays["edge_share"]
+        e_remote = arrays["edge_remote"]
+        e_sc = arrays["edge_src_cont"]
+        e_dc = arrays["edge_dst_cont"]
+        ell_src = arrays["ell_src"]
+        ell_dst = arrays["ell_dst"]
+
+        def _ell_sum(vals: jnp.ndarray, ell: jnp.ndarray) -> jnp.ndarray:
+            # segment sum in ELL form: gather the per-edge values into the
+            # static (I, D) row layout and reduce rows — pure gathers, no
+            # scatters (XLA CPU serializes scatter-adds per element) and no
+            # cumsum dependency chain.  Row padding gathers the appended
+            # exact 0.0 sentinel, a no-op under summation.
+            return jnp.concatenate([vals, jnp.zeros(1, vals.dtype)])[ell].sum(axis=1)
+
+        def _by_src(vals: jnp.ndarray) -> jnp.ndarray:
+            return _ell_sum(vals, ell_src)
+
+        def _by_dst(vals: jnp.ndarray) -> jnp.ndarray:
+            return _ell_sum(vals, ell_dst)
 
     key = jax.random.PRNGKey(seed)
     keys = jax.random.split(key, n_ticks)
@@ -401,26 +621,46 @@ def _simulate_core(
         qout = qout + out_copies
 
         # 4) SM transfer with per-container capacity
-        #    desired flow matrix if everything in qout were released this tick
-        share = W / jnp.maximum(rowsum, 1e-9)[:, None]
-        F_want = qout[:, None] * share                      # (I, I) copies
-        orig_c = C.T @ F_want.sum(axis=1)                   # per-source-SM traversals
-        arr_c = ((F_want * remote).sum(axis=0)) @ C         # per-dest-SM net arrivals
         sm_budget = dt / jnp.maximum(sm_cost_eff, 1e-9)     # traversals per tick
-        s_c = jnp.minimum(1.0, sm_budget / jnp.maximum(orig_c + arr_c, 1e-9))
-        s_src = C @ s_c
-        s_dst = C @ s_c
-        # a flow is limited by the slowest SM on its path (source SM always;
-        # destination SM only when crossing containers)
-        eff = jnp.minimum(s_src[:, None], jnp.where(remote, s_dst[None, :], 1.0))
-        F = F_want * eff
-        delivered_from = F.sum(axis=1)
+        if backend == "dense":
+            # desired flow matrix if everything in qout were released this tick
+            share = W / jnp.maximum(rowsum, 1e-9)[:, None]
+            F_want = qout[:, None] * share                  # (I, I) copies
+            orig_c = C.T @ F_want.sum(axis=1)               # per-source-SM traversals
+            arr_c = ((F_want * remote).sum(axis=0)) @ C     # per-dest-SM net arrivals
+            s_c = jnp.minimum(1.0, sm_budget / jnp.maximum(orig_c + arr_c, 1e-9))
+            s_src = C @ s_c
+            s_dst = C @ s_c
+            # a flow is limited by the slowest SM on its path (source SM
+            # always; destination SM only when crossing containers)
+            eff = jnp.minimum(
+                s_src[:, None], jnp.where(remote, s_dst[None, :], 1.0)
+            )
+            F = F_want * eff
+            delivered_from = F.sum(axis=1)
+            arrivals = F.sum(axis=0)
+            trav_c = C.T @ F.sum(axis=1) + (F * remote).sum(axis=0) @ C
+        else:
+            # same physics in edge-list form: gather → throttle → gather,
+            # with per-instance CSR sums aggregated to containers by the
+            # (I, K) one-hot matmul (identical grouping, O(E + I·K) per tick)
+            f_want = qout[e_src] * e_share
+            orig_c = _by_src(f_want) @ C
+            arr_c = _by_dst(f_want * e_remote) @ C
+            s_c = jnp.minimum(1.0, sm_budget / jnp.maximum(orig_c + arr_c, 1e-9))
+            eff = jnp.minimum(
+                s_c[e_sc], jnp.where(e_remote > 0, s_c[e_dc], 1.0)
+            )
+            f = f_want * eff
+            delivered_from = _by_src(f)
+            arrivals = _by_dst(f)
+            trav_c = delivered_from @ C + _by_dst(f * e_remote) @ C
         qout = qout - delivered_from
-        qin = qin + jnp.where(is_source, 0.0, F.sum(axis=0))
+        qin = qin + jnp.where(is_source, 0.0, arrivals)
 
         # SM CPU consumed this tick (feeds next tick's contention); padded
         # containers are masked out.
-        trav_c = (C.T @ F.sum(axis=1) + (F * remote).sum(axis=0) @ C) * cont_mask
+        trav_c = trav_c * cont_mask
         sm_cpu = trav_c * sm_cost_eff
 
         # 5) memory sawtooth + GC
@@ -509,21 +749,31 @@ def shard_count(batch: int, devices: int | None = None) -> int:
 
 
 def _get_batch_kernel(batch: int, n_inst: int, n_cont: int, n_ticks: int,
-                      sample_every: int, n_devices: int = 1):
+                      sample_every: int, n_devices: int = 1,
+                      backend: str = "dense", n_edges: int = 0,
+                      d_out: int = 0, d_in: int = 0,
+                      donate_batch: bool = True):
     """``batch`` is the per-device batch when ``n_devices > 1``."""
-    key = (batch, n_inst, n_cont, n_ticks, sample_every, n_devices)
+    # Donate the padded batch buffers (stacked structure arrays,
+    # per-tick loads, seeds): they are rebuilt from host numpy on every
+    # call, so XLA may reuse their memory for outputs — on
+    # 100+-candidate sweeps that halves peak device memory.  CPU XLA
+    # cannot donate (it would only warn), so donation is enabled on
+    # accelerators only.  Resident batches (the staging cache) must
+    # survive the call, so they exclude the structure arrays (arg 0).
+    # The cache key carries the *effective* donate tuple, so on CPU a
+    # resident and a non-resident call at the same shapes share one compile.
+    donate = (0, 1, 2) if donate_batch else (1, 2)
+    if jax.default_backend() == "cpu":
+        donate = ()
+    key = (batch, n_inst, n_cont, n_ticks, sample_every, n_devices,
+           backend, n_edges, d_out, d_in, donate)
     fn = _KERNEL_CACHE.get(key)
     if fn is None:
         _CACHE_STATS["misses"] += 1
-        core = partial(_simulate_core, n_ticks=n_ticks, sample_every=sample_every)
+        core = partial(_simulate_core, n_ticks=n_ticks,
+                       sample_every=sample_every, backend=backend)
         vmapped = jax.vmap(core, in_axes=(0, 0, 0) + (None,) * 7)
-        # Donate the padded batch buffers (stacked structure arrays,
-        # per-tick loads, seeds): they are rebuilt from host numpy on every
-        # call, so XLA may reuse their memory for outputs — on
-        # 100+-candidate sweeps that halves peak device memory.  CPU XLA
-        # cannot donate (it would only warn), so donation is enabled on
-        # accelerators only.
-        donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
         if n_devices > 1:
             # one shard of the batch per device; scalars are broadcast
             fn = jax.pmap(
@@ -541,14 +791,79 @@ def _get_batch_kernel(batch: int, n_inst: int, n_cont: int, n_ticks: int,
 
 def kernel_cache_info() -> dict:
     """Tick-kernel compile-cache statistics.  ``misses`` counts distinct
-    ``(batch, bucket_shape, n_ticks)`` traces — i.e. XLA compilations."""
-    return {"size": len(_KERNEL_CACHE), **_CACHE_STATS}
+    ``(batch, bucket_shape, n_ticks, backend)`` traces — i.e. XLA
+    compilations.  ``entries`` describes each resident compiled kernel
+    (per-device batch, bucket shape, edge bucket, tick count, device count,
+    backend), so BENCH extras record exactly what compiled.
+    """
+    return {
+        "size": len(_KERNEL_CACHE),
+        **_CACHE_STATS,
+        "entries": [
+            {
+                "batch": k[0],
+                "n_inst": k[1],
+                "n_cont": k[2],
+                "n_ticks": k[3],
+                "sample_every": k[4],
+                "devices": k[5],
+                "backend": k[6],
+                "n_edges": k[7],
+                "d_out": k[8],
+                "d_in": k[9],
+            }
+            for k in _KERNEL_CACHE
+        ],
+    }
 
 
 def clear_kernel_cache() -> None:
     _KERNEL_CACHE.clear()
     _CACHE_STATS["hits"] = 0
     _CACHE_STATS["misses"] = 0
+
+
+# ---------------------------------------------------------------------------
+# Device-resident batch cache (staged, stacked structure arrays)
+# ---------------------------------------------------------------------------
+
+#: Stacked + device-resident batch arrays keyed by (configs, params, bucket
+#: shapes, backend, shard layout).  A fleet replan that re-scores the same
+#: pruned candidate ladder reuses the resident buffers instead of paying
+#: np.stack + host→device staging every round.  Value-keyed (Configuration
+#: is hashable-by-value), so identical candidate sets hit regardless of
+#: object identity.  LRU-bounded by entries *and* approximate bytes — a
+#: 512-bucket dense batch would otherwise pin hundreds of MB.
+_RESIDENT_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_RESIDENT_STATS = {"hits": 0, "misses": 0, "bytes": 0}
+_RESIDENT_CACHE_MAX_ENTRIES = 32
+_RESIDENT_CACHE_MAX_BYTES = 1 << 28      # 256 MB of staged batch arrays
+
+
+def _resident_put(key: tuple, arrays: dict) -> None:
+    nbytes = sum(int(np.asarray(v).nbytes) for v in arrays.values())
+    if nbytes > _RESIDENT_CACHE_MAX_BYTES:
+        return                            # larger than the whole budget
+    _RESIDENT_CACHE[key] = (arrays, nbytes)
+    _RESIDENT_STATS["bytes"] += nbytes
+    while (
+        len(_RESIDENT_CACHE) > _RESIDENT_CACHE_MAX_ENTRIES
+        or _RESIDENT_STATS["bytes"] > _RESIDENT_CACHE_MAX_BYTES
+    ):
+        _, (_, evicted) = _RESIDENT_CACHE.popitem(last=False)
+        _RESIDENT_STATS["bytes"] -= evicted
+
+
+def resident_cache_info() -> dict:
+    """Batch-staging (device-residency) cache statistics."""
+    return {"size": len(_RESIDENT_CACHE), **_RESIDENT_STATS}
+
+
+def clear_resident_cache() -> None:
+    _RESIDENT_CACHE.clear()
+    _RESIDENT_STATS["hits"] = 0
+    _RESIDENT_STATS["misses"] = 0
+    _RESIDENT_STATS["bytes"] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -572,10 +887,20 @@ class SimResult:
         half = per_tick[len(per_tick) // 2 :]
         return float(half.mean() / self.params.dt)
 
-    def bottleneck_node(self) -> str | None:
+    def bottleneck_node(
+        self,
+        saturation_threshold: float = 0.8,
+        sm_threshold: float = 0.9,
+    ) -> str | None:
         """Most saturated node (by mean caputil over the last half), or the
-        stream manager when it dominates; ``None`` when nothing exceeds the
-        saturation threshold (no bottleneck observed)."""
+        stream manager when it dominates; ``None`` when nothing exceeds
+        ``saturation_threshold`` (no bottleneck observed).
+
+        The thresholds belong to the *caller's* control policy — an engine
+        evaluator passes its own ``saturation_threshold`` here so policy
+        guards and bottleneck attribution judge saturation by one number
+        (defaults preserve the historical 0.8 / 0.9 cutoffs).
+        """
         cap = np.asarray(self.samples["caputil"])
         half = cap[cap.shape[0] // 2 :].mean(axis=0)
         node_names = self.structure.node_names
@@ -586,9 +911,9 @@ class SimResult:
         sm_cap = np.asarray(self.samples["sm_cpu"])
         sm_busy = sm_cap[sm_cap.shape[0] // 2 :].mean(axis=0).max() if sm_cap.size else 0.0
         name, val = max(per_node.items(), key=lambda kv: kv[1])
-        if sm_busy > val and sm_busy > 0.9:
+        if sm_busy > val and sm_busy > sm_threshold:
             return STREAM_MANAGER
-        return name if val > 0.8 else None
+        return name if val > saturation_threshold else None
 
     def to_metrics_store(self) -> MetricsStore:
         """Package the trajectory as Heron-style metric timeseries."""
@@ -646,10 +971,22 @@ def is_scalar_load(x) -> bool:
 
 
 def _per_tick_trace(offered_ktps, n_ticks: int, dt: float) -> np.ndarray:
-    """Expand a scalar rate or a piecewise-constant trace to per-tick loads."""
+    """Expand a scalar rate or a piecewise-constant trace to per-tick loads.
+
+    A scalar holds for the whole run.  A 1-D trace of length ``L`` is
+    treated as **piecewise-constant**: each entry is held for
+    ``ceil(n_ticks / L)`` consecutive ticks (entry-wise repetition, not
+    whole-sequence tiling), and the expansion is truncated to ``n_ticks``
+    — so when ``L`` does not divide ``n_ticks`` the final entries get
+    proportionally fewer ticks (a trace longer than ``n_ticks`` simply
+    truncates).  An empty trace is ambiguous (there is no rate to hold)
+    and raises.
+    """
     offered = np.asarray(offered_ktps, np.float64)
     if offered.ndim == 0:
         return np.full(n_ticks, float(offered) * dt)
+    if offered.shape[0] == 0:
+        raise ValueError("offered_ktps trace is empty: no rate to hold")
     reps = int(np.ceil(n_ticks / offered.shape[0]))
     return np.repeat(offered, reps)[:n_ticks] * dt
 
@@ -664,6 +1001,10 @@ def simulate_batch(
     min_cont_bucket: int = 0,
     devices: int | None = None,
     min_batch_bucket: int = 0,
+    tick_kernel: str = "auto",
+    min_edge_bucket: int = 0,
+    min_degree_bucket: int = 0,
+    resident: bool = False,
 ) -> list[SimResult]:
     """Evaluate N configurations in one vmapped (and device-sharded) call.
 
@@ -692,6 +1033,27 @@ def simulate_batch(
     ``SimulatorEvaluator(sticky_batch=True)``).  Padding rows are data-
     parallel replicas sliced away on unpack — results stay bitwise-identical
     to the unbucketed call.
+
+    ``tick_kernel`` selects the per-tick flow physics: ``"dense"`` (the
+    (I, I) flow-matrix oracle), ``"sparse"`` (edge-list gathers + ELL
+    segment sums, O(E) per tick — numerically equivalent to dense, to
+    float tolerance), or ``"auto"`` (sparse when the batch's densest
+    structure sits below :data:`SPARSE_DENSITY_THRESHOLD`; the decision
+    uses unpadded counts, so bucket floors never flip it).  The sparse
+    edge axis is padded to :data:`EDGE_LADDER` with the sticky
+    ``min_edge_bucket`` floor, and the ELL row widths to
+    :data:`DEGREE_LADDER` buckets with the sticky ``min_degree_bucket``
+    floor; padded edges
+    carry zero share and padded ELL slots gather an exact 0.0, so results
+    are bitwise invariant to both buckets.
+
+    ``resident=True`` caches the stacked, *device-resident* structure
+    arrays keyed by (configs, params, buckets, backend, shard layout): a
+    caller that re-submits the same candidate set — a fleet replan
+    re-scoring its pruned ladder — skips ``np.stack`` and host→device
+    staging entirely (see :func:`resident_cache_info`; per-tick loads and
+    seeds are still staged fresh each call).  Resident structure buffers
+    are excluded from XLA donation so they survive the call.
     """
     configs = list(configs)
     if not configs:
@@ -702,6 +1064,22 @@ def simulate_batch(
     structures = [structure_for(c, params) for c in configs]
     n_inst_b = bucket_size(max(st.n_inst for st in structures), min_inst_bucket)
     n_cont_b = bucket_size(max(st.n_cont for st in structures), min_cont_bucket)
+    backend = resolve_tick_kernel(
+        max(st.n_inst for st in structures),
+        max(st.n_edges for st in structures),
+        tick_kernel,
+    )
+    n_edge_b = d_out_b = d_in_b = None
+    if backend == "sparse":
+        n_edge_b = edge_bucket_size(
+            max(st.n_edges for st in structures), min_edge_bucket
+        )
+        d_out_b = degree_bucket_size(
+            max(st.d_out for st in structures), min_degree_bucket
+        )
+        d_in_b = degree_bucket_size(
+            max(st.d_in for st in structures), min_degree_bucket
+        )
 
     n_ticks = int(duration_s / params.dt)
     n_ticks = (n_ticks // params.sample_every) * params.sample_every
@@ -721,11 +1099,6 @@ def simulate_batch(
     if len(seeds) != B:
         raise ValueError("seeds must match configs")
 
-    padded = [_padded_for(st, params, n_inst_b, n_cont_b) for st in structures]
-    stacked = {k: np.stack([p[k] for p in padded]) for k in padded[0]}
-    per_tick_in = np.asarray(per_tick, np.float32)
-    seeds_in = np.asarray(seeds, np.int32)
-
     # pad the batch axis: up to the batch bucket (if any), then to a multiple
     # of the shard count, by replicating the last row (replicas are sliced
     # away below); then add the device axis when sharded
@@ -736,17 +1109,56 @@ def simulate_batch(
         if n_dev > 1:
             a = a.reshape(n_dev, -1, *a.shape[1:])
         return a
-    if fill or n_dev > 1:
-        stacked = {k: shard(v) for k, v in stacked.items()}
-        per_tick_in = shard(per_tick_in)
-        seeds_in = shard(seeds_in)
     per_dev_B = (B + fill) // n_dev
 
+    stage_key = None
+    stacked_dev = None
+    if resident:
+        stage_key = (
+            tuple(configs), params, n_inst_b, n_cont_b, n_edge_b, d_out_b,
+            d_in_b, backend, n_dev, fill,
+        )
+        hit = _RESIDENT_CACHE.get(stage_key)
+        if hit is not None:
+            _RESIDENT_STATS["hits"] += 1
+            _RESIDENT_CACHE.move_to_end(stage_key)
+            stacked_dev = hit[0]
+        else:
+            _RESIDENT_STATS["misses"] += 1
+    if stacked_dev is None:
+        padded = [
+            _padded_for(st, params, n_inst_b, n_cont_b, n_edge_b, d_out_b, d_in_b)
+            for st in structures
+        ]
+        stacked = {k: np.stack([p[k] for p in padded]) for k in padded[0]}
+        if fill or n_dev > 1:
+            stacked = {k: shard(v) for k, v in stacked.items()}
+        if n_dev > 1:
+            # place each shard on its pmap device up front — a resident hit
+            # then re-enters pmap with zero host→device transfers
+            devs = jax.local_devices()[:n_dev]
+            stacked_dev = {
+                k: jax.device_put_sharded(list(v), devs)
+                for k, v in stacked.items()
+            }
+        else:
+            stacked_dev = {k: jnp.asarray(v) for k, v in stacked.items()}
+        if stage_key is not None:
+            _resident_put(stage_key, stacked_dev)
+
+    per_tick_in = np.asarray(per_tick, np.float32)
+    seeds_in = np.asarray(seeds, np.int32)
+    if fill or n_dev > 1:
+        per_tick_in = shard(per_tick_in)
+        seeds_in = shard(seeds_in)
+
     kernel = _get_batch_kernel(
-        per_dev_B, n_inst_b, n_cont_b, n_ticks, params.sample_every, n_dev
+        per_dev_B, n_inst_b, n_cont_b, n_ticks, params.sample_every, n_dev,
+        backend, n_edge_b or 0, d_out_b or 0, d_in_b or 0,
+        donate_batch=not resident,
     )
     samples = kernel(
-        {k: jnp.asarray(v) for k, v in stacked.items()},
+        stacked_dev,
         jnp.asarray(per_tick_in),
         jnp.asarray(seeds_in),
         params.dt,
@@ -818,6 +1230,10 @@ def simulate_grid(
     min_cont_bucket: int = 0,
     devices: int | None = None,
     min_batch_bucket: int = 0,
+    tick_kernel: str = "auto",
+    min_edge_bucket: int = 0,
+    min_degree_bucket: int = 0,
+    resident: bool = False,
 ) -> list[list[SimResult]]:
     """Score C configurations × R offered rates in ONE batched kernel call.
 
@@ -840,6 +1256,10 @@ def simulate_grid(
             min_cont_bucket=min_cont_bucket,
             devices=devices,
             min_batch_bucket=min_batch_bucket,
+            tick_kernel=tick_kernel,
+            min_edge_bucket=min_edge_bucket,
+            min_degree_bucket=min_degree_bucket,
+            resident=resident,
         )
 
     return _grid_through_batch(batch, configs, rates_ktps)
@@ -850,6 +1270,7 @@ def simulate(
     offered_ktps,
     duration_s: float = 20.0,
     params: SimParams = SimParams(),
+    tick_kernel: str = "auto",
 ) -> SimResult:
     """Run ``config`` under ``offered_ktps`` (scalar or per-sample array).
 
@@ -857,7 +1278,8 @@ def simulate(
     repeated calls in the same bucket share a single XLA compilation.
     """
     return simulate_batch(
-        [config], [offered_ktps], duration_s, params, seeds=[params.seed]
+        [config], [offered_ktps], duration_s, params, seeds=[params.seed],
+        tick_kernel=tick_kernel,
     )[0]
 
 
@@ -866,10 +1288,13 @@ def measure_capacity(
     params: SimParams = SimParams(),
     duration_s: float = 20.0,
     overload_ktps: float = 1e6,
+    tick_kernel: str = "auto",
 ) -> float:
     """The 'measured rate' of a configuration: offered load far above capacity,
     backpressure gating throttles spouts, steady-state admission = capacity."""
-    return simulate(config, overload_ktps, duration_s, params).achieved_ktps
+    return simulate(
+        config, overload_ktps, duration_s, params, tick_kernel=tick_kernel
+    ).achieved_ktps
 
 
 def training_sweep(
@@ -877,6 +1302,7 @@ def training_sweep(
     rates_ktps,
     params: SimParams = SimParams(),
     seconds_per_rate: float = 10.0,
+    tick_kernel: str = "auto",
 ) -> MetricsStore:
     """The paper's profiling procedure (§5.1): sweep a throttled producer over
     a range of rates with hold times, collect metrics at each level.
@@ -889,7 +1315,7 @@ def training_sweep(
     seeds = [params.seed + 1000 + i for i in range(len(rates))]
     results = simulate_batch(
         [config] * len(rates), rates, duration_s=seconds_per_rate,
-        params=params, seeds=seeds,
+        params=params, seeds=seeds, tick_kernel=tick_kernel,
     )
     store = MetricsStore()
     for res in results:
