@@ -1,0 +1,214 @@
+"""Cache-first evaluation path: dedup factor, memoization, wall clock.
+
+Three questions, one bench:
+
+* **In-batch dedup (Tier 1)** — a fleet replan submits one row per tenant,
+  but tenants cluster into archetypes (same DAG, same target, same seed).
+  At 10 / 100 / 1,000 tenants (override with ``BENCH_EVAL_TENANTS=10,100``)
+  over {2, 8, all-distinct} archetypes: how many tick-kernel rows actually
+  execute, and what does the collapse buy in wall time?  The headline
+  assert mirrors the tests: with ≤8 archetypes and enough tenants the
+  deduped batch must execute **≥5× fewer** kernel rows than the undeduped
+  escape hatch — and return bitwise-identical results.
+* **Steady-trace memoization (Tier 2)** — a :class:`ControlLoop` on a
+  constant load: after warmup every step re-evaluates an unchanged
+  (config, load) pair, so the evaluator's :class:`ResultCache` must answer
+  **≥90%** of evaluations without touching the kernel.
+* **Cold vs warm capacity probe** — ``measure_capacity`` with an explicit
+  :class:`ResultCache`: the second identical probe is a dict lookup.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from .common import EXTRAS, emit, timed
+
+_DEFAULT_COUNTS = "10,100,1000"
+#: minimum headline dedup factor (acceptance floor, asserted when the
+#: tenant count gives the archetype pattern room to reach it)
+MIN_DEDUP_FACTOR = 5.0
+#: minimum steady-state result-cache hit rate after warmup
+MIN_HIT_RATE = 0.90
+WARMUP_STEPS = 4
+TRACE_STEPS = 24
+
+
+def _assert_bitwise(a, b, ctx: str) -> None:
+    """Two SimResult lists must be indistinguishable at the bit level."""
+    assert len(a) == len(b), f"{ctx}: row counts differ"
+    for i, (x, y) in enumerate(zip(a, b)):
+        assert x.samples.keys() == y.samples.keys()
+        for k in x.samples:
+            ax, ay = np.asarray(x.samples[k]), np.asarray(y.samples[k])
+            assert ax.dtype == ay.dtype and np.array_equal(ax, ay), (
+                f"{ctx}: row {i} sample {k!r} not bitwise identical"
+            )
+
+
+def _rows(n: int, archetypes: int | None):
+    """One batch row per tenant: ``archetypes`` distinct (load, seed)
+    patterns cycled over ``n`` tenants (``None`` = every row distinct)."""
+    from repro.core import Configuration, ContainerDim
+    from repro.streams import wordcount
+
+    dim = ContainerDim(cpus=3.0, mem_mb=4096.0)
+    cfg = Configuration(wordcount(), packing=(("W",), ("C",)), dims=(dim, dim))
+    a = archetypes or n
+    configs = [cfg] * n
+    loads = [200.0 + 15.0 * (i % a) for i in range(n)]
+    seeds = [7 + (i % a) for i in range(n)]
+    return configs, loads, seeds
+
+
+def _dedup_curve(counts: list[int]) -> dict:
+    from repro.streams import (
+        SimParams,
+        clear_dedup_stats,
+        dedup_info,
+        simulate_batch,
+    )
+
+    params = SimParams()
+    curve: dict[str, dict] = {}
+    for n in counts:
+        for label, arch in (("2", 2), ("8", 8), ("distinct", None)):
+            configs, loads, seeds = _rows(n, arch)
+            kw = dict(duration_s=1.0, params=params, seeds=seeds)
+            # escape hatch = today's behavior: every row runs the kernel
+            plain, us_plain = timed(
+                simulate_batch, configs, loads, dedup=False,
+                repeats=1, warmup=1, **kw,
+            )
+            clear_dedup_stats()
+            deduped, us_dedup = timed(
+                simulate_batch, configs, loads, dedup=True,
+                repeats=1, warmup=1, **kw,
+            )
+            info = dedup_info()
+            # timed() ran 2 calls (warmup + measured)
+            factor = info["rows_in"] / max(info["rows_executed"], 1)
+            _assert_bitwise(plain, deduped, f"dedup {n}t/{label}")
+            speedup = us_plain / max(us_dedup, 1e-9)
+            emit(
+                f"eval_cache_dedup_{n}t_{label}arch",
+                us_dedup,
+                f"factor={factor:.1f}x;speedup={speedup:.2f}x_vs_undeduped",
+            )
+            curve[f"{n}t_{label}"] = {
+                "us_deduped": round(us_dedup, 1),
+                "us_undeduped": round(us_plain, 1),
+                "rows_in": info["rows_in"],
+                "rows_executed": info["rows_executed"],
+                "factor": round(factor, 2),
+                "speedup": round(speedup, 2),
+            }
+            # the acceptance floor applies once the pattern has room: n
+            # tenants over a archetypes can collapse at most n/a-fold
+            if arch is not None and n >= MIN_DEDUP_FACTOR * arch:
+                assert factor >= MIN_DEDUP_FACTOR, (
+                    f"{n} tenants over {arch} archetypes must execute "
+                    f">={MIN_DEDUP_FACTOR:.0f}x fewer kernel rows "
+                    f"(got {factor:.2f}x)"
+                )
+    return curve
+
+
+def _steady_trace_hit_rate() -> dict:
+    from repro.control import ControlLoop, DeclarativePolicy, GuardBands, ModelStore
+    from repro.core import oracle_models
+    from repro.streams import SimParams, SimulatorEvaluator, wordcount
+
+    params = SimParams()
+    dag = wordcount()
+    models = oracle_models(dag, params.sm_cost_per_ktuple)
+    ev = SimulatorEvaluator(params=params, duration_s=2.0)
+    loop = ControlLoop(
+        DeclarativePolicy(dag, ModelStore(models)),
+        guards=GuardBands(headroom=1.2, deadband=0.15),
+        evaluator=ev,
+        learner=ModelStore(models),
+    )
+    trace = [60.0] * TRACE_STEPS
+    t0 = time.perf_counter()
+    loop.run(trace[:WARMUP_STEPS])
+    warm = ev.result_cache.info()
+    loop.run(trace[WARMUP_STEPS:])
+    us_step = (
+        (time.perf_counter() - t0) / TRACE_STEPS * 1e6
+    )
+    after = ev.result_cache.info()
+    hits = after["hits"] - warm["hits"]
+    misses = after["misses"] - warm["misses"]
+    rate = hits / max(hits + misses, 1)
+    emit(
+        "eval_cache_steady_trace",
+        us_step,
+        f"hit_rate={rate:.2f};steps={TRACE_STEPS}",
+    )
+    assert rate >= MIN_HIT_RATE, (
+        f"steady-trace result-cache hit rate after warmup must be "
+        f">={MIN_HIT_RATE:.0%} (got {rate:.0%} over {hits + misses} lookups)"
+    )
+    return {
+        "hit_rate": round(rate, 3),
+        "hits": hits,
+        "misses": misses,
+        "us_per_step": round(us_step, 1),
+    }
+
+
+def _cold_vs_warm_capacity() -> dict:
+    from repro.core import Configuration, ContainerDim
+    from repro.streams import ResultCache, SimParams, measure_capacity, wordcount
+
+    params = SimParams()
+    dim = ContainerDim(cpus=3.0, mem_mb=4096.0)
+    cfg = Configuration(wordcount(), packing=(("W",), ("C",)), dims=(dim, dim))
+    rc = ResultCache(name="bench_capacity")
+    t0 = time.perf_counter()
+    cap_cold = measure_capacity(cfg, params, duration_s=4.0, cache=rc)
+    us_cold = (time.perf_counter() - t0) * 1e6
+    cap_warm, us_warm = timed(
+        measure_capacity, cfg, params, duration_s=4.0, cache=rc,
+        repeats=5, warmup=0,
+    )
+    assert cap_warm == cap_cold, "warm capacity probe must replay the cold one"
+    speedup = us_cold / max(us_warm, 1e-9)
+    emit(
+        "eval_cache_capacity_warm",
+        us_warm,
+        f"cold_us={us_cold:.0f};speedup={speedup:.0f}x",
+    )
+    return {
+        "us_cold": round(us_cold, 1),
+        "us_warm": round(us_warm, 1),
+        "speedup": round(speedup, 1),
+        "capacity_ktps": round(cap_cold, 1),
+    }
+
+
+def run() -> dict:
+    from repro.streams import cache_stats
+
+    counts = sorted(
+        int(x)
+        for x in os.environ.get(
+            "BENCH_EVAL_TENANTS", _DEFAULT_COUNTS
+        ).split(",")
+        if x.strip()
+    )
+    out = {
+        "dedup": _dedup_curve(counts),
+        "steady_trace": _steady_trace_hit_rate(),
+        "capacity_probe": _cold_vs_warm_capacity(),
+        "cache_stats": cache_stats(),
+    }
+    EXTRAS["eval_cache"] = out
+    return out
+
+
+if __name__ == "__main__":
+    run()

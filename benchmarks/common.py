@@ -44,6 +44,18 @@ def _kernel_cache_snapshot() -> dict | None:
         return None
 
 
+def _cache_stats_snapshot() -> dict | None:
+    """Unified cache hierarchy counters (kernel / structure / resident /
+    result / dedup) for the run — the cache-first evaluation path's whole
+    story in one place, so hit-rate regressions show up next to wall time."""
+    try:
+        from repro.streams import cache_stats
+
+        return cache_stats()
+    except Exception:
+        return None
+
+
 def dump_json(path: str | None = None) -> str | None:
     """Write the collected rows as BENCH JSON.  ``path`` defaults to the
     ``BENCH_JSON`` environment variable; no-op when neither is set."""
@@ -55,6 +67,7 @@ def dump_json(path: str | None = None) -> str | None:
         "generated_unix": int(time.time()),
         "results": RESULTS,
         "kernel_cache": _kernel_cache_snapshot(),
+        "caches": _cache_stats_snapshot(),
         "extras": EXTRAS,
     }
     with open(path, "w") as f:

@@ -25,6 +25,7 @@ BENCHES = [
     ("speed", "bench_speed", "Paper §4/§5 — predict/allocate latency + LP bench"),
     ("kernels", "bench_kernels", "Pallas kernels vs jnp oracles"),
     ("tick", "bench_tick", "Tick kernel — dense vs sparse ELL flow physics + batch staging"),
+    ("eval_cache", "bench_eval_cache", "Cache-first evaluation path — dedup factor + memoization hit rate"),
 ]
 
 

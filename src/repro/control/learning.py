@@ -59,8 +59,10 @@ class ModelStore:
         self.max_pooled_samples = max_pooled_samples
         #: monotonic mutation counter: bumped whenever calibration state or
         #: the node models change, so downstream memos (the fleet
-        #: scheduler's candidate-ladder cache) can key on it instead of
-        #: hashing model contents every replan
+        #: scheduler's candidate-ladder cache, the engine layer's
+        #: evaluation ResultCache via ``version_source``) can key on it
+        #: instead of hashing model contents every replan — a bump makes
+        #: every result computed under the old models unreachable
         self.version = 0
 
     # -- calibration (predict-back, §4) -------------------------------------

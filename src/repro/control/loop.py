@@ -286,6 +286,16 @@ class ControlLoop:
         self.evaluator = evaluator
         self.measure = measure
         self.learner = learner
+        # a result-caching evaluator keys entries on its version_source's
+        # ``version``: wire the learner in when the caller left it unset,
+        # so every observe/retrain invalidates cached evaluations (the
+        # models the cache was filled under no longer exist)
+        if (
+            learner is not None
+            and evaluator is not None
+            and getattr(evaluator, "version_source", False) is None
+        ):
+            evaluator.version_source = learner
         self.forecaster = forecaster
         self.horizon = max(1, int(horizon))
         self.forecast_tracker = (

@@ -118,6 +118,23 @@ class FleetEvent:
         return self.replanned and self.cause == "forecast"
 
 
+class _ModelVersionClock:
+    """Fleet-wide result-cache invalidation token: the tuple of every
+    tenant :class:`~repro.control.learning.ModelStore`'s ``version``
+    counter.  Any observe/retrain anywhere in the fleet changes the tuple,
+    so evaluations cached before that calibration can no longer be
+    returned (see ``SimulatorEvaluator.version_source``)."""
+
+    __slots__ = ("_stores",)
+
+    def __init__(self, stores) -> None:
+        self._stores = tuple(stores)
+
+    @property
+    def version(self) -> tuple:
+        return tuple(s.version for s in self._stores)
+
+
 class FleetLoop:
     """The fleet-wide sense→plan→act→learn driver.
 
@@ -146,6 +163,20 @@ class FleetLoop:
         self.tenants = list(tenants)
         self.cluster = cluster
         self.evaluator = evaluator
+        # wire the result cache's invalidation clock when the evaluator
+        # supports one and the caller left it unset: per-tenant ModelStore
+        # version bumps (observe on saturated measurements, retrain) must
+        # miss, while steady replans keep hitting
+        stores = [
+            t.models for t in self.tenants
+            if getattr(t.models, "version", None) is not None
+        ]
+        if (
+            evaluator is not None
+            and stores
+            and getattr(evaluator, "version_source", False) is None
+        ):
+            evaluator.version_source = _ModelVersionClock(stores)
         self.scheduler = FleetScheduler(
             cluster, evaluator, feasibility_threshold=saturation_threshold,
             incremental=incremental, move_budget=move_budget,

@@ -197,6 +197,11 @@ class FleetPlan:
     #: wall-time (seconds) per scheduling phase:
     #: restore / allocate / pack / score / repair / total
     timings: dict = dataclasses.field(default_factory=dict)
+    #: evaluator rows *submitted* by this round's joint score (capacity
+    #: probes + window rates across every touched tenant's candidate set).
+    #: Pair with ``repro.streams.dedup_info()``'s ``rows_executed`` to read
+    #: the cross-tenant dedup factor straight off a plan.
+    eval_rows: int = 0
 
     @property
     def cores_free(self) -> float:
@@ -339,11 +344,14 @@ class FleetScheduler:
         # state re-derives the same (dim × rounding) ladder every replan;
         # memoizing the closed-form allocations keeps the *same*
         # Configuration objects flowing into the evaluator, so its
-        # identity-keyed layout memo and the simulator's value-keyed
-        # device-resident batch cache both hit.  The models version token
-        # (see ModelStore.version) invalidates on observe/retrain; plain
-        # mappings are treated as immutable.  Values hold the spec so the
-        # id in the key stays valid.
+        # identity-keyed layout memo, the simulator's value-keyed
+        # device-resident batch cache, and the cache-first evaluation path
+        # (in-batch dedup + the evaluator's ResultCache) all hit.  The
+        # models version token (see ModelStore.version) invalidates on
+        # observe/retrain — the same token the result cache keys on, so
+        # both layers stale out together; plain mappings are treated as
+        # immutable.  Values hold the spec so the id in the key stays
+        # valid.
         self._cand_memo: OrderedDict[tuple, tuple] = OrderedDict()
 
     @staticmethod
@@ -397,6 +405,7 @@ class FleetScheduler:
         timings = {
             k: 0.0 for k in ("restore", "allocate", "pack", "score", "repair")
         }
+        eval_rows = 0
 
         # -- warm state: re-seat the previous plan's residency ---------------
         t0 = time.perf_counter()
@@ -569,7 +578,7 @@ class FleetScheduler:
         # repair: a provisional winner that misses its planned rate is
         # swapped for the cheapest candidate that delivers it.
         if self.evaluator is not None:
-            self._score_and_repair(
+            eval_rows = self._score_and_repair(
                 by_tenant, cand_sets, chosen, prefer_of, windows, hosts,
                 timings,
             )
@@ -595,6 +604,7 @@ class FleetScheduler:
             touched=tuple(replanned),
             deferred=tuple(deferred),
             timings=timings,
+            eval_rows=eval_rows,
         )
 
     # -- warm state -----------------------------------------------------------
@@ -1040,7 +1050,7 @@ class FleetScheduler:
         windows: "Mapping[str, Sequence[float]] | None",
         hosts: list[Host],
         timings: dict,
-    ) -> None:
+    ) -> int:
         t0 = time.perf_counter()
         groups: list[list[Configuration]] = []
         loads: list = []
@@ -1068,7 +1078,8 @@ class FleetScheduler:
                 )
             spans.append((a, cands, pos, speeds, window))
         if not groups:
-            return
+            return 0
+        eval_rows = sum(len(g) for g in groups)
         evals = evaluate_jobs_with(self.evaluator, groups, loads)
         timings["score"] += time.perf_counter() - t0
         t0 = time.perf_counter()
@@ -1105,6 +1116,7 @@ class FleetScheduler:
             )
             i += 1 + len(window)
         timings["repair"] += time.perf_counter() - t0
+        return eval_rows
 
     def _repair(
         self,

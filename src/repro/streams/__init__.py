@@ -18,9 +18,11 @@ from .simulator import (
     SimResult,
     batch_bucket_size,
     bucket_size,
+    clear_dedup_stats,
     clear_kernel_cache,
     clear_resident_cache,
     clear_structure_cache,
+    dedup_info,
     degree_bucket_size,
     edge_bucket_size,
     kernel_cache_info,
@@ -34,6 +36,12 @@ from .simulator import (
     simulate_grid,
     structure_cache_info,
     training_sweep,
+)
+from .cache import (
+    ResultCache,
+    cache_stats,
+    clear_result_caches,
+    result_cache_info,
 )
 from .engine import (
     OVERLOAD_KTPS,
@@ -51,14 +59,18 @@ __all__ = [
     "DEGREE_LADDER",
     "EDGE_LADDER", "WORKLOADS", "ConfigEvaluator", "EvalResult",
     "ExecutorEvaluator",
-    "OVERLOAD_KTPS", "PerCandidateLoads", "SimParams", "SimResult",
+    "OVERLOAD_KTPS", "PerCandidateLoads", "ResultCache", "SimParams",
+    "SimResult",
     "SimulatorEvaluator",
-    "adanalytics", "batch_bucket_size", "bucket_size", "clear_kernel_cache",
-    "clear_resident_cache", "clear_structure_cache", "deep_pipeline",
+    "adanalytics", "batch_bucket_size", "bucket_size", "cache_stats",
+    "clear_dedup_stats", "clear_kernel_cache",
+    "clear_resident_cache", "clear_result_caches", "clear_structure_cache",
+    "dedup_info", "deep_pipeline",
     "degree_bucket_size",
     "diamond", "edge_bucket_size", "evaluate_grid_with", "evaluate_jobs_with",
     "kernel_cache_info", "measure_capacity", "mobile_analytics",
     "pad_structure", "resident_cache_info", "resolve_tick_kernel",
+    "result_cache_info",
     "shard_count", "simulate", "simulate_batch",
     "simulate_grid", "sources", "structure_cache_info", "training_sweep",
     "wordcount",

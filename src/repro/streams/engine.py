@@ -29,6 +29,7 @@ from ..core.dag import Configuration, DagSpec
 from ..core.flow_solver import solve_flow
 from ..core.metrics import STREAM_MANAGER
 from ..core.node_model import oracle_models
+from .cache import ResultCache
 from .simulator import (
     SimParams,
     SimResult,
@@ -264,6 +265,20 @@ class SimulatorEvaluator:
     repeated submissions skip ``np.stack`` + host→device transfer (results
     stay bitwise identical).  ``saturation_threshold`` is forwarded to
     :meth:`SimResult.bottleneck_node` when labelling the limiting component.
+
+    ``dedup`` / ``cache`` turn on the cache-first evaluation path
+    (:func:`~repro.streams.simulator.simulate_batch` Tiers 1 and 2):
+    value-identical rows in one batch collapse to one kernel row, and
+    unique rows are memoized across calls in a per-evaluator
+    :class:`~repro.streams.cache.ResultCache` (``cache=True`` builds one;
+    pass an instance to share it, ``False`` to disable).  Both tiers are
+    bitwise-transparent — ``SimulatorEvaluator(dedup=False, cache=False)``
+    is the escape hatch reproducing the uncached path exactly.
+    ``version_source`` is the invalidation hook: any object exposing a
+    ``version`` attribute (a :class:`~repro.control.learning.ModelStore`,
+    or the fleet loop's aggregate clock) is folded into every cache key,
+    so calibration/retrain bumps make stale entries unreachable.  The
+    control/fleet loops wire it automatically when left unset.
     """
 
     def __init__(
@@ -276,6 +291,9 @@ class SimulatorEvaluator:
         tick_kernel: str = "auto",
         resident_batches: bool = True,
         saturation_threshold: float = 0.8,
+        dedup: bool = True,
+        cache: "bool | ResultCache" = True,
+        version_source=None,
     ) -> None:
         self.params = params
         self.duration_s = duration_s
@@ -285,6 +303,14 @@ class SimulatorEvaluator:
         self.tick_kernel = tick_kernel
         self.resident_batches = resident_batches
         self.saturation_threshold = saturation_threshold
+        self.dedup = dedup
+        if cache is True:
+            cache = ResultCache(name="simulator")
+        # identity test, not truthiness: an *empty* ResultCache is len() 0
+        self.result_cache: ResultCache | None = (
+            cache if isinstance(cache, ResultCache) else None
+        )
+        self.version_source = version_source
         self._inst_floor = 0
         self._cont_floor = 0
         self._batch_floor = 0
@@ -337,6 +363,15 @@ class SimulatorEvaluator:
             self._layout_memo.popitem(last=False)
         return n_inst, n_cont, n_edges, d_max
 
+    def _cache_token(self):
+        """Invalidation token folded into every result-cache key: the
+        ``version`` of :attr:`version_source` (``None`` when unwired —
+        cached entries then live until LRU eviction)."""
+        vs = self.version_source
+        if vs is None:
+            return None
+        return ("models", getattr(vs, "version", None))
+
     def evaluate(
         self, config: Configuration, offered_ktps: float = OVERLOAD_KTPS
     ) -> EvalResult:
@@ -380,6 +415,9 @@ class SimulatorEvaluator:
             min_edge_bucket=self._edge_floor,
             min_degree_bucket=self._degree_floor,
             resident=self.resident_batches,
+            dedup=self.dedup,
+            cache=self.result_cache,
+            cache_token=self._cache_token(),
         )
         return [
             EvalResult(
@@ -428,6 +466,14 @@ class ExecutorEvaluator:
     is then scored by the LP flow solver under the calibrated per-node costs.
     The bottleneck is the most-saturated component at the solved rates,
     mirroring :meth:`SimResult.bottleneck_node` semantics.
+
+    ``cache`` memoizes whole :class:`EvalResult`\\ s by value across calls
+    (Tier 2 of the cache-first path, same contract as
+    :class:`SimulatorEvaluator`): the key is the calibration identity
+    (DagSpec value + operator-body ids), the configuration, the offered
+    load, the scoring thresholds, and the ``version_source`` token — so a
+    fleet step that re-scores an unchanged candidate set skips the LP
+    entirely, and any model/calibration version bump invalidates.
     """
 
     def __init__(
@@ -436,11 +482,22 @@ class ExecutorEvaluator:
         floor_ktps: float = 50.0,
         sm_cost_per_ktuple: float = SimParams.sm_cost_per_ktuple,
         saturation_threshold: float = 0.8,
+        cache: "bool | ResultCache" = True,
+        version_source=None,
     ) -> None:
         self.n_batches = n_batches
         self.floor_ktps = floor_ktps
         self.sm_cost_per_ktuple = sm_cost_per_ktuple
         self.saturation_threshold = saturation_threshold
+        if cache is True:
+            # EvalResults are tiny (no sim payload): bound by entries
+            cache = ResultCache(
+                name="executor", max_entries=65536, max_bytes=1 << 24
+            )
+        self.result_cache: ResultCache | None = (
+            cache if isinstance(cache, ResultCache) else None
+        )
+        self.version_source = version_source
         # keyed by the DagSpec *value* plus its operator-body identities:
         # DagSpec equality excludes NodeSpec.fn (compare=False), but fn is
         # exactly what this backend times — two DAGs with identical declared
@@ -495,8 +552,32 @@ class ExecutorEvaluator:
         re-parameterize the simulator's physical truth."""
         return self._dag_for(dag)
 
+    def _eval_key(self, config: Configuration, offered: float):
+        token = None
+        if self.version_source is not None:
+            token = getattr(self.version_source, "version", None)
+        return (
+            self._cache_key(config.dag), config, float(offered),
+            self.saturation_threshold, self.sm_cost_per_ktuple, token,
+        )
+
     def evaluate(
         self, config: Configuration, offered_ktps: float = OVERLOAD_KTPS
+    ) -> EvalResult:
+        key = None
+        if self.result_cache is not None and is_scalar_load(offered_ktps):
+            key = self._eval_key(config, float(offered_ktps))
+            hit = self.result_cache.get(key)
+            if hit is not None:
+                return hit
+        result = self._evaluate_uncached(config, offered_ktps)
+        if key is not None:
+            # frozen EvalResult without a sim payload: nominal footprint
+            self.result_cache.put(key, result, nbytes=128)
+        return result
+
+    def _evaluate_uncached(
+        self, config: Configuration, offered_ktps: float
     ) -> EvalResult:
         dag2 = self._dag_for(config.dag)
         cfg2 = Configuration(dag2, config.packing, config.dims)

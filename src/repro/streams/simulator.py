@@ -120,19 +120,27 @@ def build_structure(config: Configuration, params: SimParams) -> SimStructure:
     src_names = {s.name for s in dag.sources()}
     is_source = np.array([nm in src_names for nm, _c, _s in instances])
 
-    specs = [dag.node(nm) for nm, _c, _s in instances]
-    busy_cost = np.array([s.cpu_cost_per_ktuple for s in specs])
+    # per-NODE cost vectors gathered onto instances by ``node_of`` fancy
+    # indexing — O(nodes + instances) instead of an attribute-access loop
+    # over every instance
+    node_specs = [dag.node(nm) for nm in dag.node_names]
+    busy_cost = np.array([s.cpu_cost_per_ktuple for s in node_specs])[node_of]
     cpu_cost = np.array(
-        [s.cpu_cost_per_ktuple * (1.0 - s.io_fraction) * params.cpu_overhead_mult for s in specs]
-    )
-    gamma = np.array([s.gamma for s in specs])
-    mem_base = np.array([s.mem_mb_base for s in specs])
-    mem_slope = np.array([s.mem_mb_per_ktps for s in specs])
+        [s.cpu_cost_per_ktuple * (1.0 - s.io_fraction) * params.cpu_overhead_mult
+         for s in node_specs]
+    )[node_of]
+    gamma = np.array([s.gamma for s in node_specs])[node_of]
+    mem_base = np.array([s.mem_mb_base for s in node_specs])[node_of]
+    mem_slope = np.array([s.mem_mb_per_ktps for s in node_specs])[node_of]
 
     inst_of_node: dict[str, list[int]] = {}
     for i, (nm, _c, _s) in enumerate(instances):
         inst_of_node.setdefault(nm, []).append(i)
 
+    # routing weights: one block-add per DAG edge (``np.ix_`` outer index)
+    # replaces the O(|ups|·|downs|) Python inner loops.  Accumulation stays
+    # edge-major exactly like the loop form, so repeated edges between the
+    # same node pair sum in the same order — bitwise-identical W.
     W = np.zeros((n_inst, n_inst))
     for e in dag.edges:
         ups = inst_of_node.get(e.src, [])
@@ -140,30 +148,22 @@ def build_structure(config: Configuration, params: SimParams) -> SimStructure:
         if not ups or not downs:
             raise ValueError(f"edge {e.src}->{e.dst} lacks instances")
         w = 1.0 if e.grouping is Grouping.ALL else 1.0 / len(downs)
-        for p in ups:
-            for q in downs:
-                W[p, q] += w
+        W[np.ix_(ups, downs)] += w
     remote = cont_of[:, None] != cont_of[None, :]
-
-    # fan-out overhead: number of distinct remote peer containers each SM talks to
-    sm_cost_eff = np.zeros(n_cont)
-    for c in range(n_cont):
-        peers = set()
-        for p in range(n_inst):
-            if cont_of[p] != c:
-                continue
-            for q in range(n_inst):
-                if W[p, q] > 0 and cont_of[q] != c:
-                    peers.add(int(cont_of[q]))
-        for q in range(n_inst):
-            if cont_of[q] != c:
-                continue
-            for p in range(n_inst):
-                if W[p, q] > 0 and cont_of[p] != c:
-                    peers.add(int(cont_of[p]))
-        sm_cost_eff[c] = params.sm_cost_per_ktuple * (1.0 + params.sm_fanout_coef * len(peers))
-
     edge_src, edge_dst = (x.astype(np.int32) for x in np.nonzero(W))
+
+    # fan-out overhead: number of distinct remote peer containers each SM
+    # talks to.  Vectorized over the routing edges: a cross-container edge
+    # connects its endpoints' containers (both directions count as peers),
+    # so the peer count is a row-sum of the symmetrized container-pair
+    # connectivity matrix — no O(containers · instances²) scan.
+    conn = np.zeros((n_cont, n_cont), bool)
+    cross = cont_of[edge_src] != cont_of[edge_dst]
+    conn[cont_of[edge_src[cross]], cont_of[edge_dst[cross]]] = True
+    n_peers = (conn | conn.T).sum(axis=1)
+    sm_cost_eff = params.sm_cost_per_ktuple * (
+        1.0 + params.sm_fanout_coef * n_peers
+    )
     return SimStructure(
         config=config,
         n_inst=n_inst,
@@ -916,48 +916,61 @@ class SimResult:
         return name if val > saturation_threshold else None
 
     def to_metrics_store(self) -> MetricsStore:
-        """Package the trajectory as Heron-style metric timeseries."""
+        """Package the trajectory as Heron-style metric timeseries.
+
+        Column extraction is vectorized: each (samples, instances) metric
+        matrix is transposed once into a contiguous (instances, samples)
+        layout, so per-instance series are contiguous row views rather than
+        I strided column slices, and the node-name / container lookups run
+        as whole-array gathers instead of per-element Python conversions.
+        Values are bitwise-identical to the historical per-column loop
+        (transpose commutes with the elementwise rate division).  The SM
+        rows share one read-only fill/zeros array across containers.
+        """
         store = MetricsStore()
         st = self.structure
         dt = self.params.dt
-        proc = np.asarray(self.samples["proc"]) / dt       # ktps in
-        out = np.asarray(self.samples["out"]) / dt         # ktps out
-        cpu = np.asarray(self.samples["cputil"])
-        cap = np.asarray(self.samples["caputil"])
-        mem = np.asarray(self.samples["mem"])
-        gc = np.asarray(self.samples["gc"])
-        bp = np.asarray(self.samples["bp"])
+        rows = {
+            k: np.ascontiguousarray(np.asarray(self.samples[k]).T)
+            for k in ("proc", "out", "cputil", "caputil", "mem", "gc", "bp")
+        }
+        proc = rows["proc"] / dt                           # ktps in
+        out = rows["out"] / dt                             # ktps out
+        names = [st.node_names[n] for n in st.node_of.tolist()]
+        conts = st.cont_of.tolist()
         for i in range(st.n_inst):
-            nm = st.node_names[int(st.node_of[i])]
             store.add(
                 InstanceSamples(
-                    node=nm,
-                    container=int(st.cont_of[i]),
+                    node=names[i],
+                    container=conts[i],
                     slot=i,
-                    rate_in_ktps=proc[:, i],
-                    rate_out_ktps=out[:, i],
-                    cputil=cpu[:, i],
-                    caputil=cap[:, i],
-                    memutil_mb=mem[:, i],
-                    gctime=gc[:, i],
-                    backpressure=bp[:, i],
+                    rate_in_ktps=proc[i],
+                    rate_out_ktps=out[i],
+                    cputil=rows["cputil"][i],
+                    caputil=rows["caputil"][i],
+                    memutil_mb=rows["mem"][i],
+                    gctime=rows["gc"][i],
+                    backpressure=rows["bp"][i],
                 )
             )
-        trav = np.asarray(self.samples["sm_trav"]) / dt     # traversal ktps
-        smc = np.asarray(self.samples["sm_cpu"])
+        trav = np.ascontiguousarray(np.asarray(self.samples["sm_trav"]).T) / dt
+        smc = np.ascontiguousarray(np.asarray(self.samples["sm_cpu"]).T)
+        n_samples = trav.shape[1]
+        sm_mem = np.full(n_samples, 256.0)
+        sm_zero = np.zeros(n_samples)
         for c in range(st.n_cont):
             store.add(
                 InstanceSamples(
                     node=STREAM_MANAGER,
                     container=c,
                     slot=-1,
-                    rate_in_ktps=trav[:, c],
-                    rate_out_ktps=trav[:, c],
-                    cputil=smc[:, c],
-                    caputil=smc[:, c],
-                    memutil_mb=np.full(trav.shape[0], 256.0),
-                    gctime=np.zeros(trav.shape[0]),
-                    backpressure=np.zeros(trav.shape[0]),
+                    rate_in_ktps=trav[c],
+                    rate_out_ktps=trav[c],
+                    cputil=smc[c],
+                    caputil=smc[c],
+                    memutil_mb=sm_mem,
+                    gctime=sm_zero,
+                    backpressure=sm_zero,
                 )
             )
         return store
@@ -991,6 +1004,51 @@ def _per_tick_trace(offered_ktps, n_ticks: int, dt: float) -> np.ndarray:
     return np.repeat(offered, reps)[:n_ticks] * dt
 
 
+# ---------------------------------------------------------------------------
+# Cache-first evaluation: request canonicalization + in-batch dedup (Tier 1)
+# and value-keyed result memoization (Tier 2)
+# ---------------------------------------------------------------------------
+
+#: Tier-1 accounting: rows submitted vs rows that actually reached the tick
+#: kernel.  ``rows_in / rows_executed`` is the dedup/memoization factor a
+#: fleet replan achieves (1,000 tenants over 8 archetypes ⇒ ≥ 125×).
+_DEDUP_STATS = {"batches": 0, "rows_in": 0, "rows_unique": 0, "rows_executed": 0}
+
+
+def dedup_info() -> dict:
+    """In-batch request-dedup statistics for :func:`simulate_batch`.
+
+    ``rows_in`` counts submitted rows, ``rows_unique`` the value-distinct
+    rows after canonicalization, and ``rows_executed`` the rows that
+    actually ran the tick kernel (unique rows minus result-cache hits).
+    """
+    return dict(_DEDUP_STATS)
+
+
+def clear_dedup_stats() -> None:
+    for k in _DEDUP_STATS:
+        _DEDUP_STATS[k] = 0
+
+
+def _canonical_load(offered) -> object:
+    """Hashable value key for one offered-load entry: scalars collapse to
+    ``float`` (quantization-to-exact — ``400`` and ``400.0`` are one
+    request), per-sample traces to their float64 shape + bytes."""
+    if is_scalar_load(offered):
+        return float(offered)
+    a = np.asarray(offered, np.float64)
+    return ("trace", a.shape, a.tobytes())
+
+
+def _result_nbytes(res: "SimResult") -> int:
+    """Approximate resident bytes of one cached :class:`SimResult` (the
+    sample arrays; the structure is shared through ``structure_for``)."""
+    return int(
+        sum(np.asarray(v).nbytes for v in res.samples.values())
+        + np.asarray(res.offered_ktps).nbytes
+    )
+
+
 def simulate_batch(
     configs: Sequence[Configuration],
     offered_ktps,
@@ -1005,6 +1063,9 @@ def simulate_batch(
     min_edge_bucket: int = 0,
     min_degree_bucket: int = 0,
     resident: bool = False,
+    dedup: bool = True,
+    cache=None,
+    cache_token=None,
 ) -> list[SimResult]:
     """Evaluate N configurations in one vmapped (and device-sharded) call.
 
@@ -1054,10 +1115,174 @@ def simulate_batch(
     staging entirely (see :func:`resident_cache_info`; per-tick loads and
     seeds are still staged fresh each call).  Resident structure buffers
     are excluded from XLA donation so they survive the call.
+
+    ``dedup=True`` (Tier 1 of the cache-first evaluation path)
+    canonicalizes each row to a value key — (configuration, offered load,
+    seed) — collapses duplicates *before* padding/stacking, runs the tick
+    kernel on the unique rows only, and scatters results back in
+    submission order (duplicate rows share one :class:`SimResult` object).
+    Rows on the vmapped batch axis are data-parallel and independent, so
+    the outputs are bitwise-identical to the undeduped path;
+    :func:`dedup_info` reports the collapse factor.  ``cache=`` (Tier 2)
+    accepts a :class:`repro.streams.cache.ResultCache` (anything with
+    ``get(key)`` / ``put(key, value, nbytes)``): unique rows are looked up
+    and filled by full value key — (config, load, seed, params, tick
+    count, resolved backend, ``cache_token``) — so an identical
+    resubmission across calls costs zero kernel executions.  The key
+    carries the *resolved* backend (dense and sparse agree only to float
+    tolerance) but neither buckets nor device/residency layout: results
+    are bitwise invariant to those (the bucketing contract), so an entry
+    computed at any layout answers every layout.  ``cache_token`` is the
+    caller's invalidation handle — the engine layer passes the learner's
+    ``ModelStore.version``, so calibration/retrain makes stale entries
+    unreachable.  ``dedup=False, cache=None`` is the escape hatch that
+    preserves the historical path exactly (no canonicalization, no
+    accounting, every submitted row reaches the kernel).
     """
     configs = list(configs)
     if not configs:
         return []
+    B = len(configs)
+    if is_scalar_load(offered_ktps):
+        offered_list = [offered_ktps] * B
+    else:
+        offered_list = list(offered_ktps)
+        if len(offered_list) != B:
+            raise ValueError(
+                f"offered_ktps has {len(offered_list)} entries for {B} configs"
+            )
+    if seeds is None:
+        seeds = [params.seed] * B
+    seeds = list(seeds)
+    if len(seeds) != B:
+        raise ValueError("seeds must match configs")
+    n_ticks = int(duration_s / params.dt)
+    n_ticks = (n_ticks // params.sample_every) * params.sample_every
+
+    def run(rows: list[int], kernel_sel: str) -> list[SimResult]:
+        return _run_batch(
+            [configs[i] for i in rows],
+            [offered_list[i] for i in rows],
+            [seeds[i] for i in rows],
+            n_ticks=n_ticks,
+            params=params,
+            min_inst_bucket=min_inst_bucket,
+            min_cont_bucket=min_cont_bucket,
+            devices=devices,
+            min_batch_bucket=min_batch_bucket,
+            tick_kernel=kernel_sel,
+            min_edge_bucket=min_edge_bucket,
+            min_degree_bucket=min_degree_bucket,
+            resident=resident,
+        )
+
+    if not dedup and cache is None:
+        return run(list(range(B)), tick_kernel)
+
+    # Tier 1: collapse value-identical rows before padding/stacking.
+    row_keys = [
+        (c, _canonical_load(o), int(s))
+        for c, o, s in zip(configs, offered_list, seeds)
+    ]
+    if dedup:
+        first: dict = {}
+        uniq: list[int] = []
+        row_of: list[int] = []
+        for i, k in enumerate(row_keys):
+            j = first.get(k)
+            if j is None:
+                j = len(uniq)
+                first[k] = j
+                uniq.append(i)
+            row_of.append(j)
+    else:
+        uniq = list(range(B))
+        row_of = list(range(B))
+    _DEDUP_STATS["batches"] += 1
+    _DEDUP_STATS["rows_in"] += B
+    _DEDUP_STATS["rows_unique"] += len(uniq)
+
+    results_u: list = [None] * len(uniq)
+    backend = tick_kernel
+    full_keys = None
+    if cache is not None:
+        # the backend is resolved from the unique rows' unpadded maxima —
+        # identical to the full set's (duplicates share structures) — and
+        # pinned for the executed subset, so key-backend == run-backend
+        # even when cache hits remove the densest row
+        sts = [structure_for(configs[i], params) for i in uniq]
+        backend = resolve_tick_kernel(
+            max(st.n_inst for st in sts),
+            max(st.n_edges for st in sts),
+            tick_kernel,
+        )
+        full_keys = [
+            row_keys[i] + (params, n_ticks, backend, cache_token)
+            for i in uniq
+        ]
+        miss = []
+        for j, key in enumerate(full_keys):
+            hit = cache.get(key)
+            if hit is None:
+                miss.append(j)
+            else:
+                results_u[j] = hit
+    else:
+        miss = list(range(len(uniq)))
+
+    _DEDUP_STATS["rows_executed"] += len(miss)
+    if miss:
+        rows = [uniq[j] for j in miss]
+        # Cache state must never drive tick-kernel recompiles: hits make
+        # the executed subset's size data-dependent, and every distinct
+        # size is a fresh XLA compile.  With a cache in play, pad the
+        # subset to its BATCH_LADDER rung — sticky via the cache (one
+        # cache ≈ one evaluator ≈ one trace), capped by this call's own
+        # deduped rung so one huge replan never inflates later small
+        # calls.  Without a cache the executed set is deterministic per
+        # submission, so only restore the deduped size.  Replicas of the
+        # last missed row are dropped by the zip below; batch padding is
+        # bitwise-invariant (the bucketing contract).
+        pad_to = len(uniq)
+        if cache is not None:
+            floor = int(getattr(cache, "batch_floor", 0))
+            pad_to = min(
+                batch_bucket_size(len(rows), floor),
+                batch_bucket_size(len(uniq)),
+            )
+            try:
+                cache.batch_floor = max(floor, pad_to)
+            except AttributeError:
+                pass
+        rows += [rows[-1]] * (pad_to - len(rows))
+        executed = run(rows, backend)
+        for j, res in zip(miss, executed):
+            results_u[j] = res
+            if cache is not None:
+                cache.put(full_keys[j], res, _result_nbytes(res))
+    return [results_u[j] for j in row_of]
+
+
+def _run_batch(
+    configs: list[Configuration],
+    offered_list: list,
+    seeds: list,
+    n_ticks: int,
+    params: SimParams,
+    min_inst_bucket: int,
+    min_cont_bucket: int,
+    devices: int | None,
+    min_batch_bucket: int,
+    tick_kernel: str,
+    min_edge_bucket: int,
+    min_degree_bucket: int,
+    resident: bool,
+) -> list[SimResult]:
+    """Execute one already-canonicalized batch (loads expanded per row,
+    seeds resolved, tick count fixed): pad, stack, stage, and run the
+    vmapped/sharded tick kernel.  This is the historical
+    :func:`simulate_batch` body — the public entry point decides *which
+    rows* reach it."""
     B = len(configs)
     B_bucket = batch_bucket_size(B, min_batch_bucket) if min_batch_bucket else B
     n_dev = shard_count(B_bucket, devices)
@@ -1081,23 +1306,7 @@ def simulate_batch(
             max(st.d_in for st in structures), min_degree_bucket
         )
 
-    n_ticks = int(duration_s / params.dt)
-    n_ticks = (n_ticks // params.sample_every) * params.sample_every
-
-    if is_scalar_load(offered_ktps):
-        offered_list = [offered_ktps] * B
-    else:
-        offered_list = list(offered_ktps)
-        if len(offered_list) != B:
-            raise ValueError(
-                f"offered_ktps has {len(offered_list)} entries for {B} configs"
-            )
     per_tick = np.stack([_per_tick_trace(o, n_ticks, params.dt) for o in offered_list])
-
-    if seeds is None:
-        seeds = [params.seed] * B
-    if len(seeds) != B:
-        raise ValueError("seeds must match configs")
 
     # pad the batch axis: up to the batch bucket (if any), then to a multiple
     # of the shard count, by replicating the last row (replicas are sliced
@@ -1234,6 +1443,9 @@ def simulate_grid(
     min_edge_bucket: int = 0,
     min_degree_bucket: int = 0,
     resident: bool = False,
+    dedup: bool = True,
+    cache=None,
+    cache_token=None,
 ) -> list[list[SimResult]]:
     """Score C configurations × R offered rates in ONE batched kernel call.
 
@@ -1260,6 +1472,9 @@ def simulate_grid(
             min_edge_bucket=min_edge_bucket,
             min_degree_bucket=min_degree_bucket,
             resident=resident,
+            dedup=dedup,
+            cache=cache,
+            cache_token=cache_token,
         )
 
     return _grid_through_batch(batch, configs, rates_ktps)
@@ -1271,15 +1486,19 @@ def simulate(
     duration_s: float = 20.0,
     params: SimParams = SimParams(),
     tick_kernel: str = "auto",
+    cache=None,
+    cache_token=None,
 ) -> SimResult:
     """Run ``config`` under ``offered_ktps`` (scalar or per-sample array).
 
     Routed through the batched, shape-bucketed kernel (batch of one), so
     repeated calls in the same bucket share a single XLA compilation.
+    ``cache`` (optional :class:`repro.streams.cache.ResultCache`) memoizes
+    the result by value across calls — see :func:`simulate_batch`.
     """
     return simulate_batch(
         [config], [offered_ktps], duration_s, params, seeds=[params.seed],
-        tick_kernel=tick_kernel,
+        tick_kernel=tick_kernel, cache=cache, cache_token=cache_token,
     )[0]
 
 
@@ -1289,11 +1508,17 @@ def measure_capacity(
     duration_s: float = 20.0,
     overload_ktps: float = 1e6,
     tick_kernel: str = "auto",
+    cache=None,
+    cache_token=None,
 ) -> float:
     """The 'measured rate' of a configuration: offered load far above capacity,
-    backpressure gating throttles spouts, steady-state admission = capacity."""
+    backpressure gating throttles spouts, steady-state admission = capacity.
+
+    A ``cache`` makes repeated capacity probes of the same configuration —
+    calibration sweeps, fleet feasibility checks — cross-call lookups."""
     return simulate(
-        config, overload_ktps, duration_s, params, tick_kernel=tick_kernel
+        config, overload_ktps, duration_s, params, tick_kernel=tick_kernel,
+        cache=cache, cache_token=cache_token,
     ).achieved_ktps
 
 
@@ -1303,6 +1528,8 @@ def training_sweep(
     params: SimParams = SimParams(),
     seconds_per_rate: float = 10.0,
     tick_kernel: str = "auto",
+    cache=None,
+    cache_token=None,
 ) -> MetricsStore:
     """The paper's profiling procedure (§5.1): sweep a throttled producer over
     a range of rates with hold times, collect metrics at each level.
@@ -1316,6 +1543,7 @@ def training_sweep(
     results = simulate_batch(
         [config] * len(rates), rates, duration_s=seconds_per_rate,
         params=params, seeds=seeds, tick_kernel=tick_kernel,
+        cache=cache, cache_token=cache_token,
     )
     store = MetricsStore()
     for res in results:
