@@ -1,0 +1,224 @@
+"""Summary mode: score candidates without shipping trajectories to the host.
+
+Two questions, one bench:
+
+* **Candidate sweeps (128 / 512)** — the grid-scoring shape shared by
+  :meth:`PredictivePolicy.evaluate_grid` and the fleet scheduler's joint
+  scoring call: N distinct candidates, one batched ``simulate_batch``,
+  then every row's ``achieved_ktps`` is read (the realistic consumer).
+  ``samples="full"`` ships every trajectory to the host and reduces each
+  row on demand; ``samples="summary"`` reduces on device inside the tick
+  kernel's epilogue and ships one O(B·I) pytree.  Both wall clock and
+  host-transfer bytes are recorded; the headline assert mirrors the
+  tests: summary must be **≥2× faster** on the 512-candidate sweep.
+* **Fleet replan** — a scoring replan round at 10 / 100 / 1,000 tenants
+  (override with ``BENCH_SUMMARY_TENANTS=10,100``) through a
+  :class:`FleetScheduler` wired to a :class:`SimulatorEvaluator` in each
+  mode: what does one round transfer, and what does summary mode save
+  end to end?  No assert here — at fleet scale in-batch dedup collapses
+  the kernel rows, so the byte ratio is the story, not a floor.
+
+Summary mode is numerically exact (bitwise-equal to the full-trajectory
+reductions — see ``tests/test_summary_mode.py``), so the two modes score
+every candidate identically; the bench cross-checks the 512-sweep scores
+before asserting the speedup.
+"""
+from __future__ import annotations
+
+import math
+import os
+
+from .common import EXTRAS, emit, timed
+
+#: minimum summary-vs-full wall-clock factor on the 512-candidate sweep
+MIN_SWEEP_SPEEDUP = 2.0
+SWEEP_SIZES = (128, 512)
+SWEEP_DURATION_S = 1.0
+_DEFAULT_COUNTS = "1000"
+
+
+def _candidates(n: int):
+    """N *distinct* candidate rows (distinct loads defeat in-batch dedup,
+    so every row really executes — the grid-scoring worst case)."""
+    from repro.core import ContainerDim, round_robin_configuration
+    from repro.streams import deep_pipeline
+
+    dag = deep_pipeline()
+    dim = ContainerDim(cpus=3.0, mem_mb=4096.0)
+    cfgs = [
+        round_robin_configuration(
+            dag,
+            {name: 1 + (i + j) % 3 for j, name in enumerate(dag.node_names)},
+            3 + i % 5,
+            dim,
+        )
+        for i in range(n)
+    ]
+    loads = [150.0 + 2.0 * i for i in range(n)]
+    return cfgs, loads
+
+
+def _sweep(n: int) -> dict:
+    from repro.streams import (
+        SimParams,
+        clear_transfer_stats,
+        simulate_batch,
+        transfer_info,
+    )
+
+    # sample densely so the trajectory payload is the production shape:
+    # full mode's cost is the O(B*S*I) transfer plus a per-row host-side
+    # reduction, and both scale with the sample count
+    params = SimParams(sample_every=2)
+    cfgs, loads = _candidates(n)
+
+    def score(mode: str) -> float:
+        results = simulate_batch(
+            cfgs, loads, duration_s=SWEEP_DURATION_S, params=params,
+            samples=mode,
+        )
+        return sum(r.achieved_ktps for r in results)
+
+    total_full, us_full = timed(score, "full", repeats=3, warmup=1)
+    total_sum, us_sum = timed(score, "summary", repeats=3, warmup=1)
+    assert total_sum == total_full, (
+        f"{n}-candidate sweep: summary scores must equal full scores "
+        f"(got {total_sum!r} vs {total_full!r})"
+    )
+
+    # transfer bytes for one instrumented call per mode
+    clear_transfer_stats()
+    score("full")
+    bytes_full = transfer_info()["bytes_full"]
+    clear_transfer_stats()
+    score("summary")
+    bytes_sum = transfer_info()["bytes_summary"]
+
+    speedup = us_full / max(us_sum, 1e-9)
+    shrink = bytes_full / max(bytes_sum, 1)
+    emit(
+        f"summary_sweep_{n}cand",
+        us_sum,
+        f"full_us={us_full:.0f};speedup={speedup:.2f}x;"
+        f"bytes={bytes_sum};bytes_full={bytes_full};shrink={shrink:.0f}x",
+    )
+    if n >= 512:
+        assert speedup >= MIN_SWEEP_SPEEDUP, (
+            f"summary mode must be >={MIN_SWEEP_SPEEDUP:.0f}x faster than "
+            f"full trajectories on the {n}-candidate sweep "
+            f"(got {speedup:.2f}x)"
+        )
+    return {
+        "us_summary": round(us_sum, 1),
+        "us_full": round(us_full, 1),
+        "speedup": round(speedup, 2),
+        "bytes_summary": bytes_sum,
+        "bytes_full": bytes_full,
+        "shrink": round(shrink, 1),
+    }
+
+
+def _fleet(n: int):
+    """A fleet of ``n`` tenants over 16 demand archetypes (dedup collapses
+    the scoring batch, exactly as a production replan would)."""
+    from repro.control import GuardBands
+    from repro.core import ContainerDim, oracle_models
+    from repro.fleet import Cluster, MachineClass, QosTier, TenantSpec
+    from repro.streams import SimParams, wordcount
+
+    params = SimParams()
+    dag = wordcount()
+    dim = ContainerDim(cpus=3.0, mem_mb=4096.0)
+    models = oracle_models(dag, params.sm_cost_per_ktuple)
+    tenants = [
+        (
+            TenantSpec(
+                name=f"t{i:04d}", dag=dag,
+                target_ktps=40.0 + 2.5 * (i % 16),
+                qos=QosTier.STANDARD, models=models,
+                guards=GuardBands(), preferred_dim=dim,
+            ),
+            40.0 + 2.5 * (i % 16),
+        )
+        for i in range(n)
+    ]
+    hosts = max(4, math.ceil(n * 4.5 * 1.3 / 16))
+    cluster = Cluster(
+        [MachineClass("std", count=hosts, cores=16.0, mem_mb=65536.0)]
+    )
+    return tenants, cluster
+
+
+def _replan(counts: list[int]) -> dict:
+    from repro.fleet import FleetScheduler
+    from repro.streams import (
+        SimParams,
+        SimulatorEvaluator,
+        clear_transfer_stats,
+        transfer_info,
+    )
+
+    curve: dict[str, dict] = {}
+    for n in counts:
+        tenants, cluster = _fleet(n)
+        # the measured round: ~5% of the fleet bumped its demand since the
+        # last plan (an unchanged fleet takes the no-churn fast path and
+        # never calls the evaluator at all)
+        churned = {t.name for t, _d in tenants[: max(1, n // 20)]}
+        bumped = [
+            (t, d + 15.0 if t.name in churned else d) for t, d in tenants
+        ]
+        row: dict[str, dict] = {}
+        for mode in ("summary", "full"):
+            # cache=False: every round re-scores, so wall clock and bytes
+            # describe a real scoring round, not a ResultCache replay
+            ev = SimulatorEvaluator(
+                params=SimParams(), duration_s=1.0, samples=mode,
+                cache=False,
+            )
+            sched = FleetScheduler(cluster, ev)
+            plan = sched.schedule(tenants)
+            _, us = timed(
+                sched.schedule, bumped, previous=plan, repeats=1, warmup=1,
+            )
+            clear_transfer_stats()
+            sched.schedule(bumped, previous=plan)
+            info = transfer_info()
+            row[mode] = {
+                "us": round(us, 1),
+                "bytes": info["bytes_full"] + info["bytes_summary"],
+            }
+        shrink = row["full"]["bytes"] / max(row["summary"]["bytes"], 1)
+        speedup = row["full"]["us"] / max(row["summary"]["us"], 1e-9)
+        emit(
+            f"summary_fleet_replan_{n}t",
+            row["summary"]["us"],
+            f"full_us={row['full']['us']:.0f};speedup={speedup:.2f}x;"
+            f"bytes={row['summary']['bytes']};"
+            f"bytes_full={row['full']['bytes']};shrink={shrink:.0f}x",
+        )
+        curve[f"{n}t"] = {**row, "shrink": round(shrink, 1)}
+    return curve
+
+
+def run() -> dict:
+    from repro.streams import transfer_info
+
+    counts = sorted(
+        int(x)
+        for x in os.environ.get(
+            "BENCH_SUMMARY_TENANTS", _DEFAULT_COUNTS
+        ).split(",")
+        if x.strip()
+    )
+    out = {
+        "sweeps": {f"{n}cand": _sweep(n) for n in SWEEP_SIZES},
+        "fleet_replan": _replan(counts),
+        "transfer": transfer_info(),
+    }
+    EXTRAS["summary"] = out
+    return out
+
+
+if __name__ == "__main__":
+    run()

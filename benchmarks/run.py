@@ -26,6 +26,7 @@ BENCHES = [
     ("kernels", "bench_kernels", "Pallas kernels vs jnp oracles"),
     ("tick", "bench_tick", "Tick kernel — dense vs sparse ELL flow physics + batch staging"),
     ("eval_cache", "bench_eval_cache", "Cache-first evaluation path — dedup factor + memoization hit rate"),
+    ("summary", "bench_summary", "Summary mode — on-device reduction vs full-trajectory transfer"),
 ]
 
 

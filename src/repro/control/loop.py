@@ -503,6 +503,12 @@ class ControlLoop:
                 return float(m[0]), m[1], None
             return float(m), None, None
         if self.evaluator is not None:
+            # summary-mode evaluators (the SimulatorEvaluator default) hand
+            # back a lazily-backed SimResult here: the achieved/bottleneck
+            # reads below cost no trajectory transfer, and _learn's
+            # ``sim.to_metrics_store()`` — reached only on the rare
+            # saturated steps that feed the retrain pool — transparently
+            # refetches the full trajectory for exactly those rows
             r = self.evaluator.evaluate(config, offered_ktps=load)
             return r.achieved_ktps, r.bottleneck, r.sim
         return None

@@ -259,7 +259,10 @@ class PredictivePolicy:
        trace,
     2. score candidates × window rates in ONE batched evaluator call
        (:func:`~repro.streams.engine.evaluate_grid_with`; the rates ride
-       the vmapped batch axis and reuse the sticky shape buckets),
+       the vmapped batch axis and reuse the sticky shape buckets) — the
+       sweep reads only ``achieved_ktps``, so under a summary-mode
+       evaluator (the default) the whole grid transfers O(candidates)
+       summary bytes instead of every candidate's trajectory,
     3. deploy the cheapest candidate whose measured rate keeps up at
        EVERY window step; if none survives, the candidate with the best
        worst-step margin.

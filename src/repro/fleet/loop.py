@@ -301,6 +301,10 @@ class FleetLoop:
                     float(loads[s.name]) / sp
                     for (s, _a), sp in zip(admitted, speeds)
                 ]
+                # per-step measurements also consume only scalar reductions
+                # (achieved + bottleneck) — the fleet loop never pools
+                # trajectories, so summary-mode evaluators ship no
+                # trajectory bytes anywhere on a fleet trace
                 evals = evaluate_jobs_with(self.evaluator, groups, offered)
                 for (spec, _alloc), sp, off, (ev,) in zip(
                     admitted, speeds, offered, evals

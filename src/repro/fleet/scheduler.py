@@ -1080,6 +1080,10 @@ class FleetScheduler:
         if not groups:
             return 0
         eval_rows = sum(len(g) for g in groups)
+        # joint score reads only achieved_ktps per row: under the summary-
+        # mode SimulatorEvaluator default, a 1,000-tenant replan transfers
+        # kilobytes of on-device reductions instead of every candidate's
+        # full metric trajectory (values are exactly the full-mode ones)
         evals = evaluate_jobs_with(self.evaluator, groups, loads)
         timings["score"] += time.perf_counter() - t0
         t0 = time.perf_counter()

@@ -14,14 +14,17 @@ from .workloads import (
 from .simulator import (
     DEGREE_LADDER,
     EDGE_LADDER,
+    SAMPLES_MODES,
     SimParams,
     SimResult,
+    TrajectoryUnavailable,
     batch_bucket_size,
     bucket_size,
     clear_dedup_stats,
     clear_kernel_cache,
     clear_resident_cache,
     clear_structure_cache,
+    clear_transfer_stats,
     dedup_info,
     degree_bucket_size,
     edge_bucket_size,
@@ -36,6 +39,7 @@ from .simulator import (
     simulate_grid,
     structure_cache_info,
     training_sweep,
+    transfer_info,
 )
 from .cache import (
     ResultCache,
@@ -57,14 +61,16 @@ from . import sources
 
 __all__ = [
     "DEGREE_LADDER",
-    "EDGE_LADDER", "WORKLOADS", "ConfigEvaluator", "EvalResult",
+    "EDGE_LADDER", "SAMPLES_MODES", "WORKLOADS", "ConfigEvaluator",
+    "EvalResult",
     "ExecutorEvaluator",
     "OVERLOAD_KTPS", "PerCandidateLoads", "ResultCache", "SimParams",
     "SimResult",
-    "SimulatorEvaluator",
+    "SimulatorEvaluator", "TrajectoryUnavailable",
     "adanalytics", "batch_bucket_size", "bucket_size", "cache_stats",
     "clear_dedup_stats", "clear_kernel_cache",
     "clear_resident_cache", "clear_result_caches", "clear_structure_cache",
+    "clear_transfer_stats",
     "dedup_info", "deep_pipeline",
     "degree_bucket_size",
     "diamond", "edge_bucket_size", "evaluate_grid_with", "evaluate_jobs_with",
@@ -73,5 +79,6 @@ __all__ = [
     "result_cache_info",
     "shard_count", "simulate", "simulate_batch",
     "simulate_grid", "sources", "structure_cache_info", "training_sweep",
+    "transfer_info",
     "wordcount",
 ]

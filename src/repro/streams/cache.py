@@ -137,17 +137,22 @@ def cache_stats() -> dict:
     One dict with one section per tier: ``kernel`` (XLA compile cache —
     compiles are ``misses``), ``structure`` (host-side structure/padding
     memo), ``resident`` (device-resident batch staging), ``result``
-    (aggregated Tier-2 result caches), and ``dedup`` (Tier-1 in-batch
-    request collapse).  Each section reports the counters that tier keeps
+    (aggregated Tier-2 result caches), ``dedup`` (Tier-1 in-batch
+    request collapse), and ``transfer`` (device→host bytes moved by the
+    evaluation path, split into ``bytes_full`` trajectory transfers vs
+    ``bytes_summary`` on-device-reduced transfers, plus lazy-trajectory
+    ``refetches``).  Each section reports the counters that tier keeps
     — hits/misses everywhere, evictions/bytes where the cache is bounded
     by bytes.  The BENCH JSON artifact embeds this snapshot, so every
-    perf run records what was recomputed vs looked up.
+    perf run records what was recomputed vs looked up — and what crossed
+    the device boundary.
     """
     from .simulator import (
         dedup_info,
         kernel_cache_info,
         resident_cache_info,
         structure_cache_info,
+        transfer_info,
     )
 
     kernel = {
@@ -159,4 +164,5 @@ def cache_stats() -> dict:
         "resident": resident_cache_info(),
         "result": result_cache_info(),
         "dedup": dedup_info(),
+        "transfer": transfer_info(),
     }

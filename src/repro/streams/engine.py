@@ -31,6 +31,7 @@ from ..core.metrics import STREAM_MANAGER
 from ..core.node_model import oracle_models
 from .cache import ResultCache
 from .simulator import (
+    SAMPLES_MODES,
     SimParams,
     SimResult,
     _grid_through_batch,
@@ -279,6 +280,15 @@ class SimulatorEvaluator:
     or the fleet loop's aggregate clock) is folded into every cache key,
     so calibration/retrain bumps make stale entries unreachable.  The
     control/fleet loops wire it automatically when left unset.
+
+    ``samples`` picks the per-result payload forwarded to
+    :func:`~repro.streams.simulator.simulate_batch`.  The default
+    ``"summary"`` keeps trajectories on device — every scoring consumer of
+    an :class:`EvalResult` (``achieved_ktps`` + ``bottleneck``) is answered
+    from the on-device reductions, with values exactly equal to full mode —
+    and the rare trajectory consumer (a control loop pooling
+    ``sim.to_metrics_store()`` on saturation) transparently refetches.
+    ``samples="full"`` restores the historical O(B·S·I) transfers.
     """
 
     def __init__(
@@ -294,7 +304,11 @@ class SimulatorEvaluator:
         dedup: bool = True,
         cache: "bool | ResultCache" = True,
         version_source=None,
+        samples: str = "summary",
     ) -> None:
+        if samples not in SAMPLES_MODES:
+            raise ValueError(f"samples={samples!r} not in {SAMPLES_MODES}")
+        self.samples = samples
         self.params = params
         self.duration_s = duration_s
         self.sticky_buckets = sticky_buckets
@@ -415,6 +429,7 @@ class SimulatorEvaluator:
             min_edge_bucket=self._edge_floor,
             min_degree_bucket=self._degree_floor,
             resident=self.resident_batches,
+            samples=self.samples,
             dedup=self.dedup,
             cache=self.result_cache,
             cache_token=self._cache_token(),
@@ -474,6 +489,11 @@ class ExecutorEvaluator:
     load, the scoring thresholds, and the ``version_source`` token — so a
     fleet step that re-scores an unchanged candidate set skips the LP
     entirely, and any model/calibration version bump invalidates.
+
+    ``samples`` is accepted for constructor symmetry with
+    :class:`SimulatorEvaluator` (callers swap backends without branching);
+    the LP scoring path has no trajectories to ship, so every result is
+    already summary-shaped and the value only validates.
     """
 
     def __init__(
@@ -484,7 +504,11 @@ class ExecutorEvaluator:
         saturation_threshold: float = 0.8,
         cache: "bool | ResultCache" = True,
         version_source=None,
+        samples: str = "summary",
     ) -> None:
+        if samples not in SAMPLES_MODES:
+            raise ValueError(f"samples={samples!r} not in {SAMPLES_MODES}")
+        self.samples = samples
         self.n_batches = n_batches
         self.floor_ktps = floor_ktps
         self.sm_cost_per_ktuple = sm_cost_per_ktuple

@@ -42,6 +42,18 @@ the vmapped kernel runs under ``jax.pmap``, one shard per device (the fleet
 scheduler's joint multi-tenant sweeps are exactly this shape).  Per-shard
 computation is the same vmapped kernel, so sharded and unsharded evaluation
 agree bitwise; a single-device host falls back to plain vmap.
+
+Summary evaluation mode
+-----------------------
+Scoring consumers (the fleet scheduler, predictive policies, capacity
+probes) read only scalar reductions of each trajectory.
+``simulate_batch(samples="summary")`` folds those reductions
+(:func:`_summarize_windowed`) into the kernel epilogue so the trajectory
+never leaves the device: the batch returns O(B·I) summary bytes in ONE
+host transfer instead of O(B·S·I) trajectory bytes.  Summary-backed
+:class:`SimResult`\\ s answer ``achieved_ktps`` / ``bottleneck_node``
+exactly as full results do, and lazily *refetch* a full run on trajectory
+access (learning paths); :func:`transfer_info` accounts the bytes moved.
 """
 from __future__ import annotations
 
@@ -368,6 +380,13 @@ SPARSE_DENSITY_THRESHOLD = 0.125
 
 TICK_KERNELS = ("dense", "sparse", "auto")
 
+#: Evaluation payload modes for :func:`simulate_batch`.  ``"full"`` ships the
+#: whole windowed metric trajectory to the host (the historical behaviour);
+#: ``"summary"`` keeps trajectories on device and transfers only the O(B·I)
+#: summary pytree every scoring consumer needs — see
+#: :func:`_summarize_windowed` for the exact reductions.
+SAMPLES_MODES = ("full", "summary")
+
 
 def resolve_tick_kernel(n_inst: int, n_edges: int, tick_kernel: str = "auto") -> str:
     """Resolve a ``tick_kernel`` selector to a concrete backend.
@@ -520,6 +539,62 @@ def _one_hot(cont_of: jnp.ndarray, n_cont: int) -> jnp.ndarray:
     return (cont_of[:, None] == jnp.arange(n_cont)[None, :]).astype(jnp.float32)
 
 
+def _summarize_windowed(samples: dict, is_source) -> dict:
+    """THE summary reductions — the single definition both modes share.
+
+    ``samples`` is the windowed metric pytree of one run ((S, I) per-instance
+    series, (S, K) per-container series, (S,) gate); ``is_source`` marks the
+    source instances.  Returns the per-run summary pytree:
+
+    * ``src_half_mean`` — second-half mean of the per-sample total source
+      throughput (the ``achieved_ktps`` numerator, in ktuples/tick),
+    * ``caputil_half_mean`` / ``bp_half_mean`` — (I,) second-half means,
+    * ``sm_half_mean`` — (K,) second-half mean SM busy,
+    * ``mem_peak`` — (I,) trajectory peak memory,
+    * ``gate_final`` — final admission-gate value.
+
+    In summary mode this runs *inside* the tick kernel (fused epilogue,
+    under vmap/pmap, on bucket-padded arrays); in full mode the same
+    function is jitted standalone over the sliced host trajectory
+    (:func:`_host_summary`).  Padded instances/containers contribute exact
+    zeros to the masked source sum and occupy trailing slots of the
+    per-instance vectors (sliced away on unpack), and CPU XLA reductions
+    are sequential — so the two routes agree bitwise, which is the
+    summary-vs-full numerical contract the test matrix pins down.
+    """
+    proc = samples["proc"]
+    half = proc.shape[0] // 2
+    src = is_source.astype(proc.dtype)
+    per_sample_src = (proc * src[None, :]).sum(axis=1)
+    return dict(
+        src_half_mean=per_sample_src[half:].mean(),
+        caputil_half_mean=samples["caputil"][half:].mean(axis=0),
+        sm_half_mean=samples["sm_cpu"][half:].mean(axis=0),
+        bp_half_mean=samples["bp"][half:].mean(axis=0),
+        mem_peak=samples["mem"].max(axis=0),
+        gate_final=samples["gate"][-1],
+    )
+
+
+#: Metric keys :func:`_summarize_windowed` actually reads — the host-side
+#: jit below is traced on exactly this subset so its compile cache is
+#: insensitive to unrelated trajectory keys.
+_SUMMARY_INPUT_KEYS = ("proc", "caputil", "sm_cpu", "bp", "mem", "gate")
+
+
+@jax.jit
+def _summarize_jit(samples: dict, is_source):
+    return _summarize_windowed(samples, is_source)
+
+
+def _host_summary(samples: dict, is_source: np.ndarray) -> dict:
+    """Full-mode lazy summary: the shared jitted reductions applied to a
+    host-side (already sliced) trajectory, returned as numpy."""
+    sub = {k: jnp.asarray(np.asarray(samples[k])) for k in _SUMMARY_INPUT_KEYS}
+    out = _summarize_jit(sub, jnp.asarray(np.asarray(is_source)))
+    return {k: np.asarray(v) for k, v in jax.device_get(out).items()}
+
+
 def _simulate_core(
     arrays: dict,
     offered_per_tick: jnp.ndarray,  # (n_ticks,) total source ktuples per tick
@@ -535,6 +610,7 @@ def _simulate_core(
     n_ticks: int,
     sample_every: int,
     backend: str = "dense",
+    samples_mode: str = "full",
 ):
     """One padded configuration's trajectory.  Pure function of bucket-shaped
     arrays — batched via ``jax.vmap`` and compiled once per bucket.
@@ -547,6 +623,15 @@ def _simulate_core(
     O(I²).  The same fused step, in segment-sum form, is the
     contract of :mod:`repro.kernels.stream_flow` (jnp reference + Pallas
     TPU kernel).
+
+    ``samples_mode`` picks the output payload: ``"full"`` returns the
+    windowed metric trajectory ((S, ...) per metric), ``"summary"`` fuses
+    :func:`_summarize_windowed` into the kernel epilogue and returns only
+    the O(I) summary pytree — the trajectory never leaves the device.
+    The tick physics is identical; the scan is window-nested in both modes
+    (per-window metric means accumulate inside the outer scan instead of
+    materializing per-tick (T, ...) stacks), which is bitwise-identical to
+    the historical flat scan + reshape + mean and measurably faster.
     """
     busy_cost = arrays["busy_cost"]
     cpu_cost = arrays["cpu_cost"]
@@ -705,15 +790,29 @@ def _simulate_core(
         src_cap0 * 0.05,
         jnp.zeros(cont_cpus.shape[0]),
     )
-    _, traj = jax.lax.scan(tick, state0, (offered_per_tick, keys))
-
-    # windowed averaging into samples
+    # window-nested scan: the outer scan walks the S sample windows, the
+    # inner scan runs the ``sample_every`` ticks of one window and its
+    # per-tick metrics are reduced to the window mean on the spot — the
+    # (T, ...) per-tick stacks of the historical flat scan never
+    # materialize.  Reduction order over each window's ticks is unchanged,
+    # so the sampled trajectory is bitwise-identical to the flat form.
     n_samples = n_ticks // sample_every
-    def avg(x):
-        x = x[: n_samples * sample_every]
-        return x.reshape(n_samples, sample_every, *x.shape[1:]).mean(axis=1)
 
-    return {k: avg(v) for k, v in traj.items()}
+    def window(carry, inp):
+        carry, traj = jax.lax.scan(tick, carry, inp)
+        return carry, {k: v.mean(axis=0) for k, v in traj.items()}
+
+    def to_windows(x):
+        return x[: n_samples * sample_every].reshape(
+            n_samples, sample_every, *x.shape[1:]
+        )
+
+    _, samples = jax.lax.scan(
+        window, state0, (to_windows(offered_per_tick), to_windows(keys))
+    )
+    if samples_mode == "summary":
+        return _summarize_windowed(samples, is_source)
+    return samples
 
 
 # ---------------------------------------------------------------------------
@@ -752,7 +851,8 @@ def _get_batch_kernel(batch: int, n_inst: int, n_cont: int, n_ticks: int,
                       sample_every: int, n_devices: int = 1,
                       backend: str = "dense", n_edges: int = 0,
                       d_out: int = 0, d_in: int = 0,
-                      donate_batch: bool = True):
+                      donate_batch: bool = True,
+                      samples_mode: str = "full"):
     """``batch`` is the per-device batch when ``n_devices > 1``."""
     # Donate the padded batch buffers (stacked structure arrays,
     # per-tick loads, seeds): they are rebuilt from host numpy on every
@@ -767,12 +867,13 @@ def _get_batch_kernel(batch: int, n_inst: int, n_cont: int, n_ticks: int,
     if jax.default_backend() == "cpu":
         donate = ()
     key = (batch, n_inst, n_cont, n_ticks, sample_every, n_devices,
-           backend, n_edges, d_out, d_in, donate)
+           backend, n_edges, d_out, d_in, samples_mode, donate)
     fn = _KERNEL_CACHE.get(key)
     if fn is None:
         _CACHE_STATS["misses"] += 1
         core = partial(_simulate_core, n_ticks=n_ticks,
-                       sample_every=sample_every, backend=backend)
+                       sample_every=sample_every, backend=backend,
+                       samples_mode=samples_mode)
         vmapped = jax.vmap(core, in_axes=(0, 0, 0) + (None,) * 7)
         if n_devices > 1:
             # one shard of the batch per device; scalars are broadcast
@@ -811,6 +912,7 @@ def kernel_cache_info() -> dict:
                 "n_edges": k[7],
                 "d_out": k[8],
                 "d_in": k[9],
+                "samples": k[10],
             }
             for k in _KERNEL_CACHE
         ],
@@ -870,22 +972,140 @@ def clear_resident_cache() -> None:
 # Host-side API
 # ---------------------------------------------------------------------------
 
+#: Host-transfer accounting for the evaluation path.  ``bytes_full`` /
+#: ``bytes_summary`` count device→host bytes moved by :func:`_run_batch`'s
+#: single per-batch ``jax.device_get`` (split by payload mode);
+#: ``refetches`` counts summary-backed results that lazily re-ran full-mode
+#: for trajectory access (learning paths).  BENCH extras and
+#: :func:`repro.streams.cache.cache_stats` embed this snapshot.
+_TRANSFER_STATS = {
+    "batches": 0, "bytes_full": 0, "bytes_summary": 0, "refetches": 0,
+}
 
-@dataclasses.dataclass
+
+def transfer_info() -> dict:
+    """Device→host transfer statistics for the evaluation path (see
+    ``_TRANSFER_STATS`` for field meanings)."""
+    return dict(_TRANSFER_STATS)
+
+
+def clear_transfer_stats() -> None:
+    for k in _TRANSFER_STATS:
+        _TRANSFER_STATS[k] = 0
+
+
+class TrajectoryUnavailable(RuntimeError):
+    """Raised on trajectory access (``SimResult.samples``) when the result
+    is summary-backed and has no refetch hook — the trajectory was never
+    shipped to the host and cannot be recovered."""
+
+
+def _bottleneck_from_reductions(
+    node_of: np.ndarray,
+    node_names: list,
+    half: np.ndarray,
+    sm_busy: float,
+    saturation_threshold: float,
+    sm_threshold: float,
+) -> str | None:
+    """Vectorized bottleneck attribution from second-half reductions.
+
+    ``half`` is the per-instance second-half mean caputil, ``sm_busy`` the
+    max per-container second-half mean SM busy.  Group-max per node runs as
+    one ``np.maximum.at`` gather-scatter instead of a per-instance Python
+    loop; ties resolve to the node that *first appears* in instance order,
+    which is exactly the dict-insertion ``max()`` semantics of the loop
+    form (kept as a test oracle in ``tests/test_summary_mode.py``) — the
+    two are bitwise-identical on the same inputs.
+    """
+    node_of = np.asarray(node_of)
+    vals = np.asarray(half, np.float64)
+    # 0.0 floor mirrors the loop's ``per_node.get(nm, 0.0)`` seed
+    node_max = np.zeros(len(node_names), np.float64)
+    np.maximum.at(node_max, node_of, vals)
+    uniq, first = np.unique(node_of, return_index=True)
+    order = uniq[np.argsort(first, kind="stable")]
+    j = int(np.argmax(node_max[order]))          # first max wins
+    name = node_names[int(order[j])]
+    val = float(node_max[order[j]])
+    if sm_busy > val and sm_busy > sm_threshold:
+        return STREAM_MANAGER
+    return name if val > saturation_threshold else None
+
+
 class SimResult:
-    structure: SimStructure
-    params: SimParams
-    samples: dict                      # windowed metric arrays
-    offered_ktps: np.ndarray           # per-sample offered load
+    """One configuration's evaluation result — lazily backed.
+
+    ``mode="full"`` results hold the windowed metric trajectory in
+    :attr:`samples` (the historical payload).  ``mode="summary"`` results
+    hold only the on-device-computed summary pytree (:attr:`summary`);
+    trajectory access through :attr:`samples` transparently *refetches* a
+    full-mode run of the same (config, load, seed, backend) — bitwise what
+    full mode would have returned, by the bucket-invariance contract — or
+    raises :class:`TrajectoryUnavailable` when constructed without a
+    refetch hook.  Scoring consumers (:attr:`achieved_ktps`,
+    :meth:`bottleneck_node`) answer from the summary in both modes, so the
+    two modes agree exactly; learning consumers (:meth:`to_metrics_store`)
+    need the trajectory and trigger the refetch path.
+    """
+
+    def __init__(
+        self,
+        structure: SimStructure,
+        params: SimParams,
+        offered_ktps: np.ndarray,
+        samples: dict | None = None,
+        summary: dict | None = None,
+        mode: str = "full",
+        refetch=None,
+    ) -> None:
+        if samples is None and summary is None:
+            raise ValueError("SimResult needs samples and/or summary")
+        self.structure = structure
+        self.params = params
+        self.offered_ktps = offered_ktps
+        self.mode = mode
+        self._samples = samples
+        self._summary = summary
+        self._refetch = refetch
+        self._achieved: float | None = None
+
+    @property
+    def samples(self) -> dict:
+        """The windowed metric trajectory; summary-backed results refetch
+        it lazily (one full-mode single-row kernel run, counted in
+        :func:`transfer_info` as a ``refetch``)."""
+        if self._samples is None:
+            if self._refetch is None:
+                raise TrajectoryUnavailable(
+                    "summary-backed SimResult has no trajectory; re-evaluate "
+                    "with samples='full' (or through a refetch-capable path)"
+                )
+            _TRANSFER_STATS["refetches"] += 1
+            self._samples = self._refetch()
+        return self._samples
+
+    @property
+    def summary(self) -> dict:
+        """The :func:`_summarize_windowed` reductions (numpy, sliced to the
+        real instance/container counts) — precomputed on device in summary
+        mode, computed lazily from the trajectory in full mode via the
+        *same* jitted reduction (so the modes agree bitwise)."""
+        if self._summary is None:
+            self._summary = _host_summary(
+                self._samples, self.structure.is_source
+            )
+        return self._summary
 
     @property
     def achieved_ktps(self) -> float:
-        """Steady-state delivered source rate (mean of second half)."""
-        proc = np.asarray(self.samples["proc"])          # (S, I) ktuples/tick
-        src = np.asarray(self.structure.is_source)
-        per_tick = proc[:, src].sum(axis=1)
-        half = per_tick[len(per_tick) // 2 :]
-        return float(half.mean() / self.params.dt)
+        """Steady-state delivered source rate (mean of second half).
+        Memoized — policies read it repeatedly per step."""
+        if self._achieved is None:
+            self._achieved = float(
+                self.summary["src_half_mean"] / self.params.dt
+            )
+        return self._achieved
 
     def bottleneck_node(
         self,
@@ -899,21 +1119,20 @@ class SimResult:
         The thresholds belong to the *caller's* control policy — an engine
         evaluator passes its own ``saturation_threshold`` here so policy
         guards and bottleneck attribution judge saturation by one number
-        (defaults preserve the historical 0.8 / 0.9 cutoffs).
+        (defaults preserve the historical 0.8 / 0.9 cutoffs).  Answers
+        from the summary reductions in both modes (no trajectory access).
         """
-        cap = np.asarray(self.samples["caputil"])
-        half = cap[cap.shape[0] // 2 :].mean(axis=0)
-        node_names = self.structure.node_names
-        per_node: dict[str, float] = {}
-        for i, n in enumerate(self.structure.node_of):
-            nm = node_names[int(n)]
-            per_node[nm] = max(per_node.get(nm, 0.0), float(half[i]))
-        sm_cap = np.asarray(self.samples["sm_cpu"])
-        sm_busy = sm_cap[sm_cap.shape[0] // 2 :].mean(axis=0).max() if sm_cap.size else 0.0
-        name, val = max(per_node.items(), key=lambda kv: kv[1])
-        if sm_busy > val and sm_busy > sm_threshold:
-            return STREAM_MANAGER
-        return name if val > saturation_threshold else None
+        s = self.summary
+        sm_half = np.asarray(s["sm_half_mean"])
+        sm_busy = float(sm_half.max()) if sm_half.size else 0.0
+        return _bottleneck_from_reductions(
+            self.structure.node_of,
+            self.structure.node_names,
+            s["caputil_half_mean"],
+            sm_busy,
+            saturation_threshold,
+            sm_threshold,
+        )
 
     def to_metrics_store(self) -> MetricsStore:
         """Package the trajectory as Heron-style metric timeseries.
@@ -1042,9 +1261,12 @@ def _canonical_load(offered) -> object:
 
 def _result_nbytes(res: "SimResult") -> int:
     """Approximate resident bytes of one cached :class:`SimResult` (the
-    sample arrays; the structure is shared through ``structure_for``)."""
+    sample arrays — or the ~100×-smaller summary pytree for summary-backed
+    results, so the bytes-bounded LRU holds correspondingly more of them;
+    the structure is shared through ``structure_for``)."""
+    payload = res._samples if res._samples is not None else res._summary
     return int(
-        sum(np.asarray(v).nbytes for v in res.samples.values())
+        sum(np.asarray(v).nbytes for v in payload.values())
         + np.asarray(res.offered_ktps).nbytes
     )
 
@@ -1063,11 +1285,24 @@ def simulate_batch(
     min_edge_bucket: int = 0,
     min_degree_bucket: int = 0,
     resident: bool = False,
+    samples: str = "full",
     dedup: bool = True,
     cache=None,
     cache_token=None,
 ) -> list[SimResult]:
     """Evaluate N configurations in one vmapped (and device-sharded) call.
+
+    ``samples`` picks the per-result payload (:data:`SAMPLES_MODES`):
+    ``"full"`` (default, the historical behaviour) ships every row's whole
+    windowed trajectory to the host — O(B·S·I) bytes; ``"summary"`` fuses
+    the scoring reductions (:func:`_summarize_windowed`) into the kernel
+    epilogue and transfers only the O(B·I) summary pytree, in ONE
+    ``device_get`` for the whole batch.  Summary-backed results answer
+    ``achieved_ktps`` / ``bottleneck_node`` exactly as full results do
+    (the reductions are shared) and lazily refetch a full-mode run on
+    trajectory access.  ``cache`` keys carry the mode, so summary and full
+    entries never answer each other's lookups; :func:`transfer_info`
+    reports the bytes moved per mode.
 
     ``offered_ktps`` is either one *scalar* load shared by every
     configuration or a sequence of per-configuration loads (each a scalar or
@@ -1139,6 +1374,8 @@ def simulate_batch(
     preserves the historical path exactly (no canonicalization, no
     accounting, every submitted row reaches the kernel).
     """
+    if samples not in SAMPLES_MODES:
+        raise ValueError(f"samples={samples!r} not in {SAMPLES_MODES}")
     configs = list(configs)
     if not configs:
         return []
@@ -1174,6 +1411,7 @@ def simulate_batch(
             min_edge_bucket=min_edge_bucket,
             min_degree_bucket=min_degree_bucket,
             resident=resident,
+            samples_mode=samples,
         )
 
     if not dedup and cache is None:
@@ -1216,8 +1454,10 @@ def simulate_batch(
             max(st.n_edges for st in sts),
             tick_kernel,
         )
+        # the key carries the payload mode: a summary entry must never
+        # answer a full-mode lookup (nor vice versa) — the payloads differ
         full_keys = [
-            row_keys[i] + (params, n_ticks, backend, cache_token)
+            row_keys[i] + (params, n_ticks, backend, samples, cache_token)
             for i in uniq
         ]
         miss = []
@@ -1263,6 +1503,29 @@ def simulate_batch(
     return [results_u[j] for j in row_of]
 
 
+def _make_refetch(config, offered, seed, n_ticks: int, params: SimParams,
+                  backend: str):
+    """Refetch hook for one summary-backed result: re-run THIS row alone in
+    full-sample mode.  Pins the batch's *resolved* backend (dense and
+    sparse agree only to float tolerance) and goes straight to
+    :func:`_run_batch` — bypassing dedup/result caches, so cache hit-rate
+    accounting never counts refetches — at default buckets on one device:
+    by the bucket-invariance contract the trajectory is bitwise what full
+    mode would have returned at batch time."""
+
+    def refetch() -> dict:
+        return _run_batch(
+            [config], [offered], [seed],
+            n_ticks=n_ticks, params=params,
+            min_inst_bucket=0, min_cont_bucket=0, devices=1,
+            min_batch_bucket=0, tick_kernel=backend,
+            min_edge_bucket=0, min_degree_bucket=0, resident=False,
+            samples_mode="full",
+        )[0]._samples
+
+    return refetch
+
+
 def _run_batch(
     configs: list[Configuration],
     offered_list: list,
@@ -1277,12 +1540,15 @@ def _run_batch(
     min_edge_bucket: int,
     min_degree_bucket: int,
     resident: bool,
+    samples_mode: str = "full",
 ) -> list[SimResult]:
     """Execute one already-canonicalized batch (loads expanded per row,
     seeds resolved, tick count fixed): pad, stack, stage, and run the
     vmapped/sharded tick kernel.  This is the historical
     :func:`simulate_batch` body — the public entry point decides *which
-    rows* reach it."""
+    rows* reach it.  The whole output pytree (trajectories or summaries,
+    per ``samples_mode``) comes back in ONE ``jax.device_get``, counted in
+    :func:`transfer_info`."""
     B = len(configs)
     B_bucket = batch_bucket_size(B, min_batch_bucket) if min_batch_bucket else B
     n_dev = shard_count(B_bucket, devices)
@@ -1364,9 +1630,9 @@ def _run_batch(
     kernel = _get_batch_kernel(
         per_dev_B, n_inst_b, n_cont_b, n_ticks, params.sample_every, n_dev,
         backend, n_edge_b or 0, d_out_b or 0, d_in_b or 0,
-        donate_batch=not resident,
+        donate_batch=not resident, samples_mode=samples_mode,
     )
-    samples = kernel(
+    out = kernel(
         stacked_dev,
         jnp.asarray(per_tick_in),
         jnp.asarray(seeds_in),
@@ -1378,20 +1644,50 @@ def _run_batch(
         params.gc_cost_frac,
         params.mem_alloc_mb_per_ktuple,
     )
+    # ONE device→host transfer for the whole batch pytree — O(B·S·I) bytes
+    # of trajectories in full mode, O(B·I) of summaries in summary mode
+    out = jax.device_get(out)
+    _TRANSFER_STATS["batches"] += 1
+    _TRANSFER_STATS[
+        "bytes_summary" if samples_mode == "summary" else "bytes_full"
+    ] += sum(int(v.nbytes) for v in jax.tree_util.tree_leaves(out))
     if n_dev > 1:
         # merge the device axis back and drop the fill replicas
-        samples = {
-            k: np.asarray(v).reshape(-1, *np.asarray(v).shape[2:])[:B]
-            for k, v in samples.items()
-        }
+        out = {k: v.reshape(-1, *v.shape[2:])[:B] for k, v in out.items()}
     else:
-        samples = {k: np.asarray(v)[:B] for k, v in samples.items()}
+        out = {k: v[:B] for k, v in out.items()}
 
     n_samples = n_ticks // params.sample_every
     results: list[SimResult] = []
     for i, st in enumerate(structures):
+        off = (
+            per_tick[i, : n_samples * params.sample_every]
+            .reshape(n_samples, -1)
+            .mean(1)
+            / params.dt
+        )
+        if samples_mode == "summary":
+            summary = dict(
+                src_half_mean=out["src_half_mean"][i],
+                caputil_half_mean=out["caputil_half_mean"][i][: st.n_inst],
+                sm_half_mean=out["sm_half_mean"][i][: st.n_cont],
+                bp_half_mean=out["bp_half_mean"][i][: st.n_inst],
+                mem_peak=out["mem_peak"][i][: st.n_inst],
+                gate_final=out["gate_final"][i],
+            )
+            results.append(
+                SimResult(
+                    structure=st, params=params, offered_ktps=off,
+                    summary=summary, mode="summary",
+                    refetch=_make_refetch(
+                        configs[i], offered_list[i], seeds[i], n_ticks,
+                        params, backend,
+                    ),
+                )
+            )
+            continue
         si: dict = {}
-        for k, v in samples.items():
+        for k, v in out.items():
             vi = v[i]
             if vi.ndim == 1:                      # per-run scalar series (gate)
                 si[k] = vi
@@ -1399,14 +1695,8 @@ def _run_batch(
                 si[k] = vi[:, : st.n_cont]
             else:                                 # per-instance series
                 si[k] = vi[:, : st.n_inst]
-        off = (
-            per_tick[i, : n_samples * params.sample_every]
-            .reshape(n_samples, -1)
-            .mean(1)
-            / params.dt
-        )
         results.append(
-            SimResult(structure=st, params=params, samples=si, offered_ktps=off)
+            SimResult(structure=st, params=params, offered_ktps=off, samples=si)
         )
     return results
 
@@ -1443,6 +1733,7 @@ def simulate_grid(
     min_edge_bucket: int = 0,
     min_degree_bucket: int = 0,
     resident: bool = False,
+    samples: str = "full",
     dedup: bool = True,
     cache=None,
     cache_token=None,
@@ -1472,6 +1763,7 @@ def simulate_grid(
             min_edge_bucket=min_edge_bucket,
             min_degree_bucket=min_degree_bucket,
             resident=resident,
+            samples=samples,
             dedup=dedup,
             cache=cache,
             cache_token=cache_token,
@@ -1486,6 +1778,7 @@ def simulate(
     duration_s: float = 20.0,
     params: SimParams = SimParams(),
     tick_kernel: str = "auto",
+    samples: str = "full",
     cache=None,
     cache_token=None,
 ) -> SimResult:
@@ -1494,11 +1787,13 @@ def simulate(
     Routed through the batched, shape-bucketed kernel (batch of one), so
     repeated calls in the same bucket share a single XLA compilation.
     ``cache`` (optional :class:`repro.streams.cache.ResultCache`) memoizes
-    the result by value across calls — see :func:`simulate_batch`.
+    the result by value across calls; ``samples="summary"`` keeps the
+    trajectory on device — see :func:`simulate_batch`.
     """
     return simulate_batch(
         [config], [offered_ktps], duration_s, params, seeds=[params.seed],
-        tick_kernel=tick_kernel, cache=cache, cache_token=cache_token,
+        tick_kernel=tick_kernel, samples=samples, cache=cache,
+        cache_token=cache_token,
     )[0]
 
 
@@ -1508,17 +1803,21 @@ def measure_capacity(
     duration_s: float = 20.0,
     overload_ktps: float = 1e6,
     tick_kernel: str = "auto",
+    samples: str = "summary",
     cache=None,
     cache_token=None,
 ) -> float:
     """The 'measured rate' of a configuration: offered load far above capacity,
     backpressure gating throttles spouts, steady-state admission = capacity.
 
-    A ``cache`` makes repeated capacity probes of the same configuration —
-    calibration sweeps, fleet feasibility checks — cross-call lookups."""
+    A capacity probe consumes one scalar, so it defaults to the summary
+    payload (no trajectory transfer; the value is exactly the full-mode
+    one).  A ``cache`` makes repeated capacity probes of the same
+    configuration — calibration sweeps, fleet feasibility checks —
+    cross-call lookups."""
     return simulate(
         config, overload_ktps, duration_s, params, tick_kernel=tick_kernel,
-        cache=cache, cache_token=cache_token,
+        samples=samples, cache=cache, cache_token=cache_token,
     ).achieved_ktps
 
 
@@ -1536,13 +1835,15 @@ def training_sweep(
 
     The whole rate ladder is evaluated as ONE batched kernel call (the
     structure is identical at every rung, so it shares a single compilation
-    and the rungs run data-parallel under ``vmap``).
+    and the rungs run data-parallel under ``vmap``).  Profiling *is* the
+    trajectory consumer, so this path pins ``samples="full"`` — the learned
+    models train on whole metric timeseries, not summaries.
     """
     rates = [float(r) for r in rates_ktps]
     seeds = [params.seed + 1000 + i for i in range(len(rates))]
     results = simulate_batch(
         [config] * len(rates), rates, duration_s=seconds_per_rate,
-        params=params, seeds=seeds, tick_kernel=tick_kernel,
+        params=params, seeds=seeds, tick_kernel=tick_kernel, samples="full",
         cache=cache, cache_token=cache_token,
     )
     store = MetricsStore()

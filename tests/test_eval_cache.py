@@ -400,13 +400,18 @@ def test_cache_stats_shape():
     simulate_batch([_wc_cfg()], [300.0], duration_s=1.0, params=PARAMS,
                    seeds=[7], cache=rc)
     stats = cache_stats()
-    assert set(stats) == {"kernel", "structure", "resident", "result", "dedup"}
+    assert set(stats) == {
+        "kernel", "structure", "resident", "result", "dedup", "transfer",
+    }
     for section in ("kernel", "structure", "result"):
         assert {"hits", "misses"} <= set(stats[section])
     for k in ("evictions", "bytes", "caches", "size"):
         assert k in stats["result"]
     assert {"batches", "rows_in", "rows_unique", "rows_executed"} <= set(
         stats["dedup"]
+    )
+    assert {"batches", "bytes_full", "bytes_summary", "refetches"} <= set(
+        stats["transfer"]
     )
 
 

@@ -1,0 +1,349 @@
+"""Summary evaluation mode: on-device reductions vs full trajectories.
+
+The numerical contract under test: ``simulate_batch(samples="summary")``
+returns, for every scoring consumer, values EXACTLY equal to the same
+reductions applied to the full trajectory — across all five workloads, both
+tick-kernel backends, over- and underload.  Plus the lazy-SimResult
+behaviours (refetch / raise), cache-mode non-aliasing, the ≤2-compile
+summary-trace guarantee, the vectorized ``bottleneck_node`` vs its loop
+oracle, and ``achieved_ktps`` memoization.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ContainerDim, round_robin_configuration
+from repro.core.dag import DagSpec, EdgeSpec, Grouping, NodeSpec
+from repro.core.metrics import STREAM_MANAGER
+from repro.streams import (
+    ResultCache,
+    SimParams,
+    SimulatorEvaluator,
+    TrajectoryUnavailable,
+    adanalytics,
+    clear_kernel_cache,
+    clear_transfer_stats,
+    deep_pipeline,
+    diamond,
+    kernel_cache_info,
+    measure_capacity,
+    mobile_analytics,
+    simulate,
+    simulate_batch,
+    transfer_info,
+    wordcount,
+)
+from repro.streams.simulator import (
+    SimResult,
+    _bottleneck_from_reductions,
+    structure_for,
+)
+
+WORKLOADS = (wordcount, adanalytics, diamond, deep_pipeline, mobile_analytics)
+DIM = ContainerDim(cpus=3.0, mem_mb=4096.0)
+PARAMS = SimParams()
+OVER, UNDER = 1e6, 120.0
+
+
+def _cfg(workload):
+    dag = workload()
+    return round_robin_configuration(
+        dag, {n: 1 + i % 2 for i, n in enumerate(dag.node_names)}, 3, DIM
+    )
+
+
+def _assert_summary_equal(rs: SimResult, rf: SimResult, ctx: str) -> None:
+    """Summary-backed vs full-backed result: every summary field, the
+    achieved rate, and the bottleneck label agree EXACTLY."""
+    assert rs.mode == "summary" and rf.mode == "full"
+    assert set(rs.summary) == set(rf.summary)
+    for k in rs.summary:
+        np.testing.assert_array_equal(
+            np.asarray(rs.summary[k]), np.asarray(rf.summary[k]),
+            err_msg=f"{ctx}: summary[{k}]",
+        )
+    assert rs.achieved_ktps == rf.achieved_ktps, ctx
+    assert rs.bottleneck_node() == rf.bottleneck_node(), ctx
+
+
+# ------------------------------------------------ exact-equality matrix
+
+@pytest.mark.parametrize("workload", WORKLOADS, ids=lambda w: w.__name__)
+@pytest.mark.parametrize("kernel", ["dense", "sparse"])
+def test_summary_equals_full_reductions(workload, kernel):
+    """{5 workloads} × {dense, sparse} × {overload, underload}: the
+    on-device summary is bitwise the full-trajectory reduction."""
+    cfg = _cfg(workload)
+    loads = [OVER, UNDER]
+    full = simulate_batch(
+        [cfg] * 2, loads, duration_s=4.0, params=PARAMS, tick_kernel=kernel
+    )
+    summ = simulate_batch(
+        [cfg] * 2, loads, duration_s=4.0, params=PARAMS, tick_kernel=kernel,
+        samples="summary",
+    )
+    for load, rf, rs in zip(loads, full, summ):
+        _assert_summary_equal(rs, rf, f"{workload.__name__}/{kernel}/{load}")
+
+
+def test_summary_refetch_is_bitwise_full_trajectory():
+    """Trajectory access on a summary result refetches samples that match
+    the full-mode run bit for bit, and is counted in transfer_info."""
+    clear_transfer_stats()
+    cfg = _cfg(diamond)
+    rf = simulate(cfg, OVER, duration_s=4.0, params=PARAMS)
+    rs = simulate(cfg, OVER, duration_s=4.0, params=PARAMS, samples="summary")
+    assert transfer_info()["refetches"] == 0
+    assert rs.samples.keys() == rf.samples.keys()
+    for k in rf.samples:
+        np.testing.assert_array_equal(
+            np.asarray(rs.samples[k]), np.asarray(rf.samples[k]), err_msg=k
+        )
+    info = transfer_info()
+    assert info["refetches"] == 1
+    # memoized: a second access re-runs nothing
+    rs.samples
+    assert transfer_info()["refetches"] == 1
+    # and the metrics-store view (the learning path) agrees end to end
+    a, b = rs.to_metrics_store(), rf.to_metrics_store()
+    assert len(a) == len(b)
+
+
+def test_measure_capacity_summary_default_matches_full():
+    cfg = _cfg(wordcount)
+    cap_s = measure_capacity(cfg, PARAMS, duration_s=4.0)
+    cap_f = measure_capacity(cfg, PARAMS, duration_s=4.0, samples="full")
+    assert cap_s == cap_f
+
+
+def test_evaluator_summary_default_matches_full_evaluator():
+    """SimulatorEvaluator defaults to summary mode; scores are exactly the
+    full-mode evaluator's."""
+    cfg = _cfg(adanalytics)
+    ev_s = SimulatorEvaluator(PARAMS, duration_s=4.0, cache=False, dedup=False)
+    ev_f = SimulatorEvaluator(
+        PARAMS, duration_s=4.0, cache=False, dedup=False, samples="full"
+    )
+    assert ev_s.samples == "summary"
+    rs, rf = ev_s.evaluate(cfg), ev_f.evaluate(cfg)
+    assert rs.achieved_ktps == rf.achieved_ktps
+    assert rs.bottleneck == rf.bottleneck
+    assert rs.sim.mode == "summary" and rf.sim.mode == "full"
+    with pytest.raises(ValueError):
+        SimulatorEvaluator(samples="streaming")
+
+
+# ------------------------------------------------ hypothesis random DAGs
+
+def _random_dag(n_nodes, extra_edges, rng) -> DagSpec:
+    """A random connected DAG: a spine plus random forward skip edges."""
+    nodes = tuple(
+        NodeSpec(
+            f"n{i}",
+            cpu_cost_per_ktuple=1.0 / float(rng.uniform(200.0, 1500.0)),
+            gamma=float(rng.uniform(0.3, 1.0)) if i < n_nodes - 1 else 0.0,
+            mem_mb_base=64.0,
+            tuple_bytes=64.0,
+            is_source=(i == 0),
+        )
+        for i in range(n_nodes)
+    )
+    edges = {(i, i + 1) for i in range(n_nodes - 1)}
+    for _ in range(extra_edges):
+        a = int(rng.integers(0, n_nodes - 1))
+        b = int(rng.integers(a + 1, n_nodes))
+        edges.add((a, b))
+    groupings = (Grouping.SHUFFLE, Grouping.FIELDS)
+    return DagSpec(
+        "rand",
+        nodes=nodes,
+        edges=tuple(
+            EdgeSpec(f"n{a}", f"n{b}", groupings[(a + b) % 2])
+            for a, b in sorted(edges)
+        ),
+    )
+
+
+def _check_random_dag_summary(n_nodes, extra_edges, par, n_cont, seed):
+    rng = np.random.default_rng(seed)
+    dag = _random_dag(n_nodes, extra_edges, rng)
+    parallelism = {n: 1 + (par + i) % 3 for i, n in enumerate(dag.node_names)}
+    cfg = round_robin_configuration(dag, parallelism, n_cont, DIM)
+    rf = simulate(cfg, OVER, duration_s=3.0, params=PARAMS)
+    rs = simulate(cfg, OVER, duration_s=3.0, params=PARAMS, samples="summary")
+    _assert_summary_equal(rs, rf, f"random dag seed={seed}")
+
+
+def test_property_summary_equals_full_on_random_dags():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n_nodes=st.integers(3, 7),
+        extra_edges=st.integers(0, 4),
+        par=st.integers(1, 3),
+        n_cont=st.integers(2, 5),
+        seed=st.integers(0, 10_000),
+    )
+    def prop(n_nodes, extra_edges, par, n_cont, seed):
+        _check_random_dag_summary(n_nodes, extra_edges, par, n_cont, seed)
+
+    prop()
+
+
+# ------------------------------------------------ compile-count guarantee
+
+def test_summary_trace_compiles_at_most_twice():
+    """A sticky-bucket summary-mode trace over fluctuating candidate
+    batches compiles the tick kernel at most twice (the PR-2 guarantee,
+    extended to summary mode)."""
+    clear_kernel_cache()
+    dag = wordcount()
+    ev = SimulatorEvaluator(
+        PARAMS, duration_s=2.0, sticky_buckets=True, sticky_batch=True,
+        devices=1, cache=False, dedup=False,
+    )
+    assert ev.samples == "summary"
+    for step, par in enumerate([1, 2, 3, 2, 4, 1]):
+        cfgs = [
+            round_robin_configuration(dag, {"W": par, "C": 1 + (par + j) % 2},
+                                      2, DIM)
+            for j in range(2 + step % 3)
+        ]
+        ev.evaluate_batch(cfgs, offered_ktps=200.0)
+    assert kernel_cache_info()["misses"] <= 2
+
+
+# ------------------------------------------------ cache-mode non-aliasing
+
+def test_cache_modes_never_alias():
+    """Summary and full entries carry the payload mode in their keys: the
+    same (config, load, seed) never answers across modes."""
+    cfg = _cfg(wordcount)
+    cache = ResultCache(name="test-modes")
+    r1 = simulate_batch(
+        [cfg], [OVER], duration_s=2.0, params=PARAMS, samples="summary",
+        cache=cache,
+    )[0]
+    assert cache.info()["misses"] == 1 and cache.info()["hits"] == 0
+    r2 = simulate_batch(
+        [cfg], [OVER], duration_s=2.0, params=PARAMS, samples="full",
+        cache=cache,
+    )[0]
+    # the full-mode lookup missed (no cross-mode answer) and both modes
+    # now coexist as distinct entries
+    assert cache.info()["misses"] == 2 and cache.info()["hits"] == 0
+    assert len(cache) == 2
+    assert r1.mode == "summary" and r2.mode == "full"
+    # re-asking each mode hits its own entry
+    r1b = simulate_batch(
+        [cfg], [OVER], duration_s=2.0, params=PARAMS, samples="summary",
+        cache=cache,
+    )[0]
+    r2b = simulate_batch(
+        [cfg], [OVER], duration_s=2.0, params=PARAMS, samples="full",
+        cache=cache,
+    )[0]
+    assert cache.info()["hits"] == 2
+    assert r1b is r1 and r2b is r2
+
+
+def test_summary_entries_are_much_smaller():
+    """The byte-accounting sees summary entries ~100× below full ones, so
+    the bytes-bounded LRU holds correspondingly more of them."""
+    cfg = _cfg(deep_pipeline)
+    c_full, c_sum = ResultCache(name="f"), ResultCache(name="s")
+    simulate_batch([cfg], [OVER], duration_s=8.0, params=PARAMS, cache=c_full)
+    simulate_batch([cfg], [OVER], duration_s=8.0, params=PARAMS,
+                   cache=c_sum, samples="summary")
+    assert c_sum.info()["bytes"] * 20 < c_full.info()["bytes"]
+
+
+# ------------------------------------------------ lazy SimResult behaviours
+
+def test_trajectory_unavailable_without_refetch():
+    cfg = _cfg(wordcount)
+    r = simulate(cfg, OVER, duration_s=2.0, params=PARAMS, samples="summary")
+    bare = SimResult(
+        structure=r.structure, params=r.params, offered_ktps=r.offered_ktps,
+        summary=r.summary, mode="summary",
+    )
+    # scoring works without a trajectory...
+    assert bare.achieved_ktps == r.achieved_ktps
+    assert bare.bottleneck_node() == r.bottleneck_node()
+    # ...but trajectory access has nothing to refetch
+    with pytest.raises(TrajectoryUnavailable):
+        bare.samples
+    with pytest.raises(ValueError):
+        SimResult(structure=r.structure, params=r.params,
+                  offered_ktps=r.offered_ktps)
+
+
+def test_achieved_ktps_is_memoized():
+    cfg = _cfg(wordcount)
+    r = simulate(cfg, OVER, duration_s=2.0, params=PARAMS, samples="summary")
+    first = r.achieved_ktps
+    # corrupt the backing summary: a recompute would change the answer, the
+    # memoized property must not
+    r._summary = dict(r._summary, src_half_mean=np.float32(1e9))
+    assert r.achieved_ktps == first
+
+
+# ------------------------------------------------ bottleneck vectorization
+
+def _bottleneck_loop_oracle(node_of, node_names, half, sm_busy,
+                            saturation_threshold, sm_threshold):
+    """The historical per-instance Python loop, kept verbatim as the
+    oracle for the vectorized group-max."""
+    per_node = {}
+    for i, n in enumerate(node_of):
+        nm = node_names[int(n)]
+        per_node[nm] = max(per_node.get(nm, 0.0), float(half[i]))
+    name, val = max(per_node.items(), key=lambda kv: kv[1])
+    if sm_busy > val and sm_busy > sm_threshold:
+        return STREAM_MANAGER
+    return name if val > saturation_threshold else None
+
+
+@pytest.mark.parametrize(
+    "case",
+    [
+        # (node_of, half, sm_busy) — crafted ties and orderings
+        ([0, 1, 2], [0.9, 0.9, 0.9], 0.0),          # all-node tie
+        ([2, 0, 1, 0], [0.5, 0.95, 0.95, 0.2], 0.0),  # tie across two nodes
+        ([0, 0, 1], [0.99, 0.3, 0.7], 0.0),         # within-node max
+        ([1, 0], [0.85, 0.85], 0.95),               # SM dominates a tie
+        ([0, 1], [0.5, 0.6], 0.85),                 # SM busy but below node? no
+        ([0, 1], [0.1, 0.2], 0.0),                  # nothing saturated
+        ([1, 1, 0], [0.8, 0.8, 0.8], 0.8),          # exact-threshold edges
+    ],
+)
+def test_bottleneck_vectorized_matches_loop_oracle(case):
+    node_of, half, sm_busy = case
+    node_of = np.asarray(node_of, np.int32)
+    half = np.asarray(half, np.float32)
+    names = [f"node{i}" for i in range(int(node_of.max()) + 1)]
+    for thr, smt in [(0.8, 0.9), (0.0, 0.0), (0.94, 0.5)]:
+        assert _bottleneck_from_reductions(
+            node_of, names, half, float(sm_busy), thr, smt
+        ) == _bottleneck_loop_oracle(
+            node_of, names, half, float(sm_busy), thr, smt
+        )
+
+
+def test_bottleneck_vectorized_matches_loop_on_real_runs():
+    """End-to-end: recompute the loop oracle from each workload's full
+    trajectory and check SimResult.bottleneck_node (vectorized, summary-
+    backed) agrees."""
+    for workload in WORKLOADS:
+        cfg = _cfg(workload)
+        rs = simulate(cfg, OVER, duration_s=4.0, params=PARAMS,
+                      samples="summary")
+        st = structure_for(cfg, PARAMS)
+        half = np.asarray(rs.summary["caputil_half_mean"])
+        sm_half = np.asarray(rs.summary["sm_half_mean"])
+        sm_busy = float(sm_half.max()) if sm_half.size else 0.0
+        for thr, smt in [(0.8, 0.9), (0.5, 0.5)]:
+            assert rs.bottleneck_node(thr, smt) == _bottleneck_loop_oracle(
+                st.node_of, st.node_names, half, sm_busy, thr, smt
+            ), workload.__name__
