@@ -22,6 +22,7 @@ BENCHES = [
     ("forecast", "bench_forecast", "Predictive layer — forecast accuracy + horizon sweeps"),
     ("fleet", "bench_fleet", "Fleet layer — sharded sweeps + joint scheduling"),
     ("fleet_scale", "bench_fleet_scale", "Fleet layer — tenant-count scaling curve (incremental vs full)"),
+    ("failover", "bench_failover", "Fleet layer — host/rack failure: time-to-refit + breach steps, N+1 on vs off"),
     ("speed", "bench_speed", "Paper §4/§5 — predict/allocate latency + LP bench"),
     ("kernels", "bench_kernels", "Pallas kernels vs jnp oracles"),
     ("tick", "bench_tick", "Tick kernel — dense vs sparse ELL flow physics + batch staging"),

@@ -32,14 +32,22 @@ from .policies import (
     PredictivePolicy,
     ReactivePolicy,
 )
-from .scenarios import GUARD_PRESETS, SCENARIOS, make_trace, replay
+from .scenarios import (
+    FAILURE_SCENARIOS,
+    GUARD_PRESETS,
+    SCENARIOS,
+    make_failure_trace,
+    make_trace,
+    replay,
+)
 
 __all__ = [
     "Action", "ControlContext", "ControlEvent", "ControlLoop",
-    "DeclarativePolicy", "ElasticLMPolicy", "FORECASTERS", "ForecastTracker",
+    "DeclarativePolicy", "ElasticLMPolicy", "FAILURE_SCENARIOS",
+    "FORECASTERS", "ForecastTracker",
     "Forecaster", "GUARD_PRESETS", "GuardBands", "HoltWintersForecaster",
     "HybridPolicy", "LastValueForecaster", "LoadSource", "ModelStore",
     "PlanContext", "Policy", "PredictivePolicy", "ReactivePolicy",
     "ReplayForecaster", "SCENARIOS", "StepRecord", "fold_executor_timings",
-    "make_forecaster", "make_trace", "replay",
+    "make_failure_trace", "make_forecaster", "make_trace", "replay",
 ]

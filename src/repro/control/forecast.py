@@ -27,7 +27,12 @@ forecast is never negative.  Forecast-error tracking and online bias
 correction live in :class:`repro.control.learning.ForecastTracker` — the
 same predict-back-calibration idiom the node models get from
 :class:`~repro.control.learning.ModelStore`.
-"""
+
+Every forecaster also exposes ``state_dict()`` / ``load_state_dict()`` —
+plain dicts of numpy-compatible leaves that round-trip *bit for bit*
+through the :mod:`repro.checkpoint` layer, so a restarted controller
+resumes with exactly the forecast state it crashed with (no cold-start
+window, no re-learned seasonality)."""
 from __future__ import annotations
 
 from typing import Protocol, runtime_checkable
@@ -79,6 +84,19 @@ class LastValueForecaster:
         h = _window(horizon)
         level = 0.0 if self.level is None else max(self.level, 0.0)
         return np.full(h, level)
+
+    def state_dict(self) -> dict:
+        # "no level yet" is a distinct state from "level 0.0": a flag leaf
+        # keeps the None round-trip exact
+        return {
+            "has_level": 1 if self.level is not None else 0,
+            "level": 0.0 if self.level is None else float(self.level),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.level = (
+            float(state["level"]) if int(state["has_level"]) else None
+        )
 
 
 class HoltWintersForecaster:
@@ -147,6 +165,29 @@ class HoltWintersForecaster:
             ]
         return np.maximum(out, 0.0)
 
+    def state_dict(self) -> dict:
+        return {
+            "has_level": 1 if self.level is not None else 0,
+            "level": 0.0 if self.level is None else float(self.level),
+            "trend": float(self.trend),
+            "seasonal": np.asarray(self.seasonal, np.float64),
+            "t": int(self._t),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.level = (
+            float(state["level"]) if int(state["has_level"]) else None
+        )
+        self.trend = float(state["trend"])
+        seasonal = np.asarray(state["seasonal"], np.float64)
+        if seasonal.shape != (self.season,):
+            raise ValueError(
+                f"seasonal state has {seasonal.shape[0]} slots, forecaster "
+                f"has season={self.season}"
+            )
+        self.seasonal = seasonal.copy()
+        self._t = int(state["t"])
+
 
 class ReplayForecaster:
     """Seasonal-naive history replay: load ``k`` steps ahead is forecast as
@@ -187,6 +228,14 @@ class ReplayForecaster:
                 idx -= self.period
             out[k] = self.history[idx] if idx >= 0 else self.history[-1]
         return np.maximum(out, 0.0)
+
+    def state_dict(self) -> dict:
+        return {"history": np.asarray(self.history, np.float64)}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.history = [
+            float(x) for x in np.asarray(state["history"], np.float64)
+        ]
 
 
 #: Name → zero-config factory (period-bearing forecasters take the season).

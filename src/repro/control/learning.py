@@ -29,7 +29,7 @@ import numpy as np
 from ..core.calibration import Calibrator
 from ..core.dag import Configuration, DagSpec
 from ..core.metrics import MetricsStore
-from ..core.node_model import NodeModel, fit_workload
+from ..core.node_model import LinearFit, NodeModel, ResourceClass, fit_workload
 
 if TYPE_CHECKING:
     from ..streams.engine import ExecutorEvaluator
@@ -113,6 +113,71 @@ class ModelStore:
         self.calibrator.mark_retrained()
         self.version += 1
         return fitted
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Everything a restarted controller needs to resume *warm*, as a
+        nested dict of numpy-compatible leaves: the node models (exact
+        float64 fit parameters), the calibration records behind the
+        over-provisioning factor, and the monotonic ``version`` counter —
+        the token every downstream memo (candidate ladders, the engine's
+        ResultCache) keys on, so cached results stay exactly as (in)valid
+        after a restart as before it.  Pooled raw metrics are NOT
+        serialized: they are a bounded re-fillable buffer, not control
+        state."""
+        models: dict = {}
+        for name, m in self.models.items():
+            if "/" in name:
+                raise ValueError(
+                    f"node name {name!r} contains '/', which the checkpoint "
+                    "tree layout reserves as its key separator"
+                )
+            models[name] = {
+                "cpu": np.asarray(
+                    [m.cpu.slope, m.cpu.intercept, m.cpu.r2,
+                     m.cpu.x_min, m.cpu.x_max], np.float64
+                ),
+                "cap": np.asarray(
+                    [m.cap.slope, m.cap.intercept, m.cap.r2,
+                     m.cap.x_min, m.cap.x_max], np.float64
+                ),
+                "scalars": np.asarray(
+                    [m.gamma, m.gamma_r2, m.mem_base_mb,
+                     m.mem_slope_mb_per_ktps], np.float64
+                ),
+                "resource_class": str(m.resource_class.value),
+                "n_samples": int(m.n_samples),
+            }
+        return {
+            "version": int(self.version),
+            "models": models,
+            "calibrator": self.calibrator.state_dict(),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Inverse of :meth:`state_dict` — restores the node models, the
+        calibration window and the version counter bit-for-bit (the
+        restored store predicts, provisions and cache-keys exactly like
+        the one that was saved)."""
+        models: dict[str, NodeModel] = {}
+        for name, s in state["models"].items():
+            cpu = np.asarray(s["cpu"], np.float64)
+            cap = np.asarray(s["cap"], np.float64)
+            scalars = np.asarray(s["scalars"], np.float64)
+            models[name] = NodeModel(
+                name=name,
+                cpu=LinearFit(*(float(x) for x in cpu)),
+                cap=LinearFit(*(float(x) for x in cap)),
+                gamma=float(scalars[0]),
+                gamma_r2=float(scalars[1]),
+                mem_base_mb=float(scalars[2]),
+                mem_slope_mb_per_ktps=float(scalars[3]),
+                resource_class=ResourceClass(str(s["resource_class"])),
+                n_samples=int(s["n_samples"]),
+            )
+        self.models = models
+        self.calibrator.load_state_dict(state["calibrator"])
+        self.version = int(state["version"])
 
 
 class ForecastTracker:

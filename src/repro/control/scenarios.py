@@ -151,6 +151,90 @@ GUARD_PRESETS: dict[str, dict] = {
 }
 
 
+# -- failure traces ----------------------------------------------------------
+#
+# Load shapes stress the *demand* side; failure traces stress the *supply*
+# side.  A failure trace is a tuple of ``(step, kind, target)`` host
+# lifecycle events — exactly what ``FleetLoop.run(traces, failures=...)``
+# consumes — covering the three shapes a failure-domain-aware fleet must
+# survive: one host dying, a whole rack going dark (correlated failure),
+# and a host flapping up/down faster than anyone can drain it.
+
+
+def single_host_failure(
+    n: int, host: str, fail_at: int | None = None,
+    recover_after: int | None = None,
+) -> tuple[tuple[int, str, str], ...]:
+    """One host dies mid-trace (default: a third of the way in) and — when
+    ``recover_after`` is given — comes back that many steps later.  The
+    canonical N+1 scenario: survivors must hold the SLA for the failure
+    step, the forced replan refits by the next one."""
+    fail_at = fail_at if fail_at is not None else max(n // 3, 1)
+    if not 0 <= fail_at < n:
+        raise ValueError(f"fail_at={fail_at} outside the {n}-step trace")
+    events = [(fail_at, "fail", host)]
+    if recover_after is not None:
+        back = fail_at + int(recover_after)
+        if back < n:
+            events.append((back, "recover", host))
+    return tuple(events)
+
+
+def rack_failure(
+    n: int, rack: str, fail_at: int | None = None,
+    recover_after: int | None = None,
+) -> tuple[tuple[int, str, str], ...]:
+    """Every host in one failure domain dies at once (switch/PDU loss) —
+    the correlated case host-level spread cannot absorb; only rack-level
+    anti-affinity keeps a guaranteed tenant serving through it."""
+    fail_at = fail_at if fail_at is not None else max(n // 3, 1)
+    if not 0 <= fail_at < n:
+        raise ValueError(f"fail_at={fail_at} outside the {n}-step trace")
+    events = [(fail_at, "fail-rack", rack)]
+    if recover_after is not None:
+        back = fail_at + int(recover_after)
+        if back < n:
+            events.append((back, "recover-rack", rack))
+    return tuple(events)
+
+
+def flapping_host(
+    n: int, host: str, period: int = 2, start: int | None = None,
+) -> tuple[tuple[int, str, str], ...]:
+    """A host alternates failed/recovered every ``period`` steps from
+    ``start`` to the end of the trace — the pathological shape for warm
+    placement (the scheduler must neither chase the flapper nor wedge on
+    it; every failure epoch still ends with zero containers on it)."""
+    if period < 1:
+        raise ValueError(f"period must be >= 1, got {period}")
+    start = start if start is not None else max(n // 4, 1)
+    events = []
+    up = True
+    for s in range(start, n, period):
+        events.append((s, "fail" if up else "recover", host))
+        up = not up
+    return tuple(events)
+
+
+#: Name → failure-trace generator: every entry takes ``(n, ...)`` and
+#: returns ``(step, kind, target)`` events for ``FleetLoop.run``.
+FAILURE_SCENARIOS: dict[str, Callable[..., tuple]] = {
+    "single_host": single_host_failure,
+    "rack": rack_failure,
+    "flapping": flapping_host,
+}
+
+
+def make_failure_trace(name: str, n: int, **kw) -> tuple:
+    """Build a named failure trace; raises ``KeyError`` for unknown names."""
+    if name not in FAILURE_SCENARIOS:
+        raise KeyError(
+            f"unknown failure scenario {name!r}; "
+            f"available: {sorted(FAILURE_SCENARIOS)}"
+        )
+    return FAILURE_SCENARIOS[name](n, **kw)
+
+
 def make_trace(name: str, n: int, base_ktps: float = 400.0, seed: int = 0,
                split: float | int | None = None, **kw):
     """Build a named scenario trace; raises ``KeyError`` for unknown names.

@@ -106,3 +106,32 @@ class Calibrator:
     @property
     def retrain_count(self) -> int:
         return self._retrain_count
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Mutable calibration state as numpy-compatible leaves (the
+        configured thresholds/window are NOT serialized — they belong to
+        the object the state is loaded back into)."""
+        import numpy as np
+
+        recs = list(self.records)
+        return {
+            "descs": np.asarray([r.config_desc for r in recs], dtype=str),
+            "predicted": np.asarray(
+                [r.predicted_ktps for r in recs], np.float64
+            ),
+            "measured": np.asarray(
+                [r.measured_ktps for r in recs], np.float64
+            ),
+            "retrain_count": int(self._retrain_count),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.records.clear()
+        for desc, p, m in zip(
+            state["descs"], state["predicted"], state["measured"]
+        ):
+            self.records.append(
+                CalibrationRecord(str(desc), float(p), float(m))
+            )
+        self._retrain_count = int(state["retrain_count"])

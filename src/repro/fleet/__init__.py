@@ -23,9 +23,26 @@ ladders are pruned to a cost band before joint scoring, ``move_budget``
 caps voluntary container moves per replan (excess repacks are deferred to
 later rounds), and ``eviction_grace`` gives preemption victims one drain
 round before their capacity is reclaimed.
+
+It is *failure-domain aware*: hosts carry lifecycle state
+(up/draining/failed) and rack labels; a failed host's containers become
+forced displacements re-placed through the same preemption/defrag
+machinery (logged in ``FleetPlan.failover``), ``anti_affinity`` spreads
+each tenant across hosts (racks, for guaranteed tenants) so no single
+domain holds all of a tenant's capacity, and ``n1_tiers`` provisions the
+named QoS tiers with enough headroom that losing any one host still meets
+the SLA while the replacement containers come up.
 """
 
-from .cluster import Cluster, Host, MachineClass, Placement
+from .cluster import (
+    HOST_DRAINING,
+    HOST_FAILED,
+    HOST_UP,
+    Cluster,
+    Host,
+    MachineClass,
+    Placement,
+)
 from .scheduler import (
     FleetPlan,
     FleetScheduler,
@@ -37,6 +54,7 @@ from .loop import FleetEvent, FleetLoop, TenantStep
 
 __all__ = [
     "Cluster", "FleetEvent", "FleetLoop", "FleetPlan", "FleetScheduler",
+    "HOST_DRAINING", "HOST_FAILED", "HOST_UP",
     "Host", "MachineClass", "Placement", "QosTier", "TenantAllocation",
     "TenantSpec", "TenantStep",
 ]

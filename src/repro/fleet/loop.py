@@ -34,6 +34,18 @@
 Every step emits one :class:`FleetEvent` carrying a per-tenant
 :class:`TenantStep` log row — the event log the QoS acceptance criteria
 read (who was degraded, who met their SLA, who got shed first).
+
+**Host failures** are injected per step (``step(loads, failures=...)`` /
+``run(traces, failures=...)``, fed from the scenario library's failure
+traces).  A failure lands *mid-step*: the step's delivered capacity comes
+from the previous deployment's SURVIVING containers (the replacement
+containers the forced replan starts only serve from the next step), which
+is exactly the window N+1 headroom exists to cover — with ``n1_tiers`` on,
+the survivors alone still clear the SLA and the failure step books zero
+breaches.  Controller state persists through :mod:`repro.checkpoint`
+(:meth:`FleetLoop.checkpoint` / :meth:`FleetLoop.restore`), so a restarted
+controller resumes with the learned models, calibration and forecaster
+state of the dead one.
 """
 from __future__ import annotations
 
@@ -79,6 +91,9 @@ class TenantStep:
     #: this tenant's repack was deferred by the scheduler's move budget —
     #: it keeps its previous deployment and is retried next replan
     deferred: bool = False
+    #: containers this tenant lost to failed hosts this step (its achieved
+    #: rate was measured on the survivors; replacements serve next step)
+    failover: int = 0
 
 
 @dataclasses.dataclass
@@ -100,6 +115,11 @@ class FleetEvent:
     moves: int = 0
     #: containers preempted by this step's replan, across all tenants
     evicted: int = 0
+    #: hosts down at the end of this step (cluster lifecycle snapshot)
+    failed_hosts: tuple = ()
+    #: this step's forced displacements: ``(tenant, host, containers)``
+    #: straight from ``FleetPlan.failover``
+    failover: tuple = ()
 
     def tenant(self, name: str) -> TenantStep:
         for t in self.tenants:
@@ -156,6 +176,8 @@ class FleetLoop:
         incremental: bool = True,
         move_budget: int | None = None,
         eviction_grace: bool = False,
+        anti_affinity: bool = False,
+        n1_tiers: "Sequence[QosTier] | None" = None,
     ) -> None:
         names = [t.name for t in tenants]
         if len(set(names)) != len(names):
@@ -181,6 +203,7 @@ class FleetLoop:
             cluster, evaluator, feasibility_threshold=saturation_threshold,
             incremental=incremental, move_budget=move_budget,
             eviction_grace=eviction_grace,
+            anti_affinity=anti_affinity, n1_tiers=n1_tiers,
         )
         self.saturation_threshold = saturation_threshold
         self.plan: FleetPlan | None = None
@@ -189,14 +212,39 @@ class FleetLoop:
         self._breached: dict[str, bool] = {n: False for n in names}
 
     # -- one cycle ----------------------------------------------------------
-    def step(self, loads: Mapping[str, float]) -> FleetEvent:
+    def step(
+        self,
+        loads: Mapping[str, float],
+        failures: "Sequence[tuple[str, str]] | None" = None,
+    ) -> FleetEvent:
+        # failures land first: ``(kind, target)`` events mutate the
+        # cluster's lifecycle state and force a replan.  This step's
+        # delivered capacity comes from the PREVIOUS deployment's surviving
+        # containers (replacements only serve next step) — see the module
+        # docstring for the mid-step timing model
+        failure_events = tuple(failures or ())
+        for kind, target in failure_events:
+            if kind == "fail":
+                self.cluster.fail_host(target)
+            elif kind == "recover":
+                self.cluster.recover_host(target)
+            elif kind == "drain":
+                self.cluster.drain_host(target)
+            elif kind == "fail-rack":
+                self.cluster.fail_rack(target)
+            elif kind == "recover-rack":
+                self.cluster.recover_rack(target)
+            else:
+                raise ValueError(f"unknown failure event kind {kind!r}")
+        prior_plan = self.plan
+
         # sense + forecast: per-tenant targets through per-tenant guards;
         # tenants with forecasters are judged at their window-peak target
         targets: dict[str, float] = {}
         guard_of: dict[str, str] = {}
         cause_of: dict[str, str] = {}
         windows: dict[str, list[float]] = {}
-        replan = self.plan is None
+        replan = self.plan is None or bool(failure_events)
         for spec in self.tenants:
             load = float(loads[spec.name])
             target = spec.guards.target_for(load)
@@ -269,12 +317,52 @@ class FleetLoop:
                 self._breached[spec.name] = False
         assert self.plan is not None
         causes = {c for c in cause_of.values() if c}
+        if failure_events:
+            causes.add("failover")
         fleet_cause = carried
         if replan:
-            for dominant in ("bootstrap", "measured-sla", "guard", "forecast"):
+            for dominant in (
+                "bootstrap", "failover", "measured-sla", "guard", "forecast"
+            ):
                 if dominant in causes:
                     fleet_cause = dominant
                     break
+
+        # a lifecycle event lands mid-step: what serves THIS step is the
+        # previous deployment's surviving containers — the replan above only
+        # takes effect next step.  Build each tenant's survivor view of the
+        # prior plan: (survivor config, min surviving host speed, containers
+        # kept, containers deployed, prior allocation); config None = some
+        # pipeline stage was wiped out entirely (delivers nothing)
+        failure_step = bool(failure_events) and prior_plan is not None
+        survivors: dict[str, tuple] = {}
+        if failure_step:
+            down = self.cluster.failed_hosts()
+            for spec in self.tenants:
+                pa = prior_plan.allocation(spec.name)
+                if pa.config is None or pa.placement is None:
+                    continue
+                keep = [
+                    ci
+                    for ci, h in enumerate(pa.placement.host_names)
+                    if h and h not in down
+                ]
+                cfg = (
+                    self.scheduler._survivor_config(pa.config, keep)
+                    if keep
+                    else None
+                )
+                speed = (
+                    min(
+                        self.cluster.host_speed(pa.placement.host_names[ci])
+                        for ci in keep
+                    )
+                    if cfg is not None
+                    else 1.0
+                )
+                survivors[spec.name] = (
+                    cfg, speed, len(keep), len(pa.config.dims), pa
+                )
 
         # act: measure all deployed configs at their offered loads in one
         # batched call; values are (derated achieved, bottleneck,
@@ -282,31 +370,48 @@ class FleetLoop:
         # see reference units or the speed derate is booked as model error
         measured: dict[str, tuple[float, str | None, float, float]] = {}
         if self.evaluator is not None:
-            admitted = [
-                (spec, self.plan.allocation(spec.name))
-                for spec in self.tenants
-                if self.plan.allocation(spec.name).config is not None
-            ]
+            if failure_step:
+                # failure steps drive the SURVIVOR configs, not the fresh
+                # plan; a tenant with nothing left standing (or nothing
+                # deployed before the failure) delivers zero this step
+                admitted = [
+                    (spec, survivors[spec.name][0], survivors[spec.name][1])
+                    for spec in self.tenants
+                    if survivors.get(spec.name, (None,))[0] is not None
+                ]
+                standing = {s.name for s, _c, _sp in admitted}
+                for spec in self.tenants:
+                    if spec.name not in standing:
+                        measured[spec.name] = (0.0, None, 0.0, 0.0)
+            else:
+                admitted = [
+                    (
+                        spec,
+                        self.plan.allocation(spec.name).config,
+                        self.plan.allocation(spec.name).placement.min_speed
+                        if self.plan.allocation(spec.name).placement
+                        else 1.0,
+                    )
+                    for spec in self.tenants
+                    if self.plan.allocation(spec.name).config is not None
+                ]
             if admitted:
                 # host speed scales *capacity*, not delivered rate: the
                 # reference-host simulator is driven at load/speed and its
                 # answer scaled back by speed, so an unsaturated tenant on a
                 # slow host still achieves its full offered load
-                groups = [[a.config] for _s, a in admitted]
-                speeds = [
-                    a.placement.min_speed if a.placement else 1.0
-                    for _s, a in admitted
-                ]
+                groups = [[c] for _s, c, _sp in admitted]
+                speeds = [sp for _s, _c, sp in admitted]
                 offered = [
                     float(loads[s.name]) / sp
-                    for (s, _a), sp in zip(admitted, speeds)
+                    for (s, _c, _p), sp in zip(admitted, speeds)
                 ]
                 # per-step measurements also consume only scalar reductions
                 # (achieved + bottleneck) — the fleet loop never pools
                 # trajectories, so summary-mode evaluators ship no
                 # trajectory bytes anywhere on a fleet trace
                 evals = evaluate_jobs_with(self.evaluator, groups, offered)
-                for (spec, _alloc), sp, off, (ev,) in zip(
+                for (spec, _c, _p), sp, off, (ev,) in zip(
                     admitted, speeds, offered, evals
                 ):
                     measured[spec.name] = (
@@ -317,11 +422,27 @@ class FleetLoop:
                     )
 
         # learn + event assembly
+        lost_of: dict[str, int] = {}
+        if replan:
+            for tname, _host, n_lost in self.plan.failover:
+                lost_of[tname] = lost_of.get(tname, 0) + int(n_lost)
         steps: list[TenantStep] = []
         for spec in self.tenants:
             load = float(loads[spec.name])
             alloc = self.plan.allocation(spec.name)
-            fallback = min(alloc.predicted_ktps, load) if alloc.admitted else 0.0
+            if failure_step:
+                # no-evaluator estimate of survivor capacity: the prior
+                # promise, pro-rated by the surviving container fraction
+                surv = survivors.get(spec.name)
+                if surv is None or surv[0] is None:
+                    fallback = 0.0
+                else:
+                    _cfg, _spd, kept, total, pa = surv
+                    fallback = min(pa.predicted_ktps * kept / total, load)
+            else:
+                fallback = (
+                    min(alloc.predicted_ktps, load) if alloc.admitted else 0.0
+                )
             achieved, bottleneck, ref_achieved, ref_load = measured.get(
                 spec.name, (fallback, alloc.bottleneck, 0.0, 0.0)
             )
@@ -337,13 +458,16 @@ class FleetLoop:
                 alloc.admitted
                 and achieved < self.saturation_threshold * promised
             )
-            if spec.name in measured:
+            if spec.name in measured and not failure_step:
                 # only real measurements may calibrate: the fallback above is
                 # the planner's own prediction (mirrors ControlLoop skipping
                 # learning when _measure() has no channel).  Calibration runs
                 # in reference-host units — the node models describe a
                 # speed-1.0 host, so observing the derated rate would book
-                # the host speed as model error (and double-derate capacity)
+                # the host speed as model error (and double-derate capacity).
+                # Failure steps never calibrate: what was measured is a
+                # survivor fragment, not ``alloc.config``, and booking its
+                # shortfall against the full plan would corrupt the models
                 self._learn(spec, alloc, ref_load, ref_achieved)
             steps.append(
                 TenantStep(
@@ -359,11 +483,13 @@ class FleetLoop:
                     admitted=alloc.admitted,
                     sla_met=sla_met,
                     bottleneck=bottleneck,
-                    cause=cause_of.get(spec.name, ""),
+                    cause=cause_of.get(spec.name, "")
+                    or ("failover" if lost_of.get(spec.name) else ""),
                     moves=alloc.moves if replan else 0,
                     evicted=alloc.evicted if replan else 0,
                     draining=len(alloc.draining),
                     deferred=alloc.deferred,
+                    failover=lost_of.get(spec.name, 0),
                 )
             )
 
@@ -376,20 +502,65 @@ class FleetLoop:
             cause=fleet_cause,
             moves=self.plan.total_moves if replan else 0,
             evicted=sum(t.evicted for t in steps),
+            failed_hosts=tuple(sorted(self.cluster.failed_hosts())),
+            failover=self.plan.failover if replan else (),
         )
         self.events.append(ev)
         return ev
 
-    def run(self, traces: Mapping[str, Iterable[float]]) -> list[FleetEvent]:
-        """Drive the loop over per-tenant load traces (all equal length)."""
+    def run(
+        self,
+        traces: Mapping[str, Iterable[float]],
+        failures=None,
+    ) -> list[FleetEvent]:
+        """Drive the loop over per-tenant load traces (all equal length).
+
+        ``failures`` injects host lifecycle events, either as a mapping
+        ``step -> [(kind, target), ...]`` or as a flat iterable of
+        ``(step, kind, target)`` tuples (the scenario library's failure
+        traces emit the latter).  Step indices are relative to the start
+        of THIS run, so a restored controller replaying a trace suffix
+        re-applies the right schedule."""
         columns = {n: list(t) for n, t in traces.items()}
         lengths = {len(c) for c in columns.values()}
         if len(lengths) != 1:
             raise ValueError("per-tenant traces must share one length")
+        by_step: dict[int, list[tuple[str, str]]] = {}
+        if failures is not None:
+            if hasattr(failures, "items"):
+                for step, evs in failures.items():
+                    by_step.setdefault(int(step), []).extend(
+                        (k, t) for k, t in evs
+                    )
+            else:
+                for step, kind, target in failures:
+                    by_step.setdefault(int(step), []).append((kind, target))
         start = len(self.events)
         for i in range(lengths.pop()):
-            self.step({n: c[i] for n, c in columns.items()})
+            self.step(
+                {n: c[i] for n, c in columns.items()},
+                failures=by_step.get(i),
+            )
         return self.events[start:]
+
+    # -- checkpointing -------------------------------------------------------
+    def checkpoint(self, ckpt, blocking: bool = True) -> int:
+        """Persist the controller's learned state — per-tenant models,
+        calibration windows, forecaster state and guard memory — through a
+        :class:`~repro.checkpoint.Checkpointer`.  Returns the saved step."""
+        from ..checkpoint.control_state import save_controller
+
+        return save_controller(ckpt, self, blocking=blocking)
+
+    def restore(self, ckpt) -> "int | None":
+        """Load the newest valid checkpoint into this loop (None when the
+        directory holds none).  The restored loop has no deployed plan —
+        its next ``step()`` replans against the LIVE cluster (host health
+        is re-observed, never trusted from disk) — but it plans with the
+        dead controller's exact models, calibration and forecasts."""
+        from ..checkpoint.control_state import restore_controller
+
+        return restore_controller(ckpt, self)
 
     # -- internals ----------------------------------------------------------
     def _learn(

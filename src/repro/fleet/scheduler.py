@@ -52,7 +52,16 @@ is that arbiter:
   deployment and the deferral is carried in the plan, so a large repack
   amortizes over successive rounds), and ``eviction_grace`` gives preemption
   victims a drain round: they are marked draining, keep serving through the
-  round, and are reclaimed at the next replan.
+  round, and are reclaimed at the next replan,
+* **host failure is a first-class event**: ``schedule(...,
+  failed_hosts=...)`` (or lifecycle state carried by the
+  :class:`Cluster` itself) removes dead hosts from the inventory, turns
+  every container they held into a *forced displacement* — re-placed
+  through the same preemption/defrag/incremental machinery, exempt from
+  ``move_budget``, logged in ``FleetPlan.failover`` — and with
+  ``anti_affinity`` / ``n1_tiers`` enabled, placements are spread across
+  failure domains and provisioned N+1 so losing any single host still
+  meets the SLA while the replacement containers start.
 """
 from __future__ import annotations
 
@@ -171,6 +180,11 @@ class TenantAllocation:
     #: this tenant's repack was deferred by the move budget: it keeps its
     #: previous deployment (or stays shut out) until a later round
     deferred: bool = False
+    #: N+1 verdict — None when this tenant's tier is not under ``n1_tiers``;
+    #: True when losing any ONE host of the committed placement still
+    #: delivers ``threshold × planned`` (measured through the joint
+    #: evaluator call when one is present, closed-form otherwise)
+    n1_feasible: "bool | None" = None
 
     @property
     def admitted(self) -> bool:
@@ -202,6 +216,10 @@ class FleetPlan:
     #: Pair with ``repro.streams.dedup_info()``'s ``rows_executed`` to read
     #: the cross-tenant dedup factor straight off a plan.
     eval_rows: int = 0
+    #: forced displacements off failed hosts, in previous-plan order:
+    #: ``(tenant, failed host, containers lost)``.  Empty when no host
+    #: failed between the previous plan and this one.
+    failover: tuple = ()
 
     @property
     def cores_free(self) -> float:
@@ -270,6 +288,9 @@ class _Candidate:
     result: AllocationResult
     trial: Placement | None = None     # warm (or cold-fallback) trial pack
     warm: bool = True                  # the trial honored warm preferences
+    #: closed-form N+1 verdict on the trial placement (None: not an N+1
+    #: tenant); the measured verdict from the joint call refines it
+    n1_ok: "bool | None" = None
 
     @property
     def config(self) -> Configuration:
@@ -318,6 +339,23 @@ class FleetScheduler:
     * ``prune_band`` — candidate-set pruning: only trial-feasible candidates
       within ``prune_band``× the provisional winner's cpu footprint are
       scored by the evaluator.
+
+    Failure-domain knobs (both default OFF — with no failed hosts and both
+    knobs off, plans are bitwise identical to a scheduler without them):
+
+    * ``anti_affinity`` — spread every multi-container tenant across at
+      least two hosts (two *racks* for guaranteed tenants on a multi-rack
+      cluster), so no single failure domain holds all of a tenant's
+      containers.  Best-effort: a cluster with one usable domain still
+      places.
+    * ``n1_tiers`` — QoS tiers provisioned N+1: candidate ladders gain
+      inflated rungs sized so that losing any ONE host of the placement
+      still delivers ``threshold × planned`` while replacements start.
+      The verdict is *measured* — each candidate's single-host-loss
+      survivor configurations are scored inside the same single batched
+      ``evaluate_jobs`` call as the capacity probes — and recorded per
+      tenant in :attr:`TenantAllocation.n1_feasible`.  N+1 tenants are
+      implicitly spread host-level (headroom on one host is no headroom).
     """
 
     def __init__(
@@ -329,6 +367,8 @@ class FleetScheduler:
         move_budget: int | None = None,
         eviction_grace: bool = False,
         prune_band: float = 2.0,
+        anti_affinity: bool = False,
+        n1_tiers: "Sequence[QosTier] | None" = None,
     ) -> None:
         self.cluster = cluster
         self.evaluator = evaluator
@@ -339,6 +379,8 @@ class FleetScheduler:
             raise ValueError("move_budget must be >= 0")
         self.eviction_grace = bool(eviction_grace)
         self.prune_band = float(prune_band)
+        self.anti_affinity = bool(anti_affinity)
+        self.n1_tiers = frozenset(n1_tiers or ())
         # candidate-ladder memo: (spec identity, rate, models version,
         # overprovision) -> tuple of AllocationResults.  A fleet at steady
         # state re-derives the same (dim × rounding) ladder every replan;
@@ -367,6 +409,7 @@ class FleetScheduler:
         demands: Sequence[tuple[TenantSpec, float]],
         windows: "Mapping[str, Sequence[float]] | None" = None,
         previous: "FleetPlan | None" = None,
+        failed_hosts: "Sequence[str] | None" = None,
     ) -> FleetPlan:
         """One joint scheduling round.
 
@@ -389,6 +432,15 @@ class FleetScheduler:
                 feasibility are unchanged keep their previous allocation
                 verbatim.  ``None`` packs cold from an empty inventory
                 (every container counts as a move).
+            failed_hosts: host names that died since ``previous`` was
+                deployed, in addition to any failures the cluster's own
+                lifecycle state carries (:meth:`Cluster.fail_host`).  Dead
+                hosts leave the inventory; every container the previous
+                plan held on one becomes a *forced* displacement — always
+                touched, exempt from ``move_budget``, recorded in
+                ``FleetPlan.failover`` — re-placed through the ordinary
+                preemption/defrag machinery, so a guaranteed tenant's
+                re-placement may evict lower tiers but never the reverse.
 
         Returns:
             The :class:`FleetPlan` in the original demand order, carrying
@@ -400,17 +452,53 @@ class FleetScheduler:
         names = [spec.name for spec, _t in demands]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names in demands: {names}")
-        hosts = self.cluster.inventory()
         specs = {spec.name: spec for spec, _t in demands}
+        # effective failed set: the caller's view plus the cluster's own
+        # lifecycle state (inventory() already excludes the latter)
+        failed = frozenset(failed_hosts or ()) | self.cluster.failed_hosts()
+        hosts = self.cluster.inventory()
+        if failed:
+            hosts = [h for h in hosts if h.name not in failed]
+        if not hosts:
+            raise ValueError("every host in the cluster has failed")
         timings = {
             k: 0.0 for k in ("restore", "allocate", "pack", "score", "repair")
         }
         eval_rows = 0
 
+        # -- failover: containers on dead hosts are forced displacements ----
+        failover_log: list[tuple[str, str, int]] = []
+        failover_forced: set[str] = set()
+        if failed and previous is not None:
+            for a in previous.allocations:
+                if a.placement is None or a.tenant not in specs:
+                    continue
+                lost: dict[str, int] = {}
+                for hname in a.placement.host_names:
+                    if hname in failed:
+                        lost[hname] = lost.get(hname, 0) + 1
+                if lost:
+                    failover_forced.add(a.tenant)
+                    for hname in sorted(lost):
+                        failover_log.append((a.tenant, hname, lost[hname]))
+
         # -- warm state: re-seat the previous plan's residency ---------------
         t0 = time.perf_counter()
         residency = self._restore_residency(previous, specs, hosts)
         touched = self._touched_set(demands, windows, previous, residency)
+        if touched is not None:
+            # failover displacements are always replanned, and residents of
+            # a draining host must migrate off even though their container
+            # count re-seated intact
+            touched |= failover_forced
+            drain = {h.name for h in hosts if h.status == "draining"}
+            if drain:
+                for rname, res in residency.items():
+                    if any(
+                        hi >= 0 and hosts[hi].name in drain
+                        for hi in res.seated
+                    ):
+                        touched.add(rname)
         timings["restore"] = time.perf_counter() - t0
 
         evicted_count = {n: 0 for n in names}
@@ -432,22 +520,33 @@ class FleetScheduler:
         chosen: dict[str, int] = {}
         prefer_of: dict[str, tuple] = {}
 
+        multi_rack = len({h.rack for h in hosts if h.status == "up"}) > 1
+
         for spec, target in self._priority_order(demands):
             name = spec.name
             prev_alloc = prev_by.get(name)
             window = tuple(float(x) for x in (windows or {}).get(name, ()))
-            forced = name in displaced or evicted_count[name] > 0
+            forced = (
+                name in displaced
+                or evicted_count[name] > 0
+                or name in failover_forced
+            )
 
             if (
                 prev_alloc is not None
                 and prev_alloc.admitted
                 and name in drained_marks
                 and name not in displaced
+                and name not in failover_forced
             ):
                 # eviction grace: marked draining this round — the tenant
                 # keeps serving its current deployment; the drained
                 # containers are reclaimed at the next replan (restore
-                # skips them, and "draining" forces it into the touched set)
+                # skips them, and "draining" forces it into the touched set).
+                # A failover-displaced victim is excluded: handing back its
+                # previous allocation verbatim would leave it "serving"
+                # containers on a dead host, so it replans instead (its
+                # fresh draining marks are dropped with it)
                 by_tenant[name] = dataclasses.replace(
                     prev_alloc,
                     moves=0,
@@ -517,9 +616,16 @@ class FleetScheduler:
                 by_tenant[name] = self._shut_out(spec, target, window=window)
                 continue
 
+            n1 = spec.qos in self.n1_tiers
+            spread = self._spread_for(spec.qos, multi_rack)
             t0 = time.perf_counter()
             cands = self._candidate_set(spec, ba)
-            pick = self._trial_candidates(cands, hosts, prefer)
+            if n1:
+                self._extend_n1(spec, ba, cands)
+            pick = self._trial_candidates(
+                cands, hosts, prefer, spread=spread,
+                n1_planned=ba.feasible_rate_ktps if n1 else None,
+            )
             if pick is None:
                 timings["pack"] += time.perf_counter() - t0
                 by_tenant[name] = self._shut_out(spec, target, window=window)
@@ -548,6 +654,7 @@ class FleetScheduler:
             placement = Cluster.pack(
                 winner.config.dims, hosts,
                 prefer=prefer if winner.warm else None,
+                spread=spread,
             )
             moves_used += placement.moves
             timings["pack"] += time.perf_counter() - t0
@@ -569,6 +676,7 @@ class FleetScheduler:
                 move_cost=placement.move_cost,
                 candidates_scored=len(cands),
                 window=window,
+                n1_feasible=winner.n1_ok if n1 else None,
             )
 
         # joint scoring: every *replanned* admitted tenant's pruned candidate
@@ -580,7 +688,7 @@ class FleetScheduler:
         if self.evaluator is not None:
             eval_rows = self._score_and_repair(
                 by_tenant, cand_sets, chosen, prefer_of, windows, hosts,
-                timings,
+                timings, multi_rack,
             )
 
         # a tenant whose window was never scored — shed entirely, or no
@@ -598,13 +706,14 @@ class FleetScheduler:
         timings["total"] = time.perf_counter() - t_start
         return FleetPlan(
             allocations=allocations,
-            cores_total=self.cluster.total_cores(),
+            cores_total=float(sum(h.cores for h in hosts)),
             cores_used=float(sum(a.cpus for a in allocations)),
             eviction_log=tuple(eviction_log),
             touched=tuple(replanned),
             deferred=tuple(deferred),
             timings=timings,
             eval_rows=eval_rows,
+            failover=tuple(failover_log),
         )
 
     # -- warm state -----------------------------------------------------------
@@ -982,26 +1091,119 @@ class FleetScheduler:
             self._cand_memo.popitem(last=False)
         return results
 
-    @staticmethod
+    def _spread_for(self, qos: QosTier, multi_rack: bool) -> str | None:
+        """The anti-affinity domain for this tenant, or None.  Guaranteed
+        tenants spread across *racks* when the cluster has more than one;
+        everyone else (and every N+1 tenant — headroom concentrated on one
+        host is no headroom) spreads across hosts."""
+        n1 = qos in self.n1_tiers
+        if not self.anti_affinity and not n1:
+            return None
+        if self.anti_affinity and qos == QosTier.GUARANTEED and multi_rack:
+            return "rack"
+        return "host"
+
+    def _extend_n1(self, spec: TenantSpec, ba, cands: list[_Candidate]) -> None:
+        """Append *inflated* candidate rungs for an N+1 tenant.  Each
+        balanced-container template with ``r`` replicas absorbing
+        ``rate_ktps`` each receives group rate ``g ≤ r·rate_ktps``; pushing
+        the allocation rate past ``alloc · r·rate_ktps/g`` forces a spare
+        replica into the group (rates propagate linearly), so losing any
+        one replica leaves the original count.  The max of that factor
+        across templates inflates every group at once; a second, larger
+        rung adds margin for lopsided packings.  Trial packing (with
+        host-level spread) and the measured survivor scoring decide which
+        rung actually wins — an N+1 rung that does not fit simply loses."""
+        res = ba.result
+        alloc = max(res.target_rate_ktps, 1e-9)
+        factor = 0.0
+        for t in res.templates:
+            g = res.predicted_node_rates.get(t.nodes[0], 0.0)
+            if g > 0.0:
+                factor = max(factor, t.replicas * t.rate_ktps / g)
+        if factor <= 0.0:
+            return
+        seen = {(c.config.packing, c.config.dims) for c in cands}
+        for bump in (1.02, 1.55):
+            rate = alloc * factor * bump
+            for r in self._ladder_results(spec, rate):
+                key = (r.config.packing, r.config.dims)
+                if key not in seen:
+                    seen.add(key)
+                    cands.append(_Candidate(result=r))
+
+    def _n1_closed_form(
+        self, result: AllocationResult, placement: Placement, planned: float
+    ) -> bool:
+        """Closed-form single-host-loss check: for every host the placement
+        uses, losing it leaves each balanced-container template with
+        ``r - lost`` of its ``r`` replicas.  Survivors run up to their
+        per-container *sustainable* rate (``t.rate_ktps``), not just their
+        planned share — an N+1 rung deliberately carries spare replicas, so
+        the surviving capacity of a template is ``(r - lost) · rate``
+        against its required group rate — and the worst template fraction,
+        speed-derated, must still reach ``threshold × planned``.  The
+        allocator lays containers out template-by-template in consecutive
+        replica blocks, which is what maps containers back to templates."""
+        spans: list[tuple[int, int]] = []
+        i = 0
+        for t in result.templates:
+            spans.append((i, i + t.replicas))
+            i += t.replicas
+        hosts_used = {h for h in placement.host_of if h >= 0}
+        bar = self.feasibility_threshold * planned
+        for h in hosts_used:
+            frac = 1.0
+            for (lo, hi), t in zip(spans, result.templates):
+                lost = sum(
+                    1 for ci in range(lo, hi) if placement.host_of[ci] == h
+                )
+                if lost:
+                    g = result.predicted_node_rates.get(t.nodes[0], 0.0)
+                    cap = (t.replicas - lost) * t.rate_ktps
+                    frac = min(
+                        frac, cap / g if g > 0.0 else 0.0, 1.0
+                    )
+            survive = result.target_rate_ktps * frac * placement.min_speed
+            if survive + 1e-9 < bar:
+                return False
+        return True
+
     def _trial_candidates(
-        cands: list[_Candidate], hosts: list[Host], prefer
+        self,
+        cands: list[_Candidate],
+        hosts: list[Host],
+        prefer,
+        spread: str | None = None,
+        n1_planned: float | None = None,
     ) -> int | None:
         """Warm trial-pack every candidate; return the index of the
         provisional winner — the cheapest feasible repack by
-        ``(move_cost, cpus)`` — or None when nothing places."""
+        ``(move_cost, cpus)`` — or None when nothing places.  For an N+1
+        tenant (``n1_planned`` set) each feasible trial also gets the
+        closed-form single-host-loss verdict, and candidates that survive
+        outrank every one that does not."""
         best: tuple | None = None
         for k, cand in enumerate(cands):
             trial = [h.clone() for h in hosts]
-            pl = Cluster.pack(cand.config.dims, trial, prefer=prefer)
+            pl = Cluster.pack(cand.config.dims, trial, prefer=prefer,
+                              spread=spread)
             cand.warm = True
             if not pl.feasible and prefer:
                 # a preference-first order can wedge where plain FFD fits
                 trial = [h.clone() for h in hosts]
-                pl = Cluster.pack(cand.config.dims, trial)
+                pl = Cluster.pack(cand.config.dims, trial, spread=spread)
                 cand.warm = False
             cand.trial = pl
             if pl.feasible:
-                key = (pl.move_cost, cand.result.total_cpus, k)
+                if n1_planned is not None:
+                    cand.n1_ok = self._n1_closed_form(
+                        cand.result, pl, n1_planned
+                    )
+                key = (
+                    0 if (n1_planned is None or cand.n1_ok) else 1,
+                    pl.move_cost, cand.result.total_cpus, k,
+                )
                 if best is None or key < best[0]:
                     best = (key, k)
         return None if best is None else best[1]
@@ -1041,6 +1243,24 @@ class FleetScheduler:
                 kept = sorted(kept + rest[:1])
         return kept
 
+    def _survivor_config(
+        self, config: Configuration, keep: Sequence[int]
+    ) -> "Configuration | None":
+        """The configuration left after dropping the containers NOT in
+        ``keep`` (one host's worth) — or None when the loss wipes out every
+        instance of some node (no rebalancing can save a pipeline stage
+        that no longer exists)."""
+        packing = tuple(config.packing[ci] for ci in keep)
+        needed = {n for p in config.packing for n in p}
+        present = {n for p in packing for n in p}
+        if present != needed:
+            return None
+        return Configuration(
+            dag=config.dag,
+            packing=packing,
+            dims=tuple(config.dims[ci] for ci in keep),
+        )
+
     def _score_and_repair(
         self,
         by_tenant: dict[str, TenantAllocation],
@@ -1050,6 +1270,7 @@ class FleetScheduler:
         windows: "Mapping[str, Sequence[float]] | None",
         hosts: list[Host],
         timings: dict,
+        multi_rack: bool = False,
     ) -> int:
         t0 = time.perf_counter()
         groups: list[list[Configuration]] = []
@@ -1076,7 +1297,52 @@ class FleetScheduler:
                 loads.append(
                     PerCandidateLoads(float(rate) / s for s in speeds)
                 )
-            spans.append((a, cands, pos, speeds, window))
+            # N+1 survivor rows: for every candidate of an N+1 tenant, the
+            # configuration left by each single-host loss — capacity-probed
+            # in the SAME batched call.  ``surv_of[k]`` is (start, count)
+            # into the extra group, None for a candidate some loss wipes
+            # out (a node type gone, or everything on one host).
+            surv_cfgs: list[Configuration] = []
+            surv_speeds: list[float] = []
+            surv_of: "list[tuple[int, int] | None] | None" = None
+            if a.qos in self.n1_tiers:
+                surv_of = []
+                for c in cands:
+                    if not c.feasible:
+                        surv_of.append(None)
+                        continue
+                    pl = c.trial
+                    used = sorted({h for h in pl.host_of if h >= 0})
+                    if len(used) < 2:
+                        surv_of.append(None)
+                        continue
+                    start = len(surv_cfgs)
+                    ok = True
+                    for h in used:
+                        keep_idx = [
+                            ci for ci in range(len(pl.host_of))
+                            if pl.host_of[ci] >= 0 and pl.host_of[ci] != h
+                        ]
+                        cfg = self._survivor_config(c.config, keep_idx)
+                        if cfg is None:
+                            ok = False
+                            break
+                        surv_cfgs.append(cfg)
+                        surv_speeds.append(min(
+                            hosts[pl.host_of[ci]].speed for ci in keep_idx
+                        ))
+                    if ok:
+                        surv_of.append((start, len(used)))
+                    else:
+                        del surv_cfgs[start:]
+                        del surv_speeds[start:]
+                        surv_of.append(None)
+                if surv_cfgs:
+                    groups.append(surv_cfgs)
+                    loads.append(OVERLOAD_KTPS)
+            spans.append(
+                (a, cands, pos, speeds, window, surv_of, surv_speeds)
+            )
         if not groups:
             return 0
         eval_rows = sum(len(g) for g in groups)
@@ -1088,19 +1354,44 @@ class FleetScheduler:
         timings["score"] += time.perf_counter() - t0
         t0 = time.perf_counter()
         i = 0
-        for a, cands, pos, speeds, window in spans:
+        for a, cands, pos, speeds, window, surv_of, surv_speeds in spans:
             caps = evals[i]
             derated = [
                 caps[k].achieved_ktps * speeds[k] for k in range(len(cands))
             ]
             bar = self.feasibility_threshold * a.planned_ktps
+            # measured N+1 verdict per candidate: every single-host-loss
+            # survivor must still deliver the bar at its surviving speed
+            n1_meas: "list[bool] | None" = None
+            has_surv = surv_of is not None and any(
+                s is not None for s in surv_of
+            )
+            if surv_of is not None:
+                srows = evals[i + 1 + len(window)] if has_surv else []
+                n1_meas = []
+                for k in range(len(cands)):
+                    span = surv_of[k]
+                    if span is None:
+                        n1_meas.append(False)
+                        continue
+                    start, count = span
+                    n1_meas.append(all(
+                        srows[j].achieved_ktps * surv_speeds[j] >= bar
+                        for j in range(start, start + count)
+                    ))
             final = pos
-            if derated[final] < bar:
+            if derated[final] < bar or (
+                n1_meas is not None and not n1_meas[final]
+            ):
                 final = self._repair(
                     a, cands,
                     [c.achieved_ktps for c in caps], derated, bar, final,
                     hosts, prefer_of[a.tenant],
+                    spread=self._spread_for(a.qos, multi_rack),
+                    eligible=n1_meas,
                 )
+            if n1_meas is not None:
+                a.n1_feasible = n1_meas[final]
             # derate by the speed of the placement actually committed: for
             # the provisional winner it equals the trial speed, and for a
             # repair swap it reflects where the live repack really landed
@@ -1118,7 +1409,7 @@ class FleetScheduler:
                 r >= self.feasibility_threshold * ref
                 for r, ref in zip(rates, window)
             )
-            i += 1 + len(window)
+            i += 1 + len(window) + (1 if has_surv else 0)
         timings["repair"] += time.perf_counter() - t0
         return eval_rows
 
@@ -1132,10 +1423,13 @@ class FleetScheduler:
         current: int,
         hosts: list[Host],
         prefer,
+        spread: str | None = None,
+        eligible: "list[bool] | None" = None,
     ) -> int:
         """The provisional winner's measured capacity misses the planned
-        rate: swap in the cheapest candidate that delivers it (or, when
-        nothing reaches the bar, the one that gets closest — mirroring
+        rate (or, for an N+1 tenant, flunks the measured survivor check —
+        ``eligible``): swap in the cheapest candidate that delivers it (or,
+        when nothing reaches the bar, the one that gets closest — mirroring
         :func:`repro.core.allocator.allocate`'s fallback).  The swap
         re-places on the live inventory, and the bar is re-checked against
         the speed of the placement the repack *actually* lands (the trial
@@ -1146,6 +1440,7 @@ class FleetScheduler:
         meets = [
             k for k in range(len(cands))
             if k != current and cands[k].feasible and derated[k] >= bar
+            and (eligible is None or eligible[k])
         ]
         meets.sort(
             key=lambda k: (
@@ -1154,6 +1449,11 @@ class FleetScheduler:
         )
         strict = True
         if not meets:
+            if derated[current] >= bar:
+                # capacity holds and no candidate fixes the N+1 shortfall:
+                # keep the winner (n1_feasible stays False — the honest
+                # answer on a cluster without room for headroom)
+                return current
             best = max(range(len(cands)), key=lambda k: derated[k])
             if best == current or derated[best] <= derated[current]:
                 return current
@@ -1163,12 +1463,13 @@ class FleetScheduler:
         for k in meets:
             Cluster.release(a.placement, a.config.dims, hosts)
             trial = [h.clone() for h in hosts]
-            pl = Cluster.pack(cands[k].config.dims, trial, prefer=prefer)
+            pl = Cluster.pack(cands[k].config.dims, trial, prefer=prefer,
+                              spread=spread)
             if pl.feasible and (
                 not strict or ref_caps[k] * pl.min_speed >= bar
             ):
                 committed = Cluster.pack(
-                    cands[k].config.dims, hosts, prefer=prefer
+                    cands[k].config.dims, hosts, prefer=prefer, spread=spread
                 )
                 a.config = cands[k].config
                 a.placement = committed

@@ -1,0 +1,792 @@
+"""Failure-domain-aware fleets: host lifecycle state, failover re-placement,
+anti-affinity spread, N+1 provisioning, eviction-grace interaction, failure
+scenarios through the loop, and controller checkpoint/restore — the chaos
+layer proving the fleet survives hosts dying mid-trace."""
+import numpy as np
+import pytest
+
+from repro.control import (
+    FAILURE_SCENARIOS,
+    GuardBands,
+    HoltWintersForecaster,
+    ModelStore,
+    make_failure_trace,
+)
+from repro.checkpoint import Checkpointer
+from repro.core import (
+    ContainerDim,
+    minimal_footprint,
+    oracle_models,
+    round_robin_configuration,
+)
+from repro.fleet import (
+    HOST_DRAINING,
+    HOST_FAILED,
+    HOST_UP,
+    Cluster,
+    FleetLoop,
+    FleetScheduler,
+    MachineClass,
+    QosTier,
+    TenantSpec,
+)
+from repro.streams import SimParams, SimulatorEvaluator, adanalytics, diamond, wordcount
+
+PARAMS = SimParams()
+DIM = ContainerDim(cpus=3.0, mem_mb=4096.0)
+
+
+def _tenant(name, qos=QosTier.STANDARD, target=40.0, dag=None, **kw):
+    dag = dag if dag is not None else wordcount()
+    return TenantSpec(
+        name=name, dag=dag, target_ktps=target, qos=qos,
+        models=oracle_models(dag, PARAMS.sm_cost_per_ktuple),
+        guards=GuardBands(headroom=1.2, deadband=0.15), preferred_dim=DIM,
+        **kw,
+    )
+
+
+def _cluster(hosts=8, cores=16.0, rack=""):
+    return Cluster(
+        [MachineClass("std", count=hosts, cores=cores, mem_mb=65536.0,
+                      rack=rack)]
+    )
+
+
+def _two_racks(per_rack=4, cores=8.0):
+    return Cluster([
+        MachineClass("std", count=per_rack, cores=cores, mem_mb=32768.0,
+                     rack="r1"),
+        MachineClass("alt", count=per_rack, cores=cores, mem_mb=32768.0,
+                     rack="r2"),
+    ])
+
+
+def _identical(a, b):
+    return (
+        a.tenant == b.tenant
+        and a.config == b.config
+        and (a.placement.host_names if a.placement else None)
+            == (b.placement.host_names if b.placement else None)
+        and a.planned_ktps == b.planned_ktps
+        and a.predicted_ktps == b.predicted_ktps
+        and a.cpus == b.cpus
+    )
+
+
+def _check_packing_invariants(cluster, plan, expect_spread=False):
+    """No container on a failed host, and per-host capacity accounting is
+    exact: the sum of placed dims never exceeds what the host physically
+    has.  With ``expect_spread`` (anti-affinity was requested), a placement
+    claiming ``spread_ok`` must actually span more than one host."""
+    failed = cluster.failed_hosts()
+    cap = {h.name: (h.cores, h.mem_mb) for h in cluster.inventory()}
+    used_cpu: dict = {}
+    used_mem: dict = {}
+    for a in plan.allocations:
+        if a.config is None or a.placement is None:
+            continue
+        for dim, hname in zip(a.config.dims, a.placement.host_names):
+            assert hname, f"unplaced container in admitted plan of {a.tenant}"
+            assert hname not in failed, (
+                f"{a.tenant} has a container on failed host {hname}"
+            )
+            used_cpu[hname] = used_cpu.get(hname, 0.0) + dim.cpus
+            used_mem[hname] = used_mem.get(hname, 0.0) + dim.mem_mb
+        if (expect_spread and a.placement.spread_ok
+                and len(a.placement.host_names) >= 2):
+            assert len(set(a.placement.host_names)) >= 2
+    for hname, c in used_cpu.items():
+        cores, mem = cap[hname]
+        assert c <= cores + 1e-9, f"{hname} cpu overcommitted: {c} > {cores}"
+        assert used_mem[hname] <= mem + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Host lifecycle + failure domains on the cluster
+# ---------------------------------------------------------------------------
+
+
+def test_host_lifecycle_transitions():
+    c = _cluster(hosts=3)
+    assert c.host_status("std/0") == HOST_UP
+    assert c.failed_hosts() == frozenset() and c.draining_hosts() == frozenset()
+    c.fail_host("std/0")
+    c.drain_host("std/1")
+    assert c.host_status("std/0") == HOST_FAILED
+    assert c.host_status("std/1") == HOST_DRAINING
+    assert c.failed_hosts() == frozenset({"std/0"})
+    assert c.draining_hosts() == frozenset({"std/1"})
+    c.recover_host("std/0")
+    c.recover_host("std/1")
+    assert c.failed_hosts() == frozenset() and c.draining_hosts() == frozenset()
+    with pytest.raises(KeyError):
+        c.fail_host("nope/0")
+
+
+def test_failed_host_leaves_inventory_and_capacity():
+    c = _cluster(hosts=4, cores=8.0)
+    base_hosts, base_cores = c.n_hosts, c.total_cores()
+    c.fail_host("std/2")
+    assert c.n_hosts == base_hosts - 1
+    assert c.total_cores() == base_cores - 8.0
+    names = [h.name for h in c.inventory()]
+    assert "std/2" not in names and len(names) == base_hosts - 1
+    # draining hosts stay visible (their residents still serve)
+    c.drain_host("std/1")
+    assert "std/1" in [h.name for h in c.inventory()]
+    assert c.n_hosts == base_hosts - 1
+
+
+def test_rack_labels_and_rack_failure():
+    c = _two_racks(per_rack=2)
+    assert c.rack_of("std/0") == "r1" and c.rack_of("alt/1") == "r2"
+    assert set(c.racks()) == {"r1", "r2"}
+    # unlabeled classes fall back to the class name as their own domain
+    d = _cluster(hosts=2)
+    assert d.rack_of("std/0") == "std"
+    c.fail_rack("r1")
+    assert c.failed_hosts() == frozenset({"std/0", "std/1"})
+    c.recover_rack("r1")
+    assert c.failed_hosts() == frozenset()
+    with pytest.raises(KeyError):
+        c.fail_rack("r9")
+
+
+def test_pack_refuses_failed_and_draining_hosts():
+    c = _cluster(hosts=3, cores=8.0)
+    c.drain_host("std/0")
+    hosts = c.inventory()
+    pl = Cluster.pack([DIM, DIM], hosts)
+    assert pl.feasible
+    assert "std/0" not in pl.host_names
+    # warm prefer pointing at the draining host is not honored either
+    hosts2 = c.inventory()
+    pl2 = Cluster.pack([DIM], hosts2, prefer=("std/0",))
+    assert pl2.feasible and pl2.host_names[0] != "std/0"
+
+
+def test_pack_spread_places_across_domains():
+    c = _two_racks(per_rack=2, cores=16.0)
+    hosts = c.inventory()
+    pl = Cluster.pack([DIM, DIM, DIM], hosts, spread="rack")
+    assert pl.feasible and pl.spread_ok
+    assert len({c.rack_of(h) for h in pl.host_names}) >= 2
+    hosts2 = _cluster(hosts=2).inventory()
+    pl2 = Cluster.pack([DIM, DIM], hosts2, spread="host")
+    assert pl2.feasible and pl2.spread_ok
+    assert len(set(pl2.host_names)) >= 2
+
+
+# ---------------------------------------------------------------------------
+# Scheduler failover: forced re-placement off dead hosts
+# ---------------------------------------------------------------------------
+
+
+def test_failover_replaces_containers_off_dead_host():
+    cluster = _cluster(hosts=6, cores=8.0)
+    sched = FleetScheduler(cluster)
+    demands = [(_tenant(f"t{i}", target=120.0), 120.0) for i in range(3)]
+    p1 = sched.schedule(demands)
+    p1 = sched.schedule(demands, previous=p1)      # settle
+    victim = p1.allocation("t0").placement.host_names[0]
+    cluster.fail_host(victim)
+    p2 = sched.schedule(demands, previous=p1)
+    assert p2.failover and all(h == victim for _t, h, _n in p2.failover)
+    lost = {t for t, _h, _n in p2.failover}
+    assert "t0" in lost
+    _check_packing_invariants(cluster, p2)
+    for a in p2.allocations:
+        assert a.admitted
+        assert victim not in a.placement.host_names
+
+
+def test_failed_hosts_argument_unions_with_cluster_state():
+    cluster = _cluster(hosts=6, cores=8.0)
+    sched = FleetScheduler(cluster)
+    demands = [(_tenant("t0", target=120.0), 120.0)]
+    p1 = sched.schedule(demands)
+    p1 = sched.schedule(demands, previous=p1)
+    victim = p1.allocation("t0").placement.host_names[0]
+    # the host is still "up" in the cluster; the caller reports it failed
+    p2 = sched.schedule(demands, previous=p1, failed_hosts={victim})
+    assert p2.failover
+    assert victim not in p2.allocation("t0").placement.host_names
+
+
+def test_failover_is_exempt_from_move_budget():
+    cluster = _cluster(hosts=6, cores=8.0)
+    sched = FleetScheduler(cluster, move_budget=0)
+    demands = [(_tenant("t0", target=120.0), 120.0)]
+    p1 = sched.schedule(demands)
+    p1 = sched.schedule(demands, previous=p1)
+    victim = p1.allocation("t0").placement.host_names[0]
+    cluster.fail_host(victim)
+    p2 = sched.schedule(demands, previous=p1)
+    a = p2.allocation("t0")
+    assert a.admitted and not a.deferred
+    assert victim not in a.placement.host_names
+    assert p2.failover
+
+
+def test_failover_never_displaces_higher_tiers_for_lower():
+    # each ~2-cpu container fills one 3-core host, so gold and best-effort
+    # land on disjoint hosts — killing the best-effort host must re-place
+    # the best-effort tenant onto the spare WITHOUT touching gold's plan
+    cluster = Cluster([MachineClass("std", count=3, cores=3.0,
+                                    mem_mb=16384.0)])
+    sched = FleetScheduler(cluster)
+    gold = _tenant("gold", qos=QosTier.GUARANTEED, target=300.0)
+    be = _tenant("be", qos=QosTier.BEST_EFFORT, target=300.0)
+    demands = [(gold, 300.0), (be, 300.0)]
+    p1 = sched.schedule(demands)
+    p1 = sched.schedule(demands, previous=p1)
+    gold_hosts = set(p1.allocation("gold").placement.host_names)
+    be_hosts = set(p1.allocation("be").placement.host_names)
+    assert gold_hosts.isdisjoint(be_hosts)
+    victim = sorted(be_hosts)[0]
+    cluster.fail_host(victim)
+    p2 = sched.schedule(demands, previous=p1)
+    assert _identical(p1.allocation("gold"), p2.allocation("gold"))
+    assert p2.allocation("gold").moves == 0
+    assert p2.failover == (("be", victim, 1),)
+    assert victim not in p2.allocation("be").placement.host_names
+    _check_packing_invariants(cluster, p2)
+
+
+def test_all_hosts_failed_raises():
+    cluster = _cluster(hosts=2)
+    cluster.fail_host("std/0")
+    cluster.fail_host("std/1")
+    sched = FleetScheduler(cluster)
+    with pytest.raises(ValueError):
+        sched.schedule([(_tenant("t0"), 40.0)])
+
+
+def test_no_failure_plans_identical_with_failure_knobs_present():
+    # rack labels on the machine classes and an explicitly empty
+    # failed_hosts set must not perturb a single byte of the plan
+    demands_of = {}
+    plans = []
+    for rack, failed in (("", None), ("r1", frozenset())):
+        cluster = _cluster(hosts=6, cores=8.0, rack=rack)
+        sched = FleetScheduler(cluster)
+        demands = [(_tenant(f"t{i}", target=80.0 + 11 * i), 80.0 + 11 * i)
+                   for i in range(4)]
+        p = sched.schedule(demands)
+        p = sched.schedule(demands, previous=p, failed_hosts=failed)
+        plans.append(p)
+    for a, b in zip(plans[0].allocations, plans[1].allocations):
+        assert _identical(a, b)
+    assert plans[0].touched == plans[1].touched
+    assert plans[0].failover == plans[1].failover == ()
+
+
+def test_replanning_deterministic_given_failure_schedule():
+    def run():
+        cluster = _cluster(hosts=6, cores=8.0)
+        sched = FleetScheduler(cluster)
+        demands = [(_tenant(f"t{i}", target=100.0), 100.0) for i in range(3)]
+        plan = sched.schedule(demands)
+        fps = []
+        for step, op, host in [(0, "fail", "std/0"), (1, "fail", "std/1"),
+                               (2, "recover", "std/0")]:
+            getattr(cluster, f"{op}_host")(host)
+            plan = sched.schedule(demands, previous=plan)
+            fps.append([
+                (a.tenant, a.placement.host_names if a.placement else None,
+                 a.planned_ktps, a.predicted_ktps, a.cpus)
+                for a in plan.allocations
+            ] + [plan.failover, plan.touched])
+        return fps
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# Anti-affinity spread + N+1 provisioning
+# ---------------------------------------------------------------------------
+
+
+def test_anti_affinity_spreads_guaranteed_across_racks():
+    cluster = _two_racks(per_rack=3, cores=8.0)
+    sched = FleetScheduler(cluster, anti_affinity=True)
+    gold = _tenant("gold", qos=QosTier.GUARANTEED, target=600.0)
+    p = sched.schedule([(gold, 600.0)])
+    a = p.allocation("gold")
+    assert a.admitted and len(a.config.dims) >= 2
+    assert a.placement.spread_ok
+    assert len({cluster.rack_of(h) for h in a.placement.host_names}) >= 2
+
+
+def test_anti_affinity_spreads_standard_across_hosts():
+    cluster = _cluster(hosts=4, cores=16.0)
+    sched = FleetScheduler(cluster, anti_affinity=True)
+    std = _tenant("std", qos=QosTier.STANDARD, target=600.0)
+    p = sched.schedule([(std, 600.0)])
+    a = p.allocation("std")
+    assert a.admitted and len(a.config.dims) >= 2
+    assert a.placement.spread_ok
+    assert len(set(a.placement.host_names)) >= 2
+
+
+def test_n1_provisions_survivable_allocation():
+    cluster = _two_racks(per_rack=3, cores=8.0)
+    sched = FleetScheduler(cluster, anti_affinity=True,
+                           n1_tiers=(QosTier.GUARANTEED,))
+    gold = _tenant("gold", qos=QosTier.GUARANTEED, target=120.0)
+    std = _tenant("std", qos=QosTier.STANDARD, target=120.0)
+    p = sched.schedule([(gold, 120.0), (std, 120.0)])
+    g, s = p.allocation("gold"), p.allocation("std")
+    assert g.n1_feasible is True
+    assert len(set(g.placement.host_names)) >= 2
+    assert s.n1_feasible is None                   # tier not in n1_tiers
+    # without the knob the flag stays unset entirely
+    p2 = FleetScheduler(_two_racks(per_rack=3, cores=8.0)).schedule(
+        [(_tenant("gold", qos=QosTier.GUARANTEED, target=120.0), 120.0)]
+    )
+    assert p2.allocation("gold").n1_feasible is None
+
+
+def test_n1_single_host_loss_keeps_guaranteed_sla_on_demo_cluster():
+    """The acceptance criterion: on the 3-tenant demo cluster a single
+    host failure costs the guaranteed tenant zero SLA-breach steps with
+    N+1 on, and its containers are re-placed within one replan round."""
+    ev = SimulatorEvaluator(params=PARAMS, duration_s=2.0, sticky_batch=True)
+    tenants = [
+        _tenant("ads", qos=QosTier.GUARANTEED, target=300.0,
+                dag=adanalytics()),
+        _tenant("clicks", qos=QosTier.STANDARD, target=150.0, dag=diamond()),
+        _tenant("wc", qos=QosTier.BEST_EFFORT, target=200.0),
+    ]
+    cluster = Cluster([
+        MachineClass("std", count=5, cores=4.0, mem_mb=16384.0, rack="r1"),
+        MachineClass("alt", count=5, cores=4.0, mem_mb=16384.0, rack="r2"),
+        MachineClass("big", count=1, cores=8.0, mem_mb=32768.0, speed=1.05,
+                     rack="r1"),
+    ])
+    loop = FleetLoop(tenants, cluster, ev, anti_affinity=True,
+                     n1_tiers=(QosTier.GUARANTEED,))
+    traces = {"ads": [260.0, 300.0, 300.0, 300.0],
+              "clicks": [120.0, 150.0, 150.0, 150.0],
+              "wc": [200.0, 260.0, 200.0, 200.0]}
+    loop.step({n: t[0] for n, t in traces.items()})
+    loop.step({n: t[1] for n, t in traces.items()})
+    assert loop.plan.allocation("ads").n1_feasible is True
+    victim = loop.plan.allocation("ads").placement.host_names[0]
+    e2 = loop.step({n: t[2] for n, t in traces.items()},
+                   failures=[("fail", victim)])
+    assert e2.cause == "failover" and e2.replanned
+    assert e2.tenant("ads").failover >= 1
+    # re-placed within the same replan round: the new plan is already clean
+    assert victim not in loop.plan.allocation("ads").placement.host_names
+    loop.step({n: t[3] for n, t in traces.items()})
+    breach_steps = [
+        e.step for e in loop.events for t in e.tenants
+        if t.tenant == "ads" and not t.sla_met
+    ]
+    assert breach_steps == []
+
+
+# ---------------------------------------------------------------------------
+# Eviction grace × failover
+# ---------------------------------------------------------------------------
+
+
+def _fragmented_prev(cluster, be, n_hosts=4):
+    from repro.fleet import FleetPlan, Placement, TenantAllocation
+
+    be_cfg = round_robin_configuration(be.dag, {"W": 1, "C": 1}, n_hosts, DIM)
+    return FleetPlan(
+        allocations=[TenantAllocation(
+            tenant=be.name, qos=be.qos, requested_ktps=400.0,
+            planned_ktps=400.0, config=be_cfg,
+            placement=Placement(
+                host_of=tuple(range(n_hosts)),
+                host_names=tuple(f"std/{i}" for i in range(n_hosts)),
+                min_speed=1.0,
+            ),
+            cpus=float(sum(d.cpus for d in be_cfg.dims)),
+            predicted_ktps=400.0, bottleneck=None,
+            shortfall_ktps=0.0, degraded=False,
+        )],
+        cores_total=cluster.total_cores(), cores_used=12.0,
+    )
+
+
+def test_grace_victim_on_failed_host_is_reclaimed_immediately():
+    """The eviction_grace × failover bug: a draining victim whose host
+    dies must NOT be handed back verbatim to "serve" its marked round on
+    a dead host — it replans immediately."""
+    cluster = Cluster([MachineClass("std", count=4, cores=4.0, mem_mb=16384.0)])
+    sched = FleetScheduler(cluster, eviction_grace=True)
+    gold = _tenant("gold", qos=QosTier.GUARANTEED, target=400.0)
+    be = _tenant("be", qos=QosTier.BEST_EFFORT, target=400.0)
+    prev = _fragmented_prev(cluster, be)
+    demands = [(gold, 400.0), (be, 400.0)]
+    p1 = sched.schedule(demands, previous=prev)
+    b1 = p1.allocation("be")
+    assert b1.draining and b1.admitted             # grace round armed
+    victim_host = b1.placement.host_names[0]
+    cluster.fail_host(victim_host)
+    p2 = sched.schedule(demands, previous=p1)
+    b2 = p2.allocation("be")
+    if b2.placement is not None:
+        assert victim_host not in b2.placement.host_names
+    # the dead-host containers are NOT still serving a marked round
+    assert b2.placement is None or b2.config != b1.config or not b2.draining
+    _check_packing_invariants(cluster, p2)
+
+
+def test_grace_survives_unrelated_host_failure():
+    cluster = Cluster([MachineClass("std", count=5, cores=4.0, mem_mb=16384.0)])
+    cluster.fail_host("std/4")                     # unrelated, holds nothing
+    sched = FleetScheduler(cluster, eviction_grace=True)
+    gold = _tenant("gold", qos=QosTier.GUARANTEED, target=400.0)
+    be = _tenant("be", qos=QosTier.BEST_EFFORT, target=400.0)
+    prev = _fragmented_prev(cluster, be)
+    p1 = sched.schedule([(gold, 400.0), (be, 400.0)], previous=prev)
+    b1 = p1.allocation("be")
+    # grace semantics intact: victim marked, keeps its full deployment
+    assert b1.draining and b1.admitted
+    assert b1.placement.host_names == prev.allocations[0].placement.host_names
+
+
+# ---------------------------------------------------------------------------
+# FleetLoop failure injection + scenario library
+# ---------------------------------------------------------------------------
+
+
+def test_loop_failure_step_semantics():
+    cluster = _cluster(hosts=6, cores=8.0)
+    tenants = [_tenant(f"t{i}", target=120.0) for i in range(2)]
+    loop = FleetLoop(tenants, cluster)
+    loop.step({"t0": 120.0, "t1": 120.0})
+    victim = loop.plan.allocation("t0").placement.host_names[0]
+    e = loop.step({"t0": 120.0, "t1": 120.0}, failures=[("fail", victim)])
+    assert e.replanned and e.cause == "failover"
+    assert victim in e.failed_hosts
+    assert any(t == "t0" for t, _h, _n in e.failover)
+    assert e.tenant("t0").failover >= 1
+    assert e.tenant("t0").cause == "failover"
+    # recovery clears the lifecycle snapshot
+    e2 = loop.step({"t0": 120.0, "t1": 120.0}, failures=[("recover", victim)])
+    assert e2.failed_hosts == ()
+
+
+def test_loop_rejects_unknown_failure_kind():
+    loop = FleetLoop([_tenant("t0")], _cluster(hosts=2))
+    with pytest.raises(ValueError):
+        loop.step({"t0": 40.0}, failures=[("explode", "std/0")])
+
+
+def test_loop_run_failures_flat_and_mapping_agree():
+    def run(failures):
+        cluster = _cluster(hosts=4, cores=8.0)
+        loop = FleetLoop([_tenant("t0", target=100.0)], cluster)
+        evs = loop.run({"t0": [100.0, 100.0, 100.0, 100.0]},
+                       failures=failures)
+        return [
+            (e.replanned, e.cause, e.failed_hosts, e.failover,
+             e.tenant("t0").achieved_ktps)
+            for e in evs
+        ]
+    flat = run([(1, "fail", "std/0"), (3, "recover", "std/0")])
+    mapped = run({1: [("fail", "std/0")], 3: [("recover", "std/0")]})
+    assert flat == mapped
+    assert flat[1][1] == "failover"
+
+
+def test_loop_no_failure_trace_identical_to_plain_loop():
+    def run(**kw):
+        cluster = _cluster(hosts=4, cores=8.0, **kw)
+        loop = FleetLoop([_tenant("t0", target=100.0),
+                          _tenant("t1", target=80.0)], cluster)
+        evs = loop.run({"t0": [100.0, 130.0, 90.0], "t1": [80.0, 80.0, 95.0]})
+        return [
+            (e.replanned, e.cause, e.moves, e.failed_hosts, e.failover)
+            + tuple((t.tenant, t.achieved_ktps, t.cpus, t.failover)
+                    for t in e.tenants)
+            for e in evs
+        ]
+    assert run() == run(rack="r1")                 # rack labels are inert
+
+
+def test_flapping_host_never_keeps_containers_while_down():
+    cluster = _cluster(hosts=4, cores=8.0)
+    tenants = [_tenant(f"t{i}", target=110.0) for i in range(2)]
+    loop = FleetLoop(tenants, cluster)
+    events = make_failure_trace("flapping", 8, host="std/0", period=2,
+                                start=2)
+    by_step = {}
+    for s, kind, target in events:
+        by_step.setdefault(s, []).append((kind, target))
+    for i in range(8):
+        loop.step({"t0": 110.0, "t1": 110.0}, failures=by_step.get(i))
+        if "std/0" in loop.cluster.failed_hosts():
+            _check_packing_invariants(cluster, loop.plan)
+            for a in loop.plan.allocations:
+                assert "std/0" not in a.placement.host_names
+
+
+def test_rack_failure_with_rack_spread_keeps_survivors():
+    cluster = _two_racks(per_rack=3, cores=8.0)
+    gold = _tenant("gold", qos=QosTier.GUARANTEED, target=200.0)
+    loop = FleetLoop([gold], cluster, anti_affinity=True,
+                     n1_tiers=(QosTier.GUARANTEED,))
+    loop.step({"gold": 200.0})
+    before = loop.plan.allocation("gold").placement.host_names
+    assert len({cluster.rack_of(h) for h in before}) == 2
+    events = make_failure_trace("rack", 4, rack="r1", fail_at=1)
+    e = loop.step({"gold": 200.0},
+                  failures=[(k, t) for _s, k, t in events])
+    # rack spread guaranteed at least one survivor outside the dead rack
+    assert e.tenant("gold").failover < len(before)
+    assert e.tenant("gold").achieved_ktps > 0.0
+    after = loop.plan.allocation("gold").placement.host_names
+    assert all(cluster.rack_of(h) == "r2" for h in after)
+    _check_packing_invariants(cluster, loop.plan)
+
+
+def test_failure_scenario_generators():
+    assert set(FAILURE_SCENARIOS) == {"single_host", "rack", "flapping"}
+    ev = make_failure_trace("single_host", 12, host="std/3")
+    assert ev == ((4, "fail", "std/3"),)
+    ev = make_failure_trace("single_host", 12, host="std/3", fail_at=2,
+                            recover_after=5)
+    assert ev == ((2, "fail", "std/3"), (7, "recover", "std/3"))
+    ev = make_failure_trace("rack", 9, rack="r1", recover_after=4)
+    assert ev == ((3, "fail-rack", "r1"), (7, "recover-rack", "r1"))
+    flap = make_failure_trace("flapping", 10, host="h", period=3, start=2)
+    assert flap == ((2, "fail", "h"), (5, "recover", "h"), (8, "fail", "h"))
+    with pytest.raises(KeyError):
+        make_failure_trace("meteor", 10)
+    with pytest.raises(ValueError):
+        make_failure_trace("single_host", 4, host="h", fail_at=9)
+    with pytest.raises(ValueError):
+        make_failure_trace("flapping", 4, host="h", period=0)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-tripping: ModelStore + forecasters
+# ---------------------------------------------------------------------------
+
+
+def _trees_equal(a, b):
+    if isinstance(a, dict) or isinstance(b, dict):
+        return (isinstance(a, dict) and isinstance(b, dict)
+                and set(a) == set(b) and all(_trees_equal(a[k], b[k]) for k in a))
+    xa, ya = np.asarray(a), np.asarray(b)
+    return xa.shape == ya.shape and bool((xa == ya).all())
+
+
+def test_modelstore_state_roundtrips_bit_for_bit(tmp_path):
+    dag = wordcount()
+    store = ModelStore(oracle_models(dag, PARAMS.sm_cost_per_ktuple))
+    cfg = round_robin_configuration(dag, {"W": 2, "C": 1}, 2, DIM)
+    store.observe(cfg, 123.456)
+    store.observe(cfg, 119.25)
+    assert store.version == 2
+    ck = Checkpointer(str(tmp_path))
+    ck.save(0, store.state_dict(), blocking=True)
+    _step, tree = ck.restore_latest()
+    other = ModelStore(oracle_models(dag, PARAMS.sm_cost_per_ktuple))
+    other.load_state_dict(tree)
+    assert other.version == 2
+    assert _trees_equal(store.state_dict(), other.state_dict())
+    assert other.overprovision_factor == store.overprovision_factor
+    # the restored version is the SAME cache-invalidation token: one more
+    # observation advances both identically
+    store.observe(cfg, 120.0)
+    other.observe(cfg, 120.0)
+    assert store.version == other.version == 3
+
+
+def test_modelstore_rejects_separator_in_node_names():
+    dag = wordcount()
+    models = oracle_models(dag, PARAMS.sm_cost_per_ktuple)
+    bad = {f"x/{k}": v for k, v in models.items()}
+    with pytest.raises(ValueError):
+        ModelStore(bad).state_dict()
+
+
+def test_holt_winters_roundtrips_bit_for_bit(tmp_path):
+    fc = HoltWintersForecaster(season=4)
+    for x in [100.0, 120.0, 90.0, 110.0, 105.0, 126.0, 94.0, 116.0]:
+        fc.observe(x)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(0, fc.state_dict(), blocking=True)
+    _step, tree = ck.restore_latest()
+    fresh = HoltWintersForecaster(season=4)
+    fresh.load_state_dict(tree)
+    assert np.array_equal(
+        np.asarray(fc.forecast(6)), np.asarray(fresh.forecast(6))
+    )
+    # continued observation stays in lockstep (identical internal state)
+    fc.observe(108.0)
+    fresh.observe(108.0)
+    assert np.array_equal(
+        np.asarray(fc.forecast(3)), np.asarray(fresh.forecast(3))
+    )
+    with pytest.raises(ValueError):
+        HoltWintersForecaster(season=7).load_state_dict(tree)
+
+
+def test_loop_checkpoint_restore_resumes_warm(tmp_path):
+    def build():
+        dag = wordcount()
+        spec = TenantSpec(
+            name="a", dag=dag, target_ktps=120.0, qos=QosTier.GUARANTEED,
+            models=ModelStore(oracle_models(dag, PARAMS.sm_cost_per_ktuple)),
+            guards=GuardBands(headroom=1.2, deadband=0.15),
+            preferred_dim=DIM, forecaster=HoltWintersForecaster(season=3),
+            horizon=2,
+        )
+        return FleetLoop([spec], _cluster(hosts=4, cores=8.0))
+    loop = build()
+    loop.run({"a": [100.0, 120.0, 140.0, 130.0]})
+    ck = Checkpointer(str(tmp_path))
+    assert loop.checkpoint(ck) == 4
+    restored = build()
+    assert restored.restore(ck) == 4
+    assert restored._last_target == loop._last_target
+    assert restored._breached == loop._breached
+    assert _trees_equal(
+        loop.tenants[0].models.state_dict(),
+        restored.tenants[0].models.state_dict(),
+    )
+    assert np.array_equal(
+        np.asarray(loop.tenants[0].forecaster.forecast(4)),
+        np.asarray(restored.tenants[0].forecaster.forecast(4)),
+    )
+    # an empty directory restores nothing
+    assert build().restore(Checkpointer(str(tmp_path / "empty"))) is None
+
+
+# ---------------------------------------------------------------------------
+# Property suite: random failure churn never violates packing invariants
+# ---------------------------------------------------------------------------
+
+
+def _churn_case(ops, qos):
+    """One random fail/recover churn sequence: every replan along the way
+    must satisfy the packing invariants."""
+    cluster = _cluster(hosts=6, cores=16.0)
+    sched = FleetScheduler(cluster, anti_affinity=True,
+                           n1_tiers=(QosTier.GUARANTEED,))
+    demands = [
+        (_tenant(f"t{i}", qos=qos[i], target=60.0 + 15 * i), 60.0 + 15 * i)
+        for i in range(4)
+    ]
+    plan = sched.schedule(demands)
+    _check_packing_invariants(cluster, plan, expect_spread=True)
+    for kind, hi in ops:
+        name = f"std/{hi}"
+        if kind == "fail":
+            if len(cluster.failed_hosts()) >= 5:
+                continue                           # keep one host alive
+            cluster.fail_host(name)
+        else:
+            if name not in cluster.failed_hosts():
+                continue
+            cluster.recover_host(name)
+        plan = sched.schedule(demands, previous=plan)
+        _check_packing_invariants(cluster, plan, expect_spread=True)
+
+
+def _determinism_case(schedule):
+    """One random failure schedule, replayed twice through fresh loops:
+    plans, causes and failover logs must be identical."""
+    by_step: dict = {}
+    for step, hi in schedule:
+        by_step.setdefault(step, []).append(("fail", f"std/{hi}"))
+
+    def run():
+        cluster = _cluster(hosts=6, cores=8.0)
+        loop = FleetLoop(
+            [_tenant("t0", target=100.0), _tenant("t1", target=70.0)],
+            cluster, anti_affinity=True,
+        )
+        out = []
+        for i in range(4):
+            evs = [
+                (k, t) for k, t in by_step.get(i, [])
+                if t not in cluster.failed_hosts()
+                and len(cluster.failed_hosts()) < 5
+            ]
+            e = loop.step({"t0": 100.0, "t1": 70.0}, failures=evs)
+            out.append((
+                e.replanned, e.cause, e.failed_hosts, e.failover,
+                tuple(
+                    (a.tenant,
+                     a.placement.host_names if a.placement else None,
+                     a.predicted_ktps)
+                    for a in loop.plan.allocations
+                ),
+            ))
+        return out
+
+    assert run() == run()
+
+
+def test_property_random_fail_recover_keeps_invariants():
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        # hypothesis is optional in this environment: fall back to seeded
+        # random churn so the chaos property still executes (and stays
+        # reproducible) instead of skipping
+        rng = np.random.default_rng(0)
+        for _ in range(8):
+            ops = [
+                ("fail" if rng.random() < 0.6 else "recover",
+                 int(rng.integers(0, 6)))
+                for _ in range(int(rng.integers(1, 11)))
+            ]
+            qos = [
+                list(QosTier)[int(rng.integers(0, len(QosTier)))]
+                for _ in range(4)
+            ]
+            _churn_case(ops, qos)
+        return
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        ops=st.lists(
+            st.tuples(st.sampled_from(["fail", "recover"]),
+                      st.integers(min_value=0, max_value=5)),
+            min_size=1, max_size=10,
+        ),
+        qos=st.lists(st.sampled_from(list(QosTier)), min_size=4, max_size=4),
+    )
+    def check(ops, qos):
+        _churn_case(ops, qos)
+
+    check()
+
+
+def test_property_failure_schedule_is_deterministic():
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        rng = np.random.default_rng(1)
+        for _ in range(8):
+            n = int(rng.integers(0, 5))
+            schedule = [
+                (int(rng.integers(0, 4)), int(rng.integers(0, 5)))
+                for _ in range(n)
+            ]
+            _determinism_case(schedule)
+        return
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        schedule=st.lists(
+            st.tuples(st.integers(min_value=0, max_value=3),
+                      st.integers(min_value=0, max_value=4)),
+            min_size=0, max_size=4, unique=True,
+        ),
+    )
+    def check(schedule):
+        _determinism_case(schedule)
+
+    check()
